@@ -1,0 +1,70 @@
+"""Shared benchmark setup mirroring the paper's Sec. VI-A methodology.
+
+Default sizes are scaled for a 1-core CI box; pass --full for the paper's
+8001/33509 (SIoT) and 3912/4677 (Yelp) scales.  R defaults to 3 (the paper's
+own default); fleet is the Table-II A/B/C mix in equal proportion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core import CostModel, workload_for
+from repro.core.baselines import greedy_layout, random_layout
+from repro.core.glad_s import glad_s
+from repro.graphs import build_edge_network, synthetic_siot, synthetic_yelp
+
+FULL_SIZES = {"siot": (8001, 33509, 52), "yelp": (3912, 4677, 100)}
+CI_SIZES = {"siot": (1600, 6700, 52), "yelp": (1000, 1200, 100)}
+
+
+def dataset(name: str, full: bool = False):
+    n, e, d = (FULL_SIZES if full else CI_SIZES)[name]
+    if name == "siot":
+        return synthetic_siot(n=n, target_links=e, feat_dim=d)
+    return synthetic_yelp(n=n, target_links=e, feat_dim=d)
+
+
+def fleet(graph, servers: int, seed: int = 0):
+    return build_edge_network(graph, servers, seed=seed)
+
+
+def cost_model(graph, net, model: str, name: str):
+    in_dim = 52 if name == "siot" else 100
+    return CostModel(net, graph, workload_for(model, in_dim))
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def run_layouts(cm, seeds=(0, 1, 2), R=None):
+    """Random / Greedy / GLAD-S triple, averaged over seeds (paper: 20).
+    R=None -> the exhaustive |D|(|D|-1)/2 setting of Sec. IV-B (the quality
+    configuration behind Fig. 8/9); the online benches use R=3."""
+    rand = float(np.mean([cm.total(random_layout(cm, seed=s)) for s in seeds]))
+    greedy = cm.total(greedy_layout(cm))
+    glad_costs = []
+    wall = 0.0
+    for s in seeds:
+        res = glad_s(cm, R=R, seed=s)
+        glad_costs.append(res.cost)
+        wall += res.wall_time_s
+    return {
+        "random": rand,
+        "greedy": float(greedy),
+        "glad": float(np.mean(glad_costs)),
+        "glad_wall_s": wall / len(seeds),
+    }
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 14/15: GLAD-S cost after every iteration (GraphSAGE over SIoT and
+Yelp), varying the number of edge servers.  Demonstrates the exponential-
+looking descent + marginal-decrement effect (submodularity)."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, dataset, emit, fleet
+from repro.core.glad_s import glad_s
+
+
+def run(full: bool = False, server_counts=(20, 40, 60), max_points=24):
+    rows = []
+    for ds in ("siot", "yelp"):
+        g = dataset(ds, full)
+        for m in server_counts:
+            net = fleet(g, m)
+            cm = cost_model(g, net, "sage", ds)
+            res = glad_s(cm, R=3, seed=0)
+            hist = res.history
+            stride = max(1, len(hist) // max_points)
+            for it in range(0, len(hist), stride):
+                rows.append([ds, m, it, round(hist[it], 3)])
+            rows.append([ds, m, len(hist) - 1, round(hist[-1], 3)])
+    return emit(rows, ["dataset", "servers", "iteration", "cost"])
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

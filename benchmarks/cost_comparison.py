@@ -1,0 +1,29 @@
+"""Fig. 8/9: total system cost of Random / Greedy / GLAD-S for
+GCN / GAT / GraphSAGE over SIoT and Yelp (60 heterogeneous servers).
+
+Paper claim: >= 94-95.8% cost reduction vs the worst baseline."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, dataset, emit, fleet
+
+
+def run(full: bool = False, servers: int = 60):
+    rows = []
+    for ds in ("siot", "yelp"):
+        g = dataset(ds, full)
+        net = fleet(g, servers)
+        for model in ("gcn", "gat", "sage"):
+            cm = cost_model(g, net, model, ds)
+            r = __import__("benchmarks.common", fromlist=["run_layouts"]) \
+                .run_layouts(cm)
+            reduction = 1.0 - r["glad"] / r["random"]
+            rows.append([ds, model, round(r["random"], 2),
+                         round(r["greedy"], 2), round(r["glad"], 2),
+                         f"{reduction:.3f}", round(r["glad_wall_s"], 2)])
+    return emit(rows, ["dataset", "model", "cost_random", "cost_greedy",
+                       "cost_glad", "reduction_vs_random", "glad_wall_s"])
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

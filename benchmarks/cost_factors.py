@@ -1,0 +1,37 @@
+"""Fig. 10-13: the four cost factors (C_U, C_P, C_T, C_M) of GAT over Yelp
+with a varying number of edge servers, normalized to Random@10's C_U."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cost_model, dataset, emit, fleet
+from repro.core.baselines import greedy_layout, random_layout
+from repro.core.glad_s import glad_s
+
+
+def run(full: bool = False, server_counts=(10, 20, 30, 40, 50, 60)):
+    g = dataset("yelp", full)
+    rows = []
+    norm = None
+    for m in server_counts:
+        net = fleet(g, m)
+        cm = cost_model(g, net, "gat", "yelp")
+        layouts = {
+            "random": random_layout(cm, seed=0),
+            "greedy": greedy_layout(cm),
+            "glad": glad_s(cm, R=3, seed=0).assign,
+        }
+        for name, assign in layouts.items():
+            f = cm.factors(assign)
+            if norm is None:
+                norm = f["C_U"] if name == "random" else None
+            if norm is None:
+                norm = 1.0
+            rows.append([m, name] + [round(f[k] / norm, 4)
+                                     for k in ("C_U", "C_P", "C_T", "C_M")])
+    return emit(rows, ["servers", "layout", "C_U", "C_P", "C_T", "C_M"])
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

@@ -1,0 +1,40 @@
+"""Fig. 17/18: scheduling overhead of GLAD-S vs GLAD-E under varying link
+insertion percentages (SIoT and Yelp).  GLAD-E should be ~an order cheaper."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cost_model, dataset, emit, fleet, timed
+from repro.core import CostModel, workload_for
+from repro.core.evolution import sample_delta, apply_delta
+from repro.core.glad_e import glad_e
+from repro.core.glad_s import glad_s
+
+
+def run(full: bool = False, servers: int = 10,
+        pcts=(0.01, 0.02, 0.04, 0.08, 0.16)):
+    rows = []
+    for ds in ("siot", "yelp"):
+        g = dataset(ds, full)
+        net = fleet(g, servers)
+        in_dim = 52 if ds == "siot" else 100
+        gnn = workload_for("gat", in_dim)
+        cm = CostModel(net, g, gnn)
+        base = glad_s(cm, R=3, seed=0)
+        for pct in pcts:
+            delta = sample_delta(g, pct_links=pct, seed=int(pct * 1000))
+            # Only insertions stress the scheduler (paper Sec. VI-E).
+            delta.del_edges = delta.del_edges[:0]
+            g1 = apply_delta(g, delta)
+            cm1 = CostModel(net, g1, gnn)
+            res_s, t_s = timed(glad_s, cm1, R=3, seed=1)
+            res_e, t_e = timed(glad_e, cm1, g, base.assign, seed=1)
+            rows.append([ds, pct, round(t_s, 3), round(t_e, 3),
+                         round(res_s.cost, 2), round(res_e.cost, 2)])
+    return emit(rows, ["dataset", "pct_inserted", "glad_s_time_s",
+                       "glad_e_time_s", "glad_s_cost", "glad_e_cost"])
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

@@ -1,0 +1,67 @@
+"""Deliverable (g) reader: render the dry-run artifacts into the roofline
+table (EXPERIMENTS.md §Roofline source of truth)."""
+from __future__ import annotations
+
+import json
+import os
+
+HBM_PER_CHIP = 16 * 2**30      # v5e
+
+
+def load(outdir="benchmarks/artifacts", mesh="pod16x16"):
+    d = os.path.join(outdir, mesh)
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def table(outdir="benchmarks/artifacts", mesh="pod16x16", markdown=False):
+    rows = []
+    for r in load(outdir, mesh):
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], r["status"],
+                         r.get("reason", r.get("error", ""))[:60],
+                         "", "", "", "", "", ""])
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["peak_estimate_bytes"]
+        fits = "Y" if mem <= HBM_PER_CHIP else "OVER"
+        rows.append([
+            r["arch"], r["shape"], "ok", fits,
+            f"{rf['compute_s']:.2e}", f"{rf['memory_s']:.2e}",
+            f"{rf['collective_s']:.2e}", rf["bottleneck"],
+            f"{rf['useful_ratio']:.3f}",
+            f"{mem/2**30:.2f}",
+        ])
+    header = ["arch", "shape", "status", "fits16G", "compute_s", "memory_s",
+              "collective_s", "bottleneck", "useful", "peak_GiB/dev"]
+    if markdown:
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+        for r in rows:
+            print("| " + " | ".join(str(x) for x in r) + " |")
+    else:
+        print(",".join(header))
+        for r in rows:
+            print(",".join(str(x) for x in r))
+    return rows
+
+
+def run(full: bool = False):
+    print("# mesh pod16x16 (exact probe-corrected terms — the §Roofline table)")
+    table(mesh="pod16x16")
+    print("# mesh pod2x16x16 (compile-proof sweep; cost columns UNCORRECTED "
+          "for scan trip counts — see EXPERIMENTS.md §Roofline note 1)")
+    table(mesh="pod2x16x16")
+    return []
+
+
+if __name__ == "__main__":
+    import sys
+    table(mesh=sys.argv[1] if len(sys.argv) > 1 else "pod16x16",
+          markdown="--md" in sys.argv)

@@ -1,0 +1,42 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (adaptability, convergence, cost_comparison,
+                        cost_factors, kernel_density, overhead,
+                        roofline_table, sensitivity)
+
+SECTIONS = [
+    ("cost_comparison  (Fig. 8/9)", cost_comparison.run),
+    ("cost_factors     (Fig. 10-13)", cost_factors.run),
+    ("convergence      (Fig. 14/15)", convergence.run),
+    ("adaptability     (Fig. 16)", adaptability.run),
+    ("overhead         (Fig. 17/18)", overhead.run),
+    ("sensitivity      (Fig. 19/20)", sensitivity.run),
+    ("kernel_density   (ablation: layout -> MXU)", kernel_density.run),
+    ("roofline_table   (deliverable g)", roofline_table.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale graphs (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    for name, fn in SECTIONS:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        fn(full=args.full)
+        print(f"# section wall time: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig. 19/20: sensitivity of R (GLAD-S convergence patience) and theta
+(GLAD-A SLA) — converged cost + iterations vs R; average cost + GLAD-S
+invocations vs theta."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cost_model, dataset, emit, fleet
+from repro.core import CostModel, workload_for
+from repro.core.evolution import apply_delta, evolution_trace
+from repro.core.glad_a import GladA
+from repro.core.glad_s import glad_s
+
+
+def run_r(full: bool = False, servers: int = 60,
+          Rs=(1, 2, 3, 6, 12, 24, 48)):
+    rows = []
+    for ds in ("siot", "yelp"):
+        g = dataset(ds, full)
+        net = fleet(g, servers)
+        cm = cost_model(g, net, "gat", ds)
+        for R in Rs:
+            res = glad_s(cm, R=R, seed=0)
+            rows.append([ds, R, round(res.cost, 2), res.iterations])
+    return emit(rows, ["dataset", "R", "converged_cost", "iterations"])
+
+
+def run_theta(full: bool = False, servers: int = 10, slots: int = 30,
+              thetas=(0.1, 1.0, 10.0, 60.0)):
+    rows = []
+    for ds in ("siot", "yelp"):
+        g0 = dataset(ds, full)
+        net = fleet(g0, servers)
+        in_dim = 52 if ds == "siot" else 100
+        gnn = workload_for("gat", in_dim)
+        trace = evolution_trace(g0, slots, pct_links=0.01, seed=7)
+        for theta in thetas:
+            sched = GladA(net, gnn, g0, theta=theta, R=3, seed=0)
+            cur = g0
+            costs = []
+            for delta in trace:
+                cur = apply_delta(cur, delta)
+                costs.append(sched.step(cur).cost)
+            n_s = sum(1 for r in sched.records[1:] if r.algorithm == "glad-s")
+            rows.append([ds, theta, round(float(np.mean(costs)), 2), n_s])
+    return emit(rows, ["dataset", "theta", "avg_cost", "glad_s_invocations"])
+
+
+def run(full: bool = False):
+    run_r(full)
+    return run_theta(full)
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

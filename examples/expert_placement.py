@@ -1,0 +1,59 @@
+"""GLAD beyond the paper: MoE expert placement as a graph-layout problem.
+
+Experts = vertices (weighted by routed-token load), co-activation = links
+(tokens routed to both experts pay cross-slice traffic when separated),
+mesh slices = servers.  GLAD-S minimizes exactly the paper's C_P + C_T —
+here that means balanced expert load with co-activated experts co-located.
+
+  PYTHONPATH=src python examples/expert_placement.py
+"""
+import numpy as np
+
+from repro.core.partition import coactivation_graph, expert_layout
+
+
+def synth_routing(E=64, groups=8, tokens=200_000, seed=0):
+    """Co-routing histogram with planted expert communities (tokens prefer
+    experts in the same latent group — the structure GLAD should discover)."""
+    rng = np.random.default_rng(seed)
+    counts = np.zeros((E, E))
+    per = E // groups
+    for _ in range(tokens // 100):
+        gidx = rng.integers(0, groups)
+        pool = np.arange(gidx * per, (gidx + 1) * per)
+        # top-6-of-group with a little leakage
+        k = rng.choice(pool, size=4, replace=False)
+        if rng.uniform() < 0.2:
+            k[-1] = rng.integers(0, E)
+        for a in k:
+            counts[a, a] += 100 / 4
+            for b in k:
+                if a < b:
+                    counts[a, b] += 100 / 12
+                    counts[b, a] += 100 / 12
+    return counts
+
+
+def main():
+    print("== MoE expert layout via GLAD (deepseek-moe geometry) ==")
+    counts = synth_routing()
+    part = expert_layout(counts, num_slices=8, pods=2, seed=0)
+    g = coactivation_graph(counts)
+    rng = np.random.default_rng(0)
+    rand_assign = rng.integers(0, 8, size=64)
+    rand_cut_w = sum(counts[u, v] for u, v in g.edges
+                     if rand_assign[u] != rand_assign[v])
+    glad_cut_w = sum(counts[u, v] for u, v in g.edges
+                     if part.assign[u] != part.assign[v])
+    load = counts.diagonal()
+    glad_load = np.array([load[part.assign == s].sum() for s in range(8)])
+    rand_load = np.array([load[rand_assign == s].sum() for s in range(8)])
+    print(f"cross-slice co-activation weight: random={rand_cut_w:.0f} "
+          f"GLAD={glad_cut_w:.0f} ({1 - glad_cut_w / max(rand_cut_w, 1):.1%} less all-to-all)")
+    print(f"load imbalance (max/mean): random={rand_load.max()/rand_load.mean():.2f} "
+          f"GLAD={glad_load.max()/glad_load.mean():.2f}")
+    print("per-slice experts:", np.bincount(part.assign, minlength=8))
+
+
+if __name__ == "__main__":
+    main()

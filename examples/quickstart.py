@@ -1,0 +1,53 @@
+"""Quickstart: cost-optimized graph layout for distributed GNN processing.
+
+Builds a Yelp-like data graph + a heterogeneous 8-server edge fleet,
+compares Random / Greedy / GLAD-S layouts, then actually RUNS the
+distributed GNN under the optimized layout and verifies numerics.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CostModel, glad_s, greedy_layout, random_layout,
+                        workload_for)
+from repro.core.partition import partition_from_assign
+from repro.gnn import (GNNConfig, compile_plan, directed_edges, forward,
+                       init_params, simulate_bsp_forward)
+from repro.graphs import build_edge_network, synthetic_yelp
+
+
+def main():
+    print("== GLAD quickstart ==")
+    g = synthetic_yelp(n=600, target_links=800)
+    net = build_edge_network(g, 8, seed=0)
+    cm = CostModel(net, g, workload_for("gcn", 100))
+
+    rand = random_layout(cm, seed=0)
+    greedy = greedy_layout(cm)
+    res = glad_s(cm, seed=0)
+    print(f"cost: random={cm.total(rand):9.1f}  greedy={cm.total(greedy):9.1f}"
+          f"  GLAD-S={res.cost:9.1f}  "
+          f"({1 - res.cost / cm.total(rand):.1%} cheaper than random, "
+          f"{res.iterations} iterations, {res.wall_time_s:.2f}s)")
+    print("factors:", {k: round(v, 1) for k, v in res.factors.items()})
+
+    # Execute the distributed GNN under both layouts; numerics must agree.
+    cfg = GNNConfig("gcn", (100, 16, 2))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ref = np.asarray(forward(cfg, params, jnp.asarray(g.features),
+                             jnp.asarray(directed_edges(g.edges))))
+    for name, assign in (("random", rand), ("GLAD-S", res.assign)):
+        part = partition_from_assign(g, assign, net.m, cm.factors(assign))
+        plan = compile_plan(g, part)
+        out = simulate_bsp_forward(cfg, params, plan, g.features)
+        err = float(np.abs(out - ref).max())
+        print(f"{name:8s}: cut_links={part.cut_links:5d} "
+              f"halo_rows_exchanged={plan.halo_bytes_ppermute:6d} "
+              f"ppermute_rounds={len(plan.rounds):3d}  max_err={err:.2e}")
+    print("the GLAD layout moves fewer halo rows for identical outputs.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.configs.registry import (
+    ARCHS, all_cells, applicable_shapes, get_config, get_smoke_config,
+    input_specs, skip_reason,
+)
+
+__all__ = [
+    "ARCHS", "all_cells", "applicable_shapes", "get_config",
+    "get_smoke_config", "input_specs", "skip_reason",
+]

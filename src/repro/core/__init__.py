@@ -1,0 +1,22 @@
+from repro.core.cost import CostModel, GNNWorkload, workload_for
+from repro.core.glad_s import GladResult, glad_s, solve_pair
+from repro.core.glad_e import glad_e
+from repro.core.glad_a import GladA, drift_bound
+from repro.core.baselines import greedy_layout, random_layout, uploading_first_layout
+from repro.core.evolution import (
+    GraphDelta, apply_delta, changed_vertices, evolution_trace, sample_delta,
+)
+from repro.core.partition import (
+    DevicePartition, data_partition, expert_layout, partition_from_assign,
+    rebalance,
+)
+
+__all__ = [
+    "CostModel", "GNNWorkload", "workload_for",
+    "GladResult", "glad_s", "solve_pair", "glad_e", "GladA", "drift_bound",
+    "greedy_layout", "random_layout", "uploading_first_layout",
+    "GraphDelta", "apply_delta", "changed_vertices", "evolution_trace",
+    "sample_delta",
+    "DevicePartition", "data_partition", "expert_layout",
+    "partition_from_assign", "rebalance",
+]

@@ -1,0 +1,179 @@
+"""The DGPE cost model (paper Sec. III-B, Eq. (4)-(9)).
+
+All evaluation is vectorized numpy over an assignment vector
+``assign[v] in [0, m)`` (the dense encoding of the binary layout x_vi).
+
+    C   = C_U + C_P + C_T + C_M                                   (Eq. 9)
+    C_U = sum_i sum_v  mu[v,i] x_vi                               (Eq. 4)
+    C_P = sum_i sum_v  C_P(v,i) x_vi                              (Eq. 6)
+          C_P(v,i) = sum_k alpha_i |N_v| s_{k-1}
+                     + beta_i s_{k-1} s_k + gamma_i s_k           (Eq. 5)
+    C_T = sum_ij sum_uv tau[i,j] e_uv w_ij x_vi x_uj              (Eq. 7)
+    C_M = sum_i ( sum_v rho_i x_vi + eps_i )                      (Eq. 8)
+
+The decomposition C = C0 + C1 + C2 (Thm 2: constant / linear / quadratic
+pseudo-boolean terms) is exposed as ``unary`` (C1 coefficient matrix) and the
+edge-wise quadratic evaluation — GLAD's auxiliary graphs are built directly
+from these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.graphs.datagraph import DataGraph
+from repro.graphs.edgenet import EdgeNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNWorkload:
+    """Feature-dim schedule of the served GNN: s = [s_0, .., s_K] (Sec. II-A).
+
+    ``agg_ops / upd_ops / act_ops`` let different models (GCN/GAT/SAGE) scale
+    the three Eq.-(5) terms: e.g. GAT's attention adds per-link work (folded
+    into the aggregation coefficient), SAGE's concat doubles the update GEMM.
+    """
+
+    layer_dims: Sequence[int]          # [s_0, s_1, ..., s_K]
+    agg_scale: float = 1.0
+    upd_scale: float = 1.0
+    act_scale: float = 1.0
+    name: str = "gcn"
+
+    @property
+    def agg_units(self) -> float:
+        # sum_k s_{k-1}: per-neighbor vector-add elements across layers.
+        return self.agg_scale * float(sum(self.layer_dims[:-1]))
+
+    @property
+    def upd_units(self) -> float:
+        # sum_k s_{k-1} * s_k: matvec MACs across layers.
+        return self.upd_scale * float(
+            sum(a * b for a, b in zip(self.layer_dims[:-1], self.layer_dims[1:]))
+        )
+
+    @property
+    def act_units(self) -> float:
+        # sum_k s_k: activation elements across layers.
+        return self.act_scale * float(sum(self.layer_dims[1:]))
+
+
+def workload_for(model: str, in_dim: int, hidden: int = 16, out_dim: int = 2,
+                 layers: int = 2) -> GNNWorkload:
+    """Paper Sec. VI-A model zoo: 2-layer GCN/GAT/GraphSAGE, hidden=16."""
+    dims = [in_dim] + [hidden] * (layers - 1) + [out_dim]
+    model = model.lower()
+    if model == "gcn":
+        return GNNWorkload(dims, 1.0, 1.0, 1.0, "gcn")
+    if model == "gat":
+        # attention: extra per-neighbor weighting + per-link score matvecs.
+        return GNNWorkload(dims, 2.0, 1.25, 1.0, "gat")
+    if model in ("sage", "graphsage"):
+        # mean aggregation (divide folded into act), concat doubles update GEMM
+        # but SAGE aggregates neighbors only (no self in sum) -> lighter agg.
+        return GNNWorkload(dims, 0.75, 2.0, 1.0, "sage")
+    raise ValueError(f"unknown GNN model {model!r}")
+
+
+class CostModel:
+    """Vectorized evaluator of the four cost factors for a (net, graph, gnn)."""
+
+    def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload):
+        self.net = net
+        self.graph = graph
+        self.gnn = gnn
+        self._unary = None
+        # Graph evolution can add clients the fleet has no upload entry for
+        # yet (Sec. V-A): derive mu for them from coordinates when present,
+        # else charge the fleet-average upload cost.
+        if net.mu.shape[0] < graph.n:
+            extra = graph.n - net.mu.shape[0]
+            if graph.coords is not None and net.coords is not None:
+                d = np.linalg.norm(
+                    graph.coords[net.mu.shape[0]:, None, :]
+                    - net.coords[None, :, :], axis=-1)
+                base = net.mu.mean() / max(np.mean(
+                    np.linalg.norm(net.coords, axis=-1)), 1e-9)
+                new_mu = d * (net.mu.mean() / max(d.mean(), 1e-9))
+            else:
+                new_mu = np.tile(net.mu.mean(0, keepdims=True), (extra, 1))
+            net.mu = np.concatenate([net.mu, new_mu], axis=0)
+
+    # ------------------------------------------------------------ components
+    @property
+    def cp_matrix(self) -> np.ndarray:
+        """C_P(v, i) per Eq. (5): (n, m)."""
+        deg = self.graph.degrees.astype(np.float64)  # |N_v|
+        net, g = self.net, self.gnn
+        return (
+            np.outer(deg, net.alpha) * g.agg_units
+            + net.beta[None, :] * g.upd_units
+            + net.gamma[None, :] * g.act_units
+        )
+
+    @property
+    def unary(self) -> np.ndarray:
+        """C1 coefficients (Thm 2): unary[v,i] = mu + C_P(v,i) + rho_i."""
+        if self._unary is None:
+            self._unary = self.net.mu + self.cp_matrix + self.net.rho[None, :]
+        return self._unary
+
+    @property
+    def constant(self) -> float:
+        """C0 (Thm 2): data-independent maintenance sum_i eps_i."""
+        return float(self.net.eps.sum())
+
+    # ------------------------------------------------------------- evaluation
+    def factors(self, assign: np.ndarray) -> Dict[str, float]:
+        assign = np.asarray(assign, dtype=np.int64)
+        n = self.graph.n
+        net = self.net
+        cu = float(net.mu[np.arange(n), assign].sum())
+        cp = float(self.cp_matrix[np.arange(n), assign].sum())
+        e = self.graph.edges
+        if len(e):
+            w = self.graph.weights_or_ones()
+            ct = float((net.tau[assign[e[:, 0]], assign[e[:, 1]]] * w).sum())
+        else:
+            ct = 0.0
+        cm = float(net.rho[assign].sum() + net.eps.sum())
+        return {"C_U": cu, "C_P": cp, "C_T": ct, "C_M": cm,
+                "total": cu + cp + ct + cm}
+
+    def total(self, assign: np.ndarray) -> float:
+        return self.factors(assign)["total"]
+
+    def traffic_bytes(self, assign: np.ndarray, feat_bytes: int) -> float:
+        """Physical bytes crossing servers under BSP (for runtime validation:
+        cut links x per-layer feature bytes x layers)."""
+        e = self.graph.edges
+        if not len(e):
+            return 0.0
+        cut = assign[e[:, 0]] != assign[e[:, 1]]
+        return float(cut.sum()) * 2 * feat_bytes * (len(self.gnn.layer_dims) - 1)
+
+    # --------------------------------------------------- marginal quantities
+    def marginal(self, placed: np.ndarray, assign: np.ndarray, v: int, i: int) -> float:
+        """Incremental placement cost of adding vertex v at server i given the
+        subset mask ``placed`` with layout ``assign`` — used by GLAD-E to seed
+        newly-inserted vertices and by GLAD-A's drift bound (Thm 8)."""
+        delta = self.unary[v, i]
+        for u in self.graph.neighbors(v):
+            if placed[u]:
+                delta += self.net.tau[i, assign[u]]
+        return float(delta)
+
+    def marginal_fp(self, subset: np.ndarray, v: int) -> float:
+        """Paper's F_P(X, v) under auxiliary-graph accounting (Thm 3, Eq. 14):
+        the *new* aggregation work is over N_v \\ A(X), where
+        A(X) = X  ∪  (union of neighbors of X).  Submodular in X — the
+        property test checks F_P(X,v) >= F_P(Y,v) for X ⊆ Y."""
+        in_aux = subset.copy()
+        for u in np.where(subset)[0]:
+            in_aux[self.graph.neighbors(u)] = True
+        new = [u for u in self.graph.neighbors(v) if not in_aux[u]]
+        # Use mean C_P(u, ·) — server-independent comparison is what Thm 3 uses
+        # (the newly added vertex goes to the *same* server for X and Y).
+        return float(self.cp_matrix[new, 0].sum()) if new else 0.0

@@ -1,0 +1,72 @@
+"""GLAD-E: incremental layout optimization for evolved graphs (paper Alg. 2).
+
+Only the vertices that can *increase* cost — newly inserted ones and those
+with fresh cross-server links — are re-optimized; everything else keeps its
+slot (no migration, no service interruption).  Implemented by running GLAD-S
+with an ``active`` mask so the frozen layout contributes exact side-effect
+terms to every auxiliary cut (a boundary-aware refinement of the paper's
+"extract G+ and call GLAD-S" description; noted in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.evolution import changed_vertices
+from repro.core.glad_s import GladResult, glad_s
+from repro.graphs.datagraph import DataGraph
+
+
+def seed_new_vertices(
+    cm: CostModel, assign: np.ndarray, new_mask: np.ndarray
+) -> np.ndarray:
+    """Greedy-marginal initial placement for vertices with no slot yet."""
+    assign = assign.copy()
+    placed = ~new_mask
+    for v in np.where(new_mask)[0]:
+        best_i, best_c = 0, np.inf
+        for i in range(cm.net.m):
+            c = cm.marginal(placed, assign, int(v), i)
+            if c < best_c:
+                best_i, best_c = i, c
+        assign[v] = best_i
+        placed[v] = True
+    return assign
+
+
+def glad_e(
+    cm_new: CostModel,
+    old_graph: DataGraph,
+    assign_old: np.ndarray,
+    R: Optional[int] = None,
+    seed: int = 0,
+    backend: str = "auto",
+) -> GladResult:
+    """Args:
+      cm_new: cost model bound to the *evolved* graph G(t).
+      old_graph / assign_old: G(t-1) and its layout pi(t-1).
+    """
+    new_graph = cm_new.graph
+    active = changed_vertices(old_graph, new_graph, assign_old)
+
+    # Carry forward the old layout; pad and seed newly-inserted vertices.
+    assign = np.zeros(new_graph.n, dtype=np.int64)
+    keep = min(old_graph.n, new_graph.n)
+    assign[:keep] = assign_old[:keep]
+    if new_graph.n > old_graph.n:
+        new_mask = np.zeros(new_graph.n, dtype=bool)
+        new_mask[old_graph.n:] = True
+        assign = seed_new_vertices(cm_new, assign, new_mask)
+
+    if not active.any():
+        f = cm_new.factors(assign)
+        return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f)
+
+    # R defaults small for incremental updates (the filtered set is small).
+    if R is None:
+        R = max(3, cm_new.net.m)
+    return glad_s(
+        cm_new, R=R, init=assign, active=active, seed=seed, backend=backend
+    )

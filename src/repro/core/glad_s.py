@@ -1,0 +1,194 @@
+"""GLAD-S: graph-layout scheduling for static input graphs (paper Alg. 1).
+
+Iteratively picks the least-visited connected server pair <i, j>, builds the
+auxiliary graph A(i, j) over the clients currently resident on i or j, solves
+a minimum s-t cut (Thm 4: exact for the restricted two-server subproblem),
+and accepts the induced layout whenever total cost improves.  Terminates when
+R consecutive attempts fail to improve (Thm 6 guarantees convergence;
+Thm 5 gives C(pi) <= 2*lambda*C(pi*) + eps).
+
+Auxiliary-graph weights (Sec. IV-B):
+  t-link  s(=i) -> v : unary cost of v living on j  +  side-effect traffic
+                       from v's links to vertices on *other* servers k
+                       (paid when v lands on the sink side = server j)
+  t-link  v -> t(=j) : symmetric, for v living on i
+  n-link  u <-> v    : tau_ij  (paid when a data link is cut by the layout)
+
+The side-effect terms make each pairwise cut *globally* cost-aware, which is
+what lets the pairwise sweep descend the full objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.maxflow import min_st_cut
+
+
+@dataclasses.dataclass
+class GladResult:
+    assign: np.ndarray
+    cost: float
+    history: List[float]            # total cost after every iteration
+    iterations: int
+    accepted: int
+    wall_time_s: float
+    factors: dict
+
+
+def _pair_members(assign: np.ndarray, i: int, j: int,
+                  active: Optional[np.ndarray]) -> np.ndarray:
+    members = (assign == i) | (assign == j)
+    if active is not None:
+        members &= active
+    return np.where(members)[0]
+
+
+def solve_pair(
+    cm: CostModel,
+    assign: np.ndarray,
+    i: int,
+    j: int,
+    active: Optional[np.ndarray] = None,
+    backend: str = "auto",
+) -> Optional[np.ndarray]:
+    """One min s-t cut for server pair (i, j).  Returns a full proposed
+    assignment vector (copy), or None if the pair hosts no active vertices."""
+    members = _pair_members(assign, i, j, active)
+    if len(members) == 0:
+        return None
+    net, graph = cm.net, cm.graph
+    n_aux = len(members) + 2
+    S, T = len(members), len(members) + 1      # aux ids of source/sink
+    aux_id = {int(v): k for k, v in enumerate(members)}
+
+    # Unary terms: theta_i[v] = unary[v, i], theta_j[v] = unary[v, j],
+    # plus side-effect traffic to neighbors on other servers.
+    theta_i = cm.unary[members, i].astype(np.float64).copy()
+    theta_j = cm.unary[members, j].astype(np.float64).copy()
+
+    edges = graph.edges
+    weights = graph.weights_or_ones()
+    eu, ev = edges[:, 0], edges[:, 1]
+    m_mask = np.zeros(graph.n, dtype=bool)
+    m_mask[members] = True
+
+    # Internal links (both endpoints in member set): pairwise tau_ij.
+    internal = m_mask[eu] & m_mask[ev]
+    # Boundary links: one endpoint in member set -> side-effect unary.
+    bnd_u = m_mask[eu] & ~m_mask[ev]
+    bnd_v = ~m_mask[eu] & m_mask[ev]
+    if bnd_u.any():
+        ins, outs, w = eu[bnd_u], ev[bnd_u], weights[bnd_u]
+        np.add.at(theta_i, [aux_id[int(x)] for x in ins],
+                  net.tau[i, assign[outs]] * w)
+        np.add.at(theta_j, [aux_id[int(x)] for x in ins],
+                  net.tau[j, assign[outs]] * w)
+    if bnd_v.any():
+        ins, outs, w = ev[bnd_v], eu[bnd_v], weights[bnd_v]
+        np.add.at(theta_i, [aux_id[int(x)] for x in ins],
+                  net.tau[i, assign[outs]] * w)
+        np.add.at(theta_j, [aux_id[int(x)] for x in ins],
+                  net.tau[j, assign[outs]] * w)
+
+    # Build the flow network.  Convention: source side = server i.
+    #   cap(s -> v) = theta_j[v]   (paid when v ends on sink side, i.e. j? no:
+    #   s->v is cut exactly when v is in the sink component => v on j ...
+    #   => the cut pays the cost of assigning v to j) -- see maxflow.min_st_cut.
+    k = len(members)
+    us = [S] * k + [kk for kk in range(k)]
+    vs = list(range(k)) + [T] * k
+    caps_uv = list(theta_j) + list(theta_i)
+    caps_vu = [0.0] * (2 * k)
+    if internal.any():
+        tij = float(net.tau[i, j])
+        for a, b, w in zip(eu[internal], ev[internal], weights[internal]):
+            us.append(aux_id[int(a)]); vs.append(aux_id[int(b)])
+            caps_uv.append(tij * w); caps_vu.append(tij * w)
+    _, side = min_st_cut(
+        n_aux, S, T, np.array(us), np.array(vs),
+        np.array(caps_uv), np.array(caps_vu), backend=backend,
+    )
+    proposal = assign.copy()
+    on_source = side[:k]          # True -> stays with server i
+    proposal[members[on_source]] = i
+    proposal[members[~on_source]] = j
+    return proposal
+
+
+def glad_s(
+    cm: CostModel,
+    R: Optional[int] = None,
+    init: Optional[np.ndarray] = None,
+    active: Optional[np.ndarray] = None,
+    seed: int = 0,
+    backend: str = "auto",
+    max_iterations: int = 100_000,
+    on_iteration: Optional[Callable[[int, float], None]] = None,
+) -> GladResult:
+    """Paper Algorithm 1.
+
+    Args:
+      cm: cost model binding (net, graph, gnn workload).
+      R: convergence patience — consecutive non-improving attempts tolerated.
+         Defaults to |D|(|D|-1)/2 (the exhaustive setting in Sec. IV-B).
+      init: starting layout; random if None (Alg. 1 line 1).
+      active: optional mask — only these vertices may move (GLAD-E reuses
+        this to freeze the unfiltered layout).
+      backend: max-flow backend.
+    """
+    rng = np.random.default_rng(seed)
+    net, graph = cm.net, cm.graph
+    t0 = time.perf_counter()
+
+    if init is None:
+        assign = rng.integers(0, net.m, size=graph.n).astype(np.int64)
+    else:
+        assign = np.asarray(init, dtype=np.int64).copy()
+
+    pairs = net.pairs
+    if len(pairs) == 0 or graph.n == 0:
+        f = cm.factors(assign)
+        return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f)
+    if R is None:
+        R = net.m * (net.m - 1) // 2
+
+    visits = np.zeros(len(pairs), dtype=np.int64)
+    cur_cost = cm.total(assign)
+    history = [cur_cost]
+    r = 0
+    iters = 0
+    accepted = 0
+    while r <= R and iters < max_iterations:
+        # Least-visited pair; random tie-break (Alg. 1 line 4).
+        mn = visits.min()
+        cand = np.where(visits == mn)[0]
+        p = cand[rng.integers(0, len(cand))]
+        visits[p] += 1
+        i, j = int(pairs[p, 0]), int(pairs[p, 1])
+
+        proposal = solve_pair(cm, assign, i, j, active=active, backend=backend)
+        iters += 1
+        if proposal is not None:
+            new_cost = cm.total(proposal)
+            if new_cost < cur_cost - 1e-9:
+                assign, cur_cost = proposal, new_cost
+                accepted += 1
+                r = 0
+            else:
+                r += 1
+        else:
+            r += 1
+        history.append(cur_cost)
+        if on_iteration is not None:
+            on_iteration(iters, cur_cost)
+
+    return GladResult(
+        assign=assign, cost=cur_cost, history=history, iterations=iters,
+        accepted=accepted, wall_time_s=time.perf_counter() - t0,
+        factors=cm.factors(assign),
+    )

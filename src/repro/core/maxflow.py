@@ -1,0 +1,165 @@
+"""Minimum s-t cut solvers.
+
+GLAD-S settles each server pair by a min s-t cut on an auxiliary graph
+(paper Sec. IV-B; solver reference [101] Orlin O(nm)).  Two backends:
+
+  * 'scipy'  — scipy.sparse.csgraph.maximum_flow (C implementation of
+               Dinic/BFS).  scipy requires integer capacities, so float
+               weights are scaled to int64 with a fixed resolution; the cut
+               *partition* is exact as long as weight gaps exceed 1/SCALE.
+  * 'dinic'  — pure-python Dinic with float capacities (exact, slower);
+               used as fallback and as the oracle in tests.
+
+Both return the source-side membership mask, from which GLAD's Eq. (15)
+mapping derives the layout.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Tuple
+
+import numpy as np
+
+try:
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import maximum_flow as _scipy_maxflow
+
+    _HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    _HAVE_SCIPY = False
+
+_SCALE = 10 ** 7  # float -> int64 capacity resolution for the scipy backend
+
+
+class Dinic:
+    """Textbook Dinic max-flow with adjacency arrays (float capacities)."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.to: list[int] = []
+        self.cap: list[float] = []
+        self.head: list[list[int]] = [[] for _ in range(n)]
+
+    def add_edge(self, u: int, v: int, cap_uv: float, cap_vu: float = 0.0):
+        self.head[u].append(len(self.to)); self.to.append(v); self.cap.append(cap_uv)
+        self.head[v].append(len(self.to)); self.to.append(u); self.cap.append(cap_vu)
+
+    def _bfs(self, s: int, t: int) -> bool:
+        self.level = [-1] * self.n
+        self.level[s] = 0
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 1e-12 and self.level[v] < 0:
+                    self.level[v] = self.level[u] + 1
+                    q.append(v)
+        return self.level[t] >= 0
+
+    def _dfs(self, u: int, t: int, f: float, it: list[int]) -> float:
+        if u == t:
+            return f
+        while it[u] < len(self.head[u]):
+            eid = self.head[u][it[u]]
+            v = self.to[eid]
+            if self.cap[eid] > 1e-12 and self.level[v] == self.level[u] + 1:
+                d = self._dfs(v, t, min(f, self.cap[eid]), it)
+                if d > 1e-12:
+                    self.cap[eid] -= d
+                    self.cap[eid ^ 1] += d
+                    return d
+            it[u] += 1
+        return 0.0
+
+    def max_flow(self, s: int, t: int) -> float:
+        flow = 0.0
+        while self._bfs(s, t):
+            it = [0] * self.n
+            while True:
+                f = self._dfs(s, t, float("inf"), it)
+                if f <= 1e-12:
+                    break
+                flow += f
+        return flow
+
+    def min_cut_side(self, s: int) -> np.ndarray:
+        """Source-side reachability in the residual graph (call after max_flow)."""
+        side = np.zeros(self.n, dtype=bool)
+        side[s] = True
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 1e-12 and not side[v]:
+                    side[v] = True
+                    q.append(v)
+        return side
+
+
+def min_st_cut(
+    n: int,
+    s: int,
+    t: int,
+    edges_u: np.ndarray,
+    edges_v: np.ndarray,
+    caps_uv: np.ndarray,
+    caps_vu: np.ndarray,
+    backend: str = "auto",
+) -> Tuple[float, np.ndarray]:
+    """Solve min s-t cut on a directed-capacity graph.
+
+    Args:
+      n: node count (s, t included).
+      edges_u/v: endpoints; caps_uv/vu: directed capacities per edge row.
+      backend: 'scipy' | 'dinic' | 'auto'.
+
+    Returns:
+      (cut_value, source_side_mask) with mask[s]=True, mask[t]=False.
+    """
+    edges_u = np.asarray(edges_u, dtype=np.int64)
+    edges_v = np.asarray(edges_v, dtype=np.int64)
+    caps_uv = np.asarray(caps_uv, dtype=np.float64)
+    caps_vu = np.asarray(caps_vu, dtype=np.float64)
+    if backend == "auto":
+        backend = "scipy" if _HAVE_SCIPY else "dinic"
+
+    if backend == "scipy":
+        # Merge parallel directed edges; scale to int64.  The scale adapts
+        # to the largest capacity so huge costs (e.g. congestion-priced
+        # layouts) cannot overflow: resolution is relative, and the cut
+        # PARTITION is exact as long as gaps exceed max_cap/_SCALE.
+        u = np.concatenate([edges_u, edges_v])
+        v = np.concatenate([edges_v, edges_u])
+        c = np.concatenate([caps_uv, caps_vu])
+        keep = c > 0
+        u, v, c = u[keep], v[keep], c[keep]
+        cmax = float(c.max()) if len(c) else 1.0
+        scale = _SCALE / max(cmax, 1e-30)
+        ci = np.round(c * scale).astype(np.int64)
+        ci = np.maximum(ci, 0)
+        mat = csr_matrix((ci, (u, v)), shape=(n, n))
+        mat.sum_duplicates()
+        res = _scipy_maxflow(mat, s, t)
+        flow = res.flow  # antisymmetric flow matrix (csr)
+        residual = mat - flow
+        # BFS from s over strictly-positive residual capacity.
+        side = np.zeros(n, dtype=bool)
+        side[s] = True
+        q = deque([s])
+        indptr, indices, data = residual.indptr, residual.indices, residual.data
+        while q:
+            x = q.popleft()
+            for k in range(indptr[x], indptr[x + 1]):
+                y = indices[k]
+                if data[k] > 0 and not side[y]:
+                    side[y] = True
+                    q.append(y)
+        return res.flow_value / scale, side
+
+    dinic = Dinic(n)
+    for u, v, cuv, cvu in zip(edges_u, edges_v, caps_uv, caps_vu):
+        dinic.add_edge(int(u), int(v), float(cuv), float(cvu))
+    val = dinic.max_flow(s, t)
+    return val, dinic.min_cut_side(s)

@@ -1,0 +1,222 @@
+"""Layout -> device-placement bridge (DESIGN.md §4).
+
+Promotes the paper's technique to a first-class placement engine for the
+framework's parallel workloads:
+
+  * ``data_partition``   — GLAD layout of the GNN data graph over mesh slices,
+                           exported as padded per-device vertex lists + halo
+                           exchange plans for the shard_map BSP engine.
+  * ``expert_layout``    — MoE expert placement: experts are vertices weighted
+                           by routed-token load (C_P), expert co-activation is
+                           the link set (C_T = all-to-all bytes), mesh slices
+                           are the servers.  GLAD-S minimizes collective
+                           traffic + compute imbalance.
+  * ``rebalance``        — straggler mitigation: re-run GLAD-E with degraded
+                           alpha_i for the slow device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cost import CostModel, GNNWorkload
+from repro.core.glad_s import glad_s
+from repro.graphs.datagraph import DataGraph
+from repro.graphs.edgenet import EdgeNetwork, pod_edge_network
+
+
+@dataclasses.dataclass
+class DevicePartition:
+    """A static, padding-complete partition consumable by shard_map.
+
+    All arrays are rectangular (padded with -1 / last-valid) so the compiled
+    program is shape-static regardless of the layout.
+    """
+
+    num_parts: int
+    assign: np.ndarray            # (n,) vertex -> part
+    part_vertices: np.ndarray     # (P, cap) vertex ids, -1 padded
+    part_sizes: np.ndarray        # (P,)
+    halo_src: np.ndarray          # (P, halo_cap) vertex ids this part must RECEIVE
+    halo_sizes: np.ndarray        # (P,)
+    cut_links: int
+    cost_factors: dict
+
+    @property
+    def capacity(self) -> int:
+        return int(self.part_vertices.shape[1])
+
+
+def _pad_lists(lists, pad_val=-1, cap: Optional[int] = None) -> np.ndarray:
+    cap = cap or max((len(l) for l in lists), default=1)
+    cap = max(cap, 1)
+    out = np.full((len(lists), cap), pad_val, dtype=np.int64)
+    for k, l in enumerate(lists):
+        out[k, : len(l)] = l
+    return out
+
+
+def partition_from_assign(
+    graph: DataGraph, assign: np.ndarray, num_parts: int, factors: dict
+) -> DevicePartition:
+    parts = [np.where(assign == p)[0] for p in range(num_parts)]
+    sizes = np.array([len(p) for p in parts], dtype=np.int64)
+    # Halo: for each part, the out-of-part neighbors its vertices aggregate.
+    halos = []
+    e = graph.edges
+    for p in range(num_parts):
+        if len(e) == 0:
+            halos.append(np.zeros(0, np.int64))
+            continue
+        mine_u = assign[e[:, 0]] == p
+        mine_v = assign[e[:, 1]] == p
+        need = np.concatenate([e[mine_u & ~mine_v, 1], e[mine_v & ~mine_u, 0]])
+        halos.append(np.unique(need))
+    cut = int((assign[e[:, 0]] != assign[e[:, 1]]).sum()) if len(e) else 0
+    return DevicePartition(
+        num_parts=num_parts,
+        assign=assign.astype(np.int64),
+        part_vertices=_pad_lists(parts),
+        part_sizes=sizes,
+        halo_src=_pad_lists(halos),
+        halo_sizes=np.array([len(h) for h in halos], dtype=np.int64),
+        cut_links=cut,
+        cost_factors=factors,
+    )
+
+
+def data_partition(
+    graph: DataGraph,
+    gnn: GNNWorkload,
+    num_parts: int,
+    pods: int = 1,
+    net: Optional[EdgeNetwork] = None,
+    R: Optional[int] = None,
+    seed: int = 0,
+    init: Optional[np.ndarray] = None,
+) -> DevicePartition:
+    """GLAD-S over a pod-shaped EdgeNetwork -> shard_map-ready partition."""
+    if net is None:
+        net = pod_edge_network(num_parts, graph.n, pods=pods, seed=seed)
+    cm = CostModel(net, graph, gnn)
+    res = glad_s(cm, R=R, seed=seed, init=init)
+    return partition_from_assign(graph, res.assign, num_parts, res.factors)
+
+
+# --------------------------------------------------------------------- MoE
+def coactivation_graph(
+    routing_counts: np.ndarray, top_pairs: int = 4096
+) -> DataGraph:
+    """Build the expert co-activation graph from a routing histogram.
+
+    Args:
+      routing_counts: (E, E) symmetric counts of token-level co-routing
+        (tokens whose top-k set contains both experts), diagonal = load.
+    """
+    E = routing_counts.shape[0]
+    iu, ju = np.triu_indices(E, 1)
+    wts = routing_counts[iu, ju]
+    order = np.argsort(wts)[::-1][:top_pairs]
+    keep = order[wts[order] > 0]
+    edges = np.stack([iu[keep], ju[keep]], axis=1)
+    g = DataGraph(n=E, edges=edges)
+    # Weights aligned to the CANONICAL edge order (C_T = tau * co-activation).
+    g.edge_weights = routing_counts[g.edges[:, 0], g.edges[:, 1]].astype(
+        np.float64)
+    g.coords = np.zeros((E, 2), dtype=np.float32)
+    return g
+
+
+def expert_layout(
+    routing_counts: np.ndarray,
+    num_slices: int,
+    pods: int = 1,
+    flops_per_token: float = 1.0,
+    bytes_per_pair: float = 1.0,
+    balance_rounds: int = 5,
+    balance_tol: float = 1.15,
+    seed: int = 0,
+) -> DevicePartition:
+    """GLAD applied to MoE expert placement (DESIGN.md §4, kimi/deepseek).
+
+    Cost mapping: the unary term carries per-expert routed load (alpha_i *
+    load_v — the paper's C_P), C_T carries co-activation traffic (tau *
+    co-routed tokens).  Because makespan (max per-slice load) is not
+    expressible in GLAD's linear unary terms, we add *congestion pricing*
+    on top of the paper: after each layout, alpha_i of overloaded slices is
+    scaled up exponentially and GLAD-S re-runs warm-started, until the load
+    imbalance meets ``balance_tol`` (beyond-paper extension, DESIGN.md §7).
+    """
+    E = routing_counts.shape[0]
+    g = coactivation_graph(routing_counts)
+    net = pod_edge_network(num_slices, E, pods=pods, seed=seed,
+                           link_cost=bytes_per_pair)
+    load = routing_counts.diagonal().astype(np.float64)
+    net.mu = np.zeros((E, num_slices))
+    gnn = GNNWorkload([1, 1], agg_scale=flops_per_token, name="moe")
+    target = load.sum() / num_slices
+
+    # 1) Capacity-capped agglomeration: merge heaviest co-activation pairs
+    #    while cluster load stays under target*tol (union-find).
+    cap = target * balance_tol
+    parent = np.arange(E)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    cl_load = load.copy()
+    order = np.argsort(-g.edge_weights) if len(g.edges) else []
+    for ei in order:
+        u, v = g.edges[ei]
+        ru, rv = find(u), find(v)
+        if ru != rv and cl_load[ru] + cl_load[rv] <= cap:
+            parent[rv] = ru
+            cl_load[ru] += cl_load[rv]
+
+    # 2) Bin-pack clusters largest-first onto the least-loaded slice.
+    roots = {}
+    for v in range(E):
+        roots.setdefault(find(v), []).append(v)
+    slices_load = np.zeros(num_slices)
+    assign0 = np.zeros(E, dtype=np.int64)
+    for r, members in sorted(roots.items(),
+                             key=lambda kv: -load[kv[1]].sum()):
+        s = int(np.argmin(slices_load))
+        assign0[members] = s
+        slices_load[s] += load[members].sum()
+
+    # 3) GLAD-S refinement with a balance guard: accept the refined layout
+    #    only while the load imbalance stays within tolerance (makespan is
+    #    outside GLAD's linear objective — noted in DESIGN.md §7).
+    cm = CostModel(net, g, gnn)
+    res = glad_s(cm, seed=seed, init=assign0, R=num_slices)
+    sl = np.array([load[res.assign == s].sum() for s in range(num_slices)])
+    if sl.max() > cap * 1.05:
+        assign = assign0
+        factors = cm.factors(assign0)
+    else:
+        assign = res.assign
+        factors = res.factors
+    return partition_from_assign(g, assign, num_slices, factors)
+
+
+def rebalance(
+    graph: DataGraph,
+    gnn: GNNWorkload,
+    part: DevicePartition,
+    net: EdgeNetwork,
+    straggler: int,
+    slow_factor: float,
+    seed: int = 0,
+) -> DevicePartition:
+    """Straggler mitigation: degrade the slow server's compute coefficients
+    and run an incremental re-layout warm-started from the current one."""
+    net2 = net.degrade(straggler, slow_factor)
+    cm = CostModel(net2, graph, gnn)
+    res = glad_s(cm, init=part.assign, R=net2.m, seed=seed)
+    return partition_from_assign(graph, res.assign, part.num_parts, res.factors)

@@ -1,0 +1,15 @@
+from repro.gnn.models import (
+    GNNConfig, directed_edges, forward, init_params, loss_fn, predict,
+    segment_sum,
+)
+from repro.gnn.distributed import (
+    ShardPlan, compile_plan, gather_outputs, make_bsp_forward,
+    scatter_features, scatter_ints, simulate_bsp_forward,
+)
+
+__all__ = [
+    "GNNConfig", "directed_edges", "forward", "init_params", "loss_fn",
+    "predict", "segment_sum",
+    "ShardPlan", "compile_plan", "gather_outputs", "make_bsp_forward",
+    "scatter_features", "scatter_ints", "simulate_bsp_forward",
+]

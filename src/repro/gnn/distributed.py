@@ -1,0 +1,377 @@
+"""Distributed BSP GNN engine (paper Sec. III-B "cross-edge traffic" -> TPU).
+
+The paper's execution model: each edge server hosts a vertex partition, and a
+BSP synchronization round per GNN layer exchanges the feature vectors of
+vertices whose links are cut by the layout.  On a TPU mesh this becomes:
+
+  * vertices     -> padded per-device blocks (shape-static, layout-agnostic)
+  * cut links    -> halo exchange collectives between mesh slices
+  * BSP round    -> one collective phase per layer inside shard_map
+
+Two exchange paths:
+  * ``ppermute`` — point-to-point rotation rounds that move ONLY the rows the
+    receiving device actually needs (bytes proportional to the layout's cut —
+    this is where GLAD's C_T minimization physically lands).  Empty rounds are
+    pruned host-side, so a good layout compiles to fewer collectives.
+  * ``allgather`` — gather every block everywhere (bytes independent of the
+    layout; the de-facto-baseline exchange used for comparison and as the
+    large-P fallback).
+
+A ShardPlan is compiled ONCE on host from (DataGraph, DevicePartition); all
+arrays are rectangular so the jitted program never sees dynamic shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.partition import DevicePartition
+from repro.gnn.models import GNNConfig, _LAYERS, segment_sum
+from repro.graphs.datagraph import DataGraph
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return max(mult, ((x + mult - 1) // mult) * mult)
+
+
+@dataclasses.dataclass
+class ShardPlan:
+    """Rectangular, device-ready encoding of a GLAD layout."""
+
+    num_parts: int
+    cap: int                      # local vertex slots per device
+    halo_cap: int                 # halo slots per device
+    e_cap: int                    # directed-edge slots per device
+    local: np.ndarray             # (P, cap) global vertex ids, -1 pad
+    local_mask: np.ndarray        # (P, cap) bool
+    slot_of: np.ndarray           # (n,) -> p * cap + k
+    halo: np.ndarray              # (P, halo_cap) global ids, -1 pad
+    halo_slot: np.ndarray         # (P, halo_cap) global SLOT ids, P*cap pad
+    edges_src: np.ndarray         # (P, e_cap) table idx: [0,cap)=local,
+                                  #   [cap,cap+halo_cap)=halo, pad=cap+halo_cap
+    edges_dst: np.ndarray         # (P, e_cap) local idx, pad = cap
+    deg: np.ndarray               # (P, cap) float32 global degree
+    rounds: Sequence[dict]        # pruned ppermute rounds
+    halo_bytes_ppermute: int      # exchanged payload rows (sum over rounds)
+    halo_rows_allgather: int      # rows moved by the naive path
+
+    @property
+    def table_rows(self) -> int:
+        return self.cap + self.halo_cap + 1     # +1 zero row for padding
+
+
+def compile_plan(
+    graph: DataGraph, part: DevicePartition, pad_mult: int = 8
+) -> ShardPlan:
+    """Host-side plan compilation (numpy only, no jax device state)."""
+    Pn = part.num_parts
+    assign = part.assign
+    n = graph.n
+
+    parts = [np.where(assign == p)[0] for p in range(Pn)]
+    cap = _pad_up(max((len(q) for q in parts), default=1), pad_mult)
+    local = np.full((Pn, cap), -1, dtype=np.int64)
+    slot_of = np.full(n, -1, dtype=np.int64)
+    for p, vs in enumerate(parts):
+        local[p, : len(vs)] = vs
+        slot_of[vs] = p * cap + np.arange(len(vs))
+    local_mask = local >= 0
+
+    # Halo membership: out-of-part neighbors each part aggregates from.
+    e = graph.edges
+    halos = []
+    for p in range(Pn):
+        if len(e) == 0:
+            halos.append(np.zeros(0, np.int64))
+            continue
+        mu = assign[e[:, 0]] == p
+        mv = assign[e[:, 1]] == p
+        need = np.concatenate([e[mu & ~mv, 1], e[mv & ~mu, 0]])
+        halos.append(np.unique(need))
+    halo_cap = _pad_up(max((len(h) for h in halos), default=1), pad_mult)
+    halo = np.full((Pn, halo_cap), -1, dtype=np.int64)
+    halo_slot = np.full((Pn, halo_cap), Pn * cap, dtype=np.int64)
+    halo_pos = {}                   # (p, vertex) -> halo index on p
+    for p, hs in enumerate(halos):
+        halo[p, : len(hs)] = hs
+        halo_slot[p, : len(hs)] = slot_of[hs]
+        for k, v in enumerate(hs):
+            halo_pos[(p, int(v))] = k
+
+    # Per-device directed edge lists in table coordinates.
+    local_idx = {}                  # (p, vertex) -> local index
+    for p, vs in enumerate(parts):
+        for k, v in enumerate(vs):
+            local_idx[(p, int(v))] = k
+    dev_edges = [[] for _ in range(Pn)]
+    for u, v in e:
+        for dst, src in ((int(v), int(u)), (int(u), int(v))):
+            p = int(assign[dst])
+            d_loc = local_idx[(p, dst)]
+            if assign[src] == p:
+                s_tab = local_idx[(p, src)]
+            else:
+                s_tab = cap + halo_pos[(p, src)]
+            dev_edges[p].append((s_tab, d_loc))
+    e_cap = _pad_up(max((len(de) for de in dev_edges), default=1), pad_mult)
+    edges_src = np.full((Pn, e_cap), cap + halo_cap, dtype=np.int32)
+    edges_dst = np.full((Pn, e_cap), cap, dtype=np.int32)
+    for p, de in enumerate(dev_edges):
+        if de:
+            arr = np.array(de, dtype=np.int32)
+            edges_src[p, : len(de)] = arr[:, 0]
+            edges_dst[p, : len(de)] = arr[:, 1]
+
+    deg_all = graph.degrees.astype(np.float32)
+    deg = np.zeros((Pn, cap), dtype=np.float32)
+    for p, vs in enumerate(parts):
+        deg[p, : len(vs)] = deg_all[vs]
+
+    # ppermute rotation schedule; prune rounds with no traffic anywhere.
+    rounds = []
+    total_rows = 0
+    for s in range(1, Pn):
+        sends = []                 # per source device p: rows destined to q
+        recv_lists = []
+        for p in range(Pn):
+            q = (p + s) % Pn
+            mine = [v for v in halos[q] if assign[v] == p]
+            sends.append(mine)
+        max_send = max((len(x) for x in sends), default=0)
+        if max_send == 0:
+            continue
+        max_send = _pad_up(max_send, pad_mult)
+        send_idx = np.full((Pn, max_send), -1, dtype=np.int32)
+        recv_pos = np.full((Pn, max_send), halo_cap, dtype=np.int32)
+        for p in range(Pn):
+            q = (p + s) % Pn
+            rows = sends[p]
+            for k, v in enumerate(rows):
+                send_idx[p, k] = local_idx[(p, int(v))]
+                # device q receives from p at round s; store where the row
+                # lands in q's halo buffer.
+                recv_pos[q, k] = halo_pos[(q, int(v))]
+            total_rows += len(rows)
+        rounds.append({
+            "shift": s, "send_idx": send_idx, "recv_pos": recv_pos,
+            "width": max_send,
+        })
+
+    return ShardPlan(
+        num_parts=Pn, cap=cap, halo_cap=halo_cap, e_cap=e_cap,
+        local=local, local_mask=local_mask, slot_of=slot_of,
+        halo=halo, halo_slot=halo_slot,
+        edges_src=edges_src, edges_dst=edges_dst, deg=deg,
+        rounds=rounds,
+        halo_bytes_ppermute=total_rows,
+        halo_rows_allgather=Pn * cap * max(Pn - 1, 0),
+    )
+
+
+# ------------------------------------------------------------ data shuffling
+def scatter_features(plan: ShardPlan, features: np.ndarray) -> np.ndarray:
+    """(n, d) -> (P, cap, d) per-device blocks (zero rows on padding)."""
+    d = features.shape[1]
+    out = np.zeros((plan.num_parts, plan.cap, d), dtype=features.dtype)
+    valid = plan.local >= 0
+    out[valid] = features[plan.local[valid]]
+    return out
+
+
+def scatter_ints(plan: ShardPlan, values: np.ndarray, pad=0) -> np.ndarray:
+    out = np.full((plan.num_parts, plan.cap), pad, dtype=values.dtype)
+    valid = plan.local >= 0
+    out[valid] = values[plan.local[valid]]
+    return out
+
+
+def gather_outputs(plan: ShardPlan, blocks: np.ndarray, n: int) -> np.ndarray:
+    """(P, cap, d) -> (n, d) inverse of scatter_features."""
+    out = np.zeros((n,) + blocks.shape[2:], dtype=blocks.dtype)
+    valid = plan.local >= 0
+    out[plan.local[valid]] = blocks[valid]
+    return out
+
+
+# ------------------------------------------------------------- device kernel
+def _exchange_ppermute(h_local, rounds, halo_cap, axis_name):
+    """Move exactly the cut-link rows (paper's C_T) via rotation rounds."""
+    d = h_local.shape[-1]
+    halo = jnp.zeros((halo_cap + 1, d), h_local.dtype)
+    zero_row = jnp.zeros((1, d), h_local.dtype)
+    table = jnp.concatenate([h_local, zero_row], axis=0)
+    for r in rounds:
+        send = table[jnp.where(r["send_idx"] < 0, h_local.shape[0], r["send_idx"])]
+        got = jax.lax.ppermute(
+            send, axis_name,
+            [(p, (p + r["shift"]) % r["nparts"]) for p in range(r["nparts"])],
+        )
+        halo = halo.at[r["recv_pos"]].set(got)
+    return halo[:halo_cap]
+
+
+def _exchange_allgather(h_local, halo_slot, axis_name):
+    """Naive exchange: gather all blocks, pick halo rows (layout-agnostic)."""
+    d = h_local.shape[-1]
+    all_blocks = jax.lax.all_gather(h_local, axis_name)     # (P, cap, d)
+    flat = all_blocks.reshape(-1, d)
+    flat = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], axis=0)
+    idx = jnp.minimum(halo_slot, flat.shape[0] - 1)
+    return flat[idx]
+
+
+def _device_layer(cfg, p, h_local, halo, plan_arrs, last):
+    """One GNN layer on one device, mirroring models.py semantics exactly.
+
+    ``h_local``: (cap, d); ``halo``: (halo_cap, d).  Aggregation runs over the
+    device's edge list in table coordinates; padded edges hit the zero row and
+    the dummy (cap-th) destination segment.
+    """
+    cap = h_local.shape[0]
+    edges_src, edges_dst, deg = (
+        plan_arrs["edges_src"], plan_arrs["edges_dst"], plan_arrs["deg"])
+    zero_row = jnp.zeros((1, h_local.shape[1]), h_local.dtype)
+
+    if cfg.model == "gcn":
+        table = jnp.concatenate([h_local, halo, zero_row], axis=0)
+        msgs = table[edges_src]
+        agg = segment_sum(msgs, edges_dst, cap + 1)[:cap]
+        out = (agg + h_local) / (deg[:, None] + 1.0)
+        out = out @ p["w"]
+    elif cfg.model == "sage":
+        table = jnp.concatenate([h_local, halo, zero_row], axis=0)
+        msgs = table[edges_src]
+        agg = segment_sum(msgs, edges_dst, cap + 1)[:cap]
+        agg = agg / jnp.maximum(deg, 1.0)[:, None]
+        out = jnp.concatenate([agg, h_local], axis=-1) @ p["w"]
+    elif cfg.model == "gat":
+        # Compute W h for every table row locally (pull-then-compute BSP).
+        table_h = jnp.concatenate([h_local, halo, zero_row], axis=0)
+        wh = table_h @ p["w"]
+        a_dst = wh[:cap] @ p["att_src"]                  # only local dsts score
+        a_src = wh @ p["att_dst"]
+        logits = jax.nn.leaky_relu(a_dst[edges_dst % cap] + a_src[edges_src], 0.2)
+        # Mask padded edges out of the softmax.
+        pad = edges_dst >= cap
+        logits = jnp.where(pad, -jnp.inf, logits)
+        self_logit = jax.nn.leaky_relu(a_dst + wh[:cap] @ p["att_dst"], 0.2)
+        seg_max = jax.ops.segment_max(logits, edges_dst, num_segments=cap + 1)[:cap]
+        seg_max = jnp.maximum(jnp.where(jnp.isfinite(seg_max), seg_max, -jnp.inf),
+                              self_logit)
+        ex = jnp.where(pad, 0.0, jnp.exp(logits - seg_max[edges_dst % cap]))
+        ex_self = jnp.exp(self_logit - seg_max)
+        denom = segment_sum(ex[:, None], edges_dst, cap + 1)[:cap, 0] + ex_self
+        num = segment_sum(ex[:, None] * wh[edges_src], edges_dst, cap + 1)[:cap]
+        num = num + ex_self[:, None] * wh[:cap]
+        out = num / jnp.maximum(denom, 1e-16)[:, None]
+    else:
+        raise ValueError(cfg.model)
+    return out if last else jax.nn.relu(out)
+
+
+def _bsp_forward_device(cfg, params, h_local, plan_arrs, rounds, halo_cap,
+                        exchange, axis_name):
+    for k, p in enumerate(params):
+        if exchange == "ppermute":
+            halo = _exchange_ppermute(h_local, rounds, halo_cap, axis_name)
+        else:
+            halo = _exchange_allgather(h_local, plan_arrs["halo_slot"], axis_name)
+        h_local = _device_layer(cfg, p, h_local, halo, plan_arrs,
+                                k == len(params) - 1)
+    return h_local
+
+
+def make_bsp_forward(
+    cfg: GNNConfig,
+    plan: ShardPlan,
+    mesh: Mesh,
+    axis_name: str = "data",
+    exchange: str = "ppermute",
+):
+    """Build the shard_map'd full forward: (params, blocks (P,cap,d)) -> blocks.
+
+    ``exchange='ppermute'`` moves only cut-link rows (GLAD-aware);
+    ``'allgather'`` is the layout-agnostic baseline.
+    """
+    rounds = [
+        {"shift": r["shift"], "nparts": plan.num_parts,
+         "send_idx": r["send_idx"], "recv_pos": r["recv_pos"]}
+        for r in plan.rounds
+    ]
+    spec_b = P(axis_name)
+
+    # Round index arrays enter as sharded operands so each device slices its
+    # own row; two arrays (send_idx, recv_pos) per pruned round.
+    round_ops = []
+    for r in rounds:
+        round_ops.append(r["send_idx"])
+        round_ops.append(r["recv_pos"])
+
+    def wrapper(params, blocks):
+        def inner(params, blocks, es, ed, dg, hs, *round_arrs):
+            plan_arrs = {
+                "edges_src": es[0], "edges_dst": ed[0],
+                "deg": dg[0], "halo_slot": hs[0],
+            }
+            local_rounds = []
+            for k, r in enumerate(rounds):
+                local_rounds.append({
+                    "shift": r["shift"], "nparts": r["nparts"],
+                    "send_idx": round_arrs[2 * k][0],
+                    "recv_pos": round_arrs[2 * k + 1][0],
+                })
+            out = _bsp_forward_device(
+                cfg, params, blocks[0], plan_arrs, local_rounds,
+                plan.halo_cap, exchange, axis_name)
+            return out[None]
+
+        smapped = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), spec_b, spec_b, spec_b, spec_b, spec_b)
+            + tuple(spec_b for _ in round_ops),
+            out_specs=spec_b,
+        )
+        return smapped(
+            params, blocks,
+            jnp.asarray(plan.edges_src), jnp.asarray(plan.edges_dst),
+            jnp.asarray(plan.deg), jnp.asarray(plan.halo_slot),
+            *[jnp.asarray(a) for a in round_ops],
+        )
+
+    return wrapper
+
+
+# ----------------------------------------------------- single-device oracle
+def simulate_bsp_forward(cfg, params, plan: ShardPlan, features: np.ndarray,
+                         exchange: str = "ppermute") -> np.ndarray:
+    """Run the exact device computation without a multi-device mesh: the halo
+    is served from the global feature table (mathematically identical to
+    either exchange path).  Used by tests and the CPU examples."""
+    blocks = jnp.asarray(scatter_features(plan, features))
+    Pn, cap, d = blocks.shape
+
+    def one_layer_all(h_blocks, k, p, last):
+        flat = h_blocks.reshape(Pn * cap, -1)
+        flat = jnp.concatenate([flat, jnp.zeros((1, flat.shape[1]), flat.dtype)])
+        outs = []
+        for q in range(Pn):
+            idx = jnp.minimum(jnp.asarray(plan.halo_slot[q]), Pn * cap)
+            halo = flat[idx]
+            plan_arrs = {
+                "edges_src": jnp.asarray(plan.edges_src[q]),
+                "edges_dst": jnp.asarray(plan.edges_dst[q]),
+                "deg": jnp.asarray(plan.deg[q]),
+            }
+            outs.append(_device_layer(cfg, p, h_blocks[q], halo, plan_arrs, last))
+        return jnp.stack(outs)
+
+    h = blocks
+    for k, p in enumerate(params):
+        h = one_layer_all(h, k, p, k == len(params) - 1)
+    return np.asarray(gather_outputs(plan, np.asarray(h), features.shape[0]))

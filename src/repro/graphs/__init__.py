@@ -1,0 +1,8 @@
+from repro.graphs.datagraph import DataGraph, synthetic_siot, synthetic_yelp
+from repro.graphs.edgenet import EdgeNetwork, build_edge_network, pod_edge_network
+from repro.graphs.kmeans import kmeans
+
+__all__ = [
+    "DataGraph", "synthetic_siot", "synthetic_yelp",
+    "EdgeNetwork", "build_edge_network", "pod_edge_network", "kmeans",
+]

@@ -1,0 +1,233 @@
+"""Data graph substrate.
+
+The *data graph* G = (V, E) is the GNN's input: clients are vertices, their
+relationships are links (paper Sec. III-A).  Stored as a canonical undirected
+edge list plus a CSR view for fast neighbor iteration.  All host-side
+scheduling (GLAD) operates on numpy; the JAX models consume the exported
+arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+def _canonicalize(edges: np.ndarray, n: int) -> np.ndarray:
+    """Dedup + sort an undirected edge list; drop self loops."""
+    if edges.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    e = e[e[:, 0] != e[:, 1]]
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    key = lo * n + hi
+    _, idx = np.unique(key, return_index=True)
+    return np.stack([lo[idx], hi[idx]], axis=1)
+
+
+@dataclasses.dataclass
+class DataGraph:
+    """Undirected attributed graph (clients + links).
+
+    ``edge_weights`` (optional, aligned with the canonical ``edges`` order)
+    generalizes the paper's unit links: C_T charges tau * weight per cut
+    link.  Used by the MoE expert-placement mapping (co-activation counts).
+    """
+
+    n: int
+    edges: np.ndarray                      # (E, 2) canonical u < v
+    features: Optional[np.ndarray] = None  # (n, d) float32
+    labels: Optional[np.ndarray] = None    # (n,) int64
+    coords: Optional[np.ndarray] = None    # (n, 2) client locations
+    edge_weights: Optional[np.ndarray] = None   # (E,) aligned with edges
+
+    # CSR views (built lazily)
+    _indptr: Optional[np.ndarray] = None
+    _indices: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.edges = _canonicalize(self.edges, self.n)
+
+    def weights_or_ones(self) -> np.ndarray:
+        if self.edge_weights is None:
+            return np.ones(len(self.edges))
+        return self.edge_weights
+
+    # ------------------------------------------------------------------ CSR
+    def _build_csr(self) -> None:
+        src = np.concatenate([self.edges[:, 0], self.edges[:, 1]])
+        dst = np.concatenate([self.edges[:, 1], self.edges[:, 0]])
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        self._indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(self._indptr, src + 1, 1)
+        self._indptr = np.cumsum(self._indptr)
+        self._indices = dst
+
+    @property
+    def indptr(self) -> np.ndarray:
+        if self._indptr is None:
+            self._build_csr()
+        return self._indptr
+
+    @property
+    def indices(self) -> np.ndarray:
+        if self._indices is None:
+            self._build_csr()
+        return self._indices
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        deg = np.zeros(self.n, dtype=np.int64)
+        if self.num_edges:
+            np.add.at(deg, self.edges[:, 0], 1)
+            np.add.at(deg, self.edges[:, 1], 1)
+        return deg
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    # ------------------------------------------------------------ mutation
+    def with_changes(
+        self,
+        add_edges: Optional[np.ndarray] = None,
+        del_edges: Optional[np.ndarray] = None,
+        add_vertices: int = 0,
+        del_vertices: Optional[np.ndarray] = None,
+        new_features: Optional[np.ndarray] = None,
+        new_coords: Optional[np.ndarray] = None,
+    ) -> "DataGraph":
+        """Return an evolved copy (paper Sec. V-A: vertex/link insert/delete).
+
+        Deleted vertices keep their index slot (isolated, masked) so that
+        layout vectors stay aligned across time slots; this mirrors a client
+        leaving the service while the id space persists.
+        """
+        n = self.n + add_vertices
+        edges = self.edges
+        if del_edges is not None and len(del_edges):
+            de = _canonicalize(np.asarray(del_edges), n)
+            key = edges[:, 0] * n + edges[:, 1]
+            dkey = de[:, 0] * n + de[:, 1]
+            edges = edges[~np.isin(key, dkey)]
+        if add_edges is not None and len(add_edges):
+            edges = np.concatenate([edges, np.asarray(add_edges).reshape(-1, 2)])
+        if del_vertices is not None and len(del_vertices):
+            dv = np.asarray(del_vertices)
+            mask = ~(np.isin(edges[:, 0], dv) | np.isin(edges[:, 1], dv))
+            edges = edges[mask]
+
+        feats = self.features
+        if feats is not None and add_vertices:
+            if new_features is None:
+                new_features = np.zeros((add_vertices, feats.shape[1]), feats.dtype)
+            feats = np.concatenate([feats, new_features], axis=0)
+        coords = self.coords
+        if coords is not None and add_vertices:
+            if new_coords is None:
+                new_coords = coords[
+                    np.random.default_rng(0).integers(0, self.n, add_vertices)
+                ]
+            coords = np.concatenate([coords, new_coords], axis=0)
+        labels = self.labels
+        if labels is not None and add_vertices:
+            labels = np.concatenate([labels, np.zeros(add_vertices, labels.dtype)])
+        return DataGraph(n=n, edges=edges, features=feats, labels=labels, coords=coords)
+
+
+# ---------------------------------------------------------------- synthetic
+def synthetic_siot(
+    n: int = 8001,
+    target_links: int = 33509,
+    feat_dim: int = 52,
+    seed: int = 0,
+    area: float = 10.0,
+) -> DataGraph:
+    """SIoT-like graph: long-tail degree distribution (paper Fig. 6),
+    8001 vertices / 33509 links, 52-d features, binary labels.
+
+    Built with a Barabasi-Albert style preferential-attachment process which
+    reproduces the long-tail CDF reported for SIoT.
+    """
+    rng = np.random.default_rng(seed)
+    m = max(1, int(round(target_links / max(n - 1, 1))))  # links per new vertex
+    src, dst = [], []
+    # Seed clique.
+    seed_n = m + 1
+    for a in range(seed_n):
+        for b in range(a + 1, seed_n):
+            src.append(a), dst.append(b)
+    targets = list(range(seed_n)) * 2
+    for v in range(seed_n, n):
+        picks = rng.choice(len(targets), size=m, replace=False)
+        chosen = {targets[p] for p in picks}
+        for u in chosen:
+            src.append(u), dst.append(v)
+            targets.append(u)
+        targets.extend([v] * len(chosen))
+    edges = np.stack([np.array(src), np.array(dst)], axis=1)
+    # Trim / top up to the exact target link count.
+    g = DataGraph(n=n, edges=edges)
+    e = g.edges
+    if len(e) > target_links:
+        keep = rng.choice(len(e), size=target_links, replace=False)
+        e = e[keep]
+    while len(e) < target_links:
+        extra = rng.integers(0, n, size=(target_links - len(e), 2))
+        e = _canonicalize(np.concatenate([e, extra]), n)
+    feats = rng.normal(size=(n, feat_dim)).astype(np.float32)
+    labels = (feats[:, 0] + 0.5 * feats[:, 1] > 0).astype(np.int64)  # public/private
+    coords = rng.uniform(0, area, size=(n, 2)).astype(np.float32)
+    return DataGraph(n=n, edges=e, features=feats, labels=labels, coords=coords)
+
+
+def synthetic_yelp(
+    n: int = 3912,
+    target_links: int = 4677,
+    feat_dim: int = 100,
+    seed: int = 1,
+    area: float = 10.0,
+) -> DataGraph:
+    """Yelp-like graph: sparse with many isolated vertices (paper Fig. 6),
+    3912 vertices / 4677 links, 100-d features (Word2Vec-like), spam labels.
+
+    Links connect reviews by the same user: we emulate by grouping vertices
+    into 'users' with heavy-tailed review counts and forming small cliques.
+    """
+    rng = np.random.default_rng(seed)
+    edges = []
+    v = 0
+    while v < n:
+        c = int(min(n - v, max(1, rng.pareto(2.5) + 1)))
+        group = list(range(v, v + c))
+        for a in range(len(group)):
+            for b in range(a + 1, len(group)):
+                edges.append((group[a], group[b]))
+        v += c
+    edges = np.array(edges, dtype=np.int64) if edges else np.zeros((0, 2), np.int64)
+    g = DataGraph(n=n, edges=edges)
+    e = g.edges
+    if len(e) > target_links:
+        keep = rng.choice(len(e), size=target_links, replace=False)
+        e = e[keep]
+    while len(e) < target_links:
+        extra = rng.integers(0, n, size=(target_links - len(e), 2))
+        e = _canonicalize(np.concatenate([e, extra]), n)
+    feats = rng.normal(size=(n, feat_dim)).astype(np.float32)
+    labels = (rng.uniform(size=n) < 0.15).astype(np.int64)  # spam ratio
+    # Clients' spatial coords synthesized from a taxi-trace-like mixture
+    # ("workload composition", paper Sec. VI-A): dense downtown + sparse tail.
+    centers = rng.uniform(0, area, size=(8, 2))
+    which = rng.integers(0, 8, size=n)
+    coords = centers[which] + rng.normal(scale=0.6, size=(n, 2))
+    solitary = rng.uniform(size=n) < 0.1
+    coords[solitary] = rng.uniform(-area * 0.3, area * 1.3, size=(solitary.sum(), 2))
+    return DataGraph(
+        n=n, edges=e, features=feats, labels=labels, coords=coords.astype(np.float32)
+    )

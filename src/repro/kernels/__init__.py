@@ -1,0 +1,10 @@
+from repro.kernels.ops import (
+    BSRAggregate, aggregate_features, attention, on_tpu,
+)
+from repro.kernels.gnn_aggregate import build_bsr, bsr_density, spmm
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = [
+    "BSRAggregate", "aggregate_features", "attention", "on_tpu",
+    "build_bsr", "bsr_density", "spmm", "flash_attention",
+]

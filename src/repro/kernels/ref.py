@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------- gnn_aggregate (SpMM)
+def spmm_ref(values, block_cols, feats, bm: int, bk: int):
+    """Block-sparse A @ H oracle.
+
+    values:     (n_dst_blocks * max_blocks, bm, bk) dense link blocks
+    block_cols: (n_dst_blocks, max_blocks) source block-row ids (0 pad; padded
+                entries have all-zero values so they contribute nothing)
+    feats:      (n_src_blocks * bk, d)
+    Returns (n_dst_blocks * bm, d).
+    """
+    n_dst_blocks, max_blocks = block_cols.shape
+    d = feats.shape[1]
+    out = jnp.zeros((n_dst_blocks * bm, d), feats.dtype)
+    vals = values.reshape(n_dst_blocks, max_blocks, bm, bk)
+    for i in range(n_dst_blocks):
+        acc = jnp.zeros((bm, d), jnp.float32)
+        for j in range(max_blocks):
+            src = block_cols[i, j]
+            blk = jax.lax.dynamic_slice(feats, (src * bk, 0), (bk, d))
+            acc = acc + vals[i, j].astype(jnp.float32) @ blk.astype(jnp.float32)
+        out = out.at[i * bm:(i + 1) * bm].set(acc.astype(feats.dtype))
+    return out
+
+
+def segment_sum_ref(messages, dst, n: int):
+    """Edge-list aggregation oracle: sum messages per destination."""
+    return jax.ops.segment_sum(messages, dst, num_segments=n)
+
+
+# -------------------------------------------------------------- flash attention
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None,
+                  kv_len: jnp.ndarray | None = None):
+    """Reference softmax attention.
+
+    q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D).  GQA: Hq % Hkv == 0, each kv head
+    serves Hq/Hkv query heads.  ``kv_len`` optionally masks the KV suffix
+    (decode with a padded cache).
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    Lk = k.shape[2]
+    if causal:
+        qi = jnp.arange(Lq)[:, None] + (Lk - Lq)
+        ki = jnp.arange(Lk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    if kv_len is not None:
+        mask = jnp.arange(Lk)[None, None, None, :] < kv_len[:, None, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)

@@ -1,0 +1,147 @@
+"""Input/cache PartitionSpecs per (arch family x shape kind).
+
+Rules (DESIGN.md §5):
+  * batch dims shard over ('pod','data') when divisible, else replicate;
+  * KV caches shard batch normally; the long-context B=1 shape switches to
+    SEQUENCE sharding of the cache (SP) — attention over an S-sharded cache
+    is handled by GSPMD (the softmax reductions pick up all-reduces);
+  * SSM/xLSTM recurrent states shard batch when possible, else heads when
+    divisible, else replicate (they are small).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import LMConfig, ShapeCfg
+from repro.models.transformer import Dist
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def _axes_size(mesh, axes: Tuple[str, ...]) -> int:
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def batch_dim_spec(B: int, dist: Dist):
+    """The sharding of a leading batch dim, or None when not divisible."""
+    bs = _axes_size(dist.mesh, dist.batch_axes)
+    if _div(B, bs):
+        return dist.batch
+    # Try data axis alone (e.g. B=16 on a 2x16x16 mesh).
+    if "data" in dist.mesh.axis_names and _div(B, dist.mesh.shape["data"]):
+        return "data"
+    return None
+
+
+def input_sharding_specs(cfg: LMConfig, shape: ShapeCfg, dist: Dist) -> Dict:
+    B = shape.global_batch
+    b = batch_dim_spec(B, dist)
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": P(b, None)}
+        if shape.kind == "train":
+            specs["labels"] = P(b, None)
+        if cfg.family == "encdec":
+            specs["frames"] = P(b, None, None)
+        if cfg.family == "vlm":
+            specs["patches"] = P(b, None, None)
+        return specs
+    return {"tokens": P(b, None), "cache": cache_specs(cfg, shape, dist)}
+
+
+def cache_specs(cfg: LMConfig, shape: ShapeCfg, dist: Dist) -> Dict:
+    B = shape.global_batch
+    b = batch_dim_spec(B, dist)
+    long_ctx = b is None               # B too small -> sequence-shard
+    m = dist.model_axis
+
+    def heads_spec(h):
+        if _div(h, dist.mesh.shape[m]):
+            return m
+        return None
+
+    def kv_seq_spec():
+        """S-dim sharding of a KV cache.  When kv-heads don't divide the TP
+        axis, split the SEQUENCE over 'model' instead (flash-decoding style:
+        each shard attends over its KV slice; GSPMD all-reduces the softmax
+        stats) — otherwise a replicated cache costs TP-way memory+FLOPs."""
+        axes = []
+        if (long_ctx and "data" in dist.mesh.axis_names
+                and _div(shape.seq_len, dist.mesh.shape["data"])):
+            axes.append("data")
+        if heads_spec(cfg.n_kv_heads) is None and \
+                _div(shape.seq_len, dist.mesh.shape[m]):
+            axes.append(m)
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = P(None, b, kv_seq_spec(), heads_spec(cfg.n_kv_heads), None)
+        return {"k": kv, "v": kv, "len": P(None)}
+    if cfg.family == "encdec":
+        kv = P(None, b, kv_seq_spec(), heads_spec(cfg.n_kv_heads), None)
+        xkv = P(None, b, None, heads_spec(cfg.n_kv_heads), None)
+        return {"k": kv, "v": kv, "xk": xkv, "xv": xkv,
+                "len": P(None), "xlen": P(None)}
+    if cfg.family == "hybrid":
+        din = cfg.ssm_expand * cfg.d_model
+        H = din // cfg.ssm_head_dim
+        # States live model-sharded on heads: the in/out projections are
+        # TP-sharded on din = H*P, so a replicated state forces a gather +
+        # re-scatter around every recurrent update.
+        specs = {
+            "ssm": P(None, b, heads_spec(H), None, None),
+            "conv": P(None, b, None, heads_spec(cfg.ssm_expand * cfg.d_model
+                                                + 2 * cfg.ssm_state)),
+            "len": P(None),
+        }
+        from repro.models.ssm import num_shared_calls
+        if num_shared_calls(cfg):
+            kv = P(None, b, kv_seq_spec(), heads_spec(cfg.n_kv_heads), None)
+            specs["k"] = kv
+            specs["v"] = kv
+        return specs
+    if cfg.family == "ssm":           # xlstm
+        din = (cfg.ssm_expand or 2) * cfg.d_model
+        Pm = din // cfg.n_heads                      # mLSTM head width
+        Ps = cfg.d_model // cfg.n_heads              # sLSTM head width
+        # The matrix memory C (B,H,Pk,Pv) follows the TP sharding of the
+        # q/k/v projections (din over 'model'): shard the value dim so the
+        # recurrent update is local (a replicated state all-gathers 256 MB
+        # x 48 layers per decode step — measured).
+        pv = m if _div(Pm, dist.mesh.shape[m]) else None
+        ps = m if _div(Ps, dist.mesh.shape[m]) else None
+        st = P(None, b, None, ps)
+        # P_v sharding measured 8.4x cheaper than P_k sharding (the k (x) v
+        # update stays local; P_k sharding makes XLA re-gather the state).
+        return {
+            "mC": P(None, b, None, None, pv),
+            "mn": P(None, b, None, pv), "len": P(None),
+            "sh": st, "sc": st, "sn": st, "sm": st,
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_cache_present_keys(cfg: LMConfig) -> Tuple[str, ...]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return ("k", "v", "len")
+    if cfg.family == "encdec":
+        return ("k", "v", "xk", "xv", "len", "xlen")
+    if cfg.family == "hybrid":
+        from repro.models.ssm import num_shared_calls
+        base = ("ssm", "conv", "len")
+        return base + (("k", "v") if num_shared_calls(cfg) else ())
+    if cfg.family == "ssm":
+        from repro.models.xlstm import _layer_kinds
+        base = ("mC", "mn", "len")
+        if "s" in _layer_kinds(cfg):
+            base = base + ("sh", "sc", "sn", "sm")
+        return base
+    raise ValueError(cfg.family)

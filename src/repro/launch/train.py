@@ -1,0 +1,83 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --steps 20 --smoke [--ckpt-dir /tmp/ck] [--resume]
+
+--smoke runs the arch's reduced config on the local device(s) — the same
+code path the pod runs with the full config under make_production_mesh.
+Checkpoints are atomic step directories; --resume restores the latest and
+replays the deterministic data stream from that step.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import models as zoo
+from repro.configs import get_config, get_smoke_config
+from repro.models.common import SHAPES, ShapeCfg
+from repro.models.transformer import Dist
+from repro.train import (CheckpointManager, batch_at_step, init_opt_state,
+                         make_train_step, optim)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    shape = ShapeCfg("cli", args.seq_len, args.batch, "train",
+                     microbatches=args.microbatches)
+    dist = Dist()                                   # local; pods use mesh.py
+
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = optim.for_model(cfg)
+    opt_cfg = dataclasses.replace(opt_cfg, lr=args.lr)
+    state = init_opt_state(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, dist, opt_cfg,
+                                      microbatches=args.microbatches))
+
+    ck = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ck and args.resume and ck.latest_step() is not None:
+        start = ck.latest_step()
+        restored, _ = ck.restore(start, {"p": params, "o": state})
+        params, state = restored["p"], restored["o"]
+        print(f"resumed from step {start}")
+
+    t0 = time.perf_counter()
+    for s in range(start, args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in batch_at_step(cfg, shape, s).items()}
+        params, state, _, m = step_fn(params, state, None, batch)
+        if s % max(1, args.steps // 10) == 0 or s == args.steps - 1:
+            print(f"step {s:5d} loss {float(m['loss']):8.4f} "
+                  f"|g| {float(m['grad_norm']):8.3f}")
+        if ck and (s + 1) % args.ckpt_every == 0:
+            ck.save(s + 1, {"p": params, "o": state})
+    if ck:
+        ck.wait()
+    toks = (args.steps - start) * args.batch * args.seq_len
+    dt = time.perf_counter() - t0
+    print(f"done: {toks} tokens in {dt:.1f}s ({toks / dt:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Model zoo: family registry dispatching to the right implementation."""
+from repro.models.common import LMConfig, SHAPES, ShapeCfg
+from repro.models.transformer import Dist
+from repro.models import encdec, ssm, transformer, xlstm
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": ssm,
+    "ssm": xlstm,
+    "encdec": encdec,
+}
+
+
+def family_module(cfg: LMConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(cfg, key):
+    return family_module(cfg).init_params(cfg, key)
+
+
+def param_specs(cfg, dist):
+    return family_module(cfg).param_specs(cfg, dist)
+
+
+def forward(cfg, params, batch, dist=Dist()):
+    return family_module(cfg).forward(cfg, params, batch, dist)
+
+
+def loss_fn(cfg, params, batch, dist=Dist()):
+    return family_module(cfg).loss_fn(cfg, params, batch, dist)
+
+
+def prefill(cfg, params, batch, max_len, dist=Dist()):
+    return family_module(cfg).prefill(cfg, params, batch, max_len, dist)
+
+
+def decode_step(cfg, params, tokens, cache, dist=Dist()):
+    return family_module(cfg).decode_step(cfg, params, tokens, cache, dist)
+
+
+def init_cache(cfg, batch, max_len):
+    mod = family_module(cfg)
+    if hasattr(mod, "init_cache"):
+        return mod.init_cache(cfg, batch, max_len)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+__all__ = [
+    "LMConfig", "SHAPES", "ShapeCfg", "Dist", "family_module", "init_params",
+    "param_specs", "forward", "loss_fn", "prefill", "decode_step",
+    "init_cache", "encdec", "ssm", "transformer", "xlstm",
+]

@@ -1,0 +1,343 @@
+"""Shared LM substrate: config, sharding vocabulary, core blocks.
+
+Sharding vocabulary (GSPMD, driven by with_sharding_constraint):
+  batch   -> ('pod', 'data')     activations' batch dim
+  heads / d_ff / vocab -> 'model' tensor parallel dim
+  experts -> 'model'              expert parallel (MoE layers, shard_map)
+  params  -> FSDP over 'data' on the largest non-TP dim
+
+Attention runs through a KV-chunked online-softmax path (pure jnp lax.scan)
+so compiled memory is O(L * chunk), never O(L^2); on TPU the Pallas
+flash_attention kernel takes over (same math, kernels/flash_attention.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+
+
+# ------------------------------------------------------------------- configs
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """One assigned architecture.  Fields cover every family; unused ones
+    stay at their defaults (e.g. MoE fields for dense archs)."""
+
+    name: str
+    family: str                    # dense | moe | hybrid | encdec | vlm | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    qkv_bias: bool = False         # qwen-style
+    rope_theta: float = 500_000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    first_dense_layers: int = 0    # deepseek: layer 0 is dense FFN
+    capacity_factor: float = 2.0
+
+    # SSM / hybrid (zamba2 Mamba2 blocks)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    attn_every: int = 0            # hybrid: shared attn block cadence
+
+    # xLSTM
+    slstm_every: int = 0           # one sLSTM block per this many mLSTM
+
+    # enc-dec
+    n_enc_layers: int = 0
+    frontend_dim: int = 0          # audio/vision stub embedding width
+    frontend_len: int = 0          # frames / patches per example
+
+    # numerics / execution
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    attn_chunk: int = 1024
+    optimizer: str = "adamw"       # adamw | lion (memory-light for 1T MoE)
+    # ZeRO sharding also over the 'pod' axis (cross-pod DCN all-gathers in
+    # exchange for halved state residency — the 1T MoE needs it).
+    fsdp_over_pod: bool = False
+    # Per-arch gradient-accumulation override (0 = use the shape default).
+    # Trades activation residency against step granularity; the no-remat
+    # configs raise it so one microbatch's activations fit HBM.
+    train_microbatches: int = 0
+    # Analysis mode: fully unroll layer/microbatch scans so that XLA's
+    # cost_analysis and the HLO collective scrape count every iteration
+    # (scan bodies are otherwise counted ONCE — verified on XLA:CPU).
+    analysis_unroll: bool = False
+
+    def scan_unroll(self, length: int) -> int:
+        return length if self.analysis_unroll else 1
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def params_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline accounting)."""
+        d, hd = self.d_model, self.hd
+        att = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.family in ("ssm",):      # xlstm: mLSTM blocks, no std attn
+            att = 0
+        mlp_dense = 3 * d * self.d_ff if self.d_ff else 0
+        per_layer = att + mlp_dense + 2 * d
+        total = self.n_layers * per_layer
+        if self.n_experts:
+            moe_layers = self.n_layers - self.first_dense_layers
+            per_exp = 3 * d * self.expert_d_ff
+            total = (
+                self.first_dense_layers * (att + mlp_dense + 2 * d)
+                + moe_layers * (att + 2 * d
+                                + (self.n_experts + self.n_shared_experts)
+                                * per_exp
+                                + d * self.n_experts)   # router
+            )
+        if self.family == "ssm":
+            din = self.ssm_expand * d
+            per = d * 2 * din + din * d + 2 * d        # mLSTM-ish in/out
+            total = self.n_layers * per
+        if self.family == "hybrid":
+            din = self.ssm_expand * d
+            nh = din // self.ssm_head_dim
+            mamba = (d * (2 * din + 2 * self.ssm_state + nh) + din * d + 2 * d)
+            shared = att + 3 * d * self.d_ff + 2 * d
+            total = self.n_layers * mamba + shared
+        if self.n_enc_layers:
+            total += self.n_enc_layers * (att + 3 * d * self.d_ff + 2 * d) \
+                + self.n_layers * (att + 2 * d)        # dec cross-attn extra
+        total += self.vocab * d * (1 if self.tie_embeddings else 2)
+        return int(total)
+
+
+def sharded_ce_loss(logits, labels, aux=0.0, aux_weight: float = 0.0):
+    """Cross entropy that never gathers the vocab-sharded logits.
+
+    take_along_axis over a sharded axis makes GSPMD all-gather the full
+    (B, L, V) fp32 logits (31 GB/device for llama train_4k — measured).
+    Formulating the gold logit as a masked reduction and the logsumexp as
+    local-max/local-sum keeps every op shardable on V; the only collectives
+    are (B, L)-sized all-reduces.  labels: -100 = ignore.
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    l32 = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(l32, axis=-1))
+    s = jnp.sum(jnp.exp(l32 - m[..., None]), axis=-1)
+    lse = m + jnp.log(s)
+    iota = jax.lax.broadcasted_iota(jnp.int32, l32.shape, l32.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], l32, 0.0), axis=-1)
+    nll = (lse - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux
+
+
+def scan_layers(analysis_unroll: bool, body, carry, xs, length: int):
+    """lax.scan normally; a PYTHON loop in analysis mode.
+
+    scan(unroll=n) is not enough for cost accounting: the TRANSPOSE scan of
+    reverse-mode AD keeps unroll=1, so backward FLOPs still vanish from
+    cost_analysis.  A python loop inlines both directions.
+    """
+    if not analysis_unroll:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        sl = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+    microbatches: int = 1
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train", microbatches=4),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ------------------------------------------------------------------ sharding
+def wsc(x, *spec):
+    """with_sharding_constraint that no-ops outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def batch_spec(*rest) -> P:
+    return P(BATCH_AXES, *rest)
+
+
+# ------------------------------------------------------------- building blocks
+def rms_norm(x, g, eps: float):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * g.astype(x.dtype)
+
+
+def rope_tables(positions, hd: int, theta: float, dtype=jnp.float32):
+    """positions (...,) -> cos/sin (..., hd//2)."""
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., L, H, hd); cos/sin (..., L, 1, hd//2) broadcastable."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                      kv_len=None, scale: Optional[float] = None,
+                      unroll: bool = False):
+    """Online-softmax attention, O(Lq * chunk) memory, differentiable.
+
+    q (B, Lq, Hq, D); k/v (B, Lk, Hkv, D); kv_len (B,) live KV prefix.
+    GQA folds q heads onto kv heads without materializing repeats.
+    """
+    B, Lq, Hq, D = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Lq, Hkv, g, D) * jnp.asarray(scale, q.dtype)
+
+    nchunks = (Lk + chunk - 1) // chunk
+    pad = nchunks * chunk - Lk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, Hkv, D)
+    vc = v.reshape(B, nchunks, chunk, Hkv, D)
+    live = jnp.full((B,), Lk, jnp.int32) if kv_len is None else kv_len
+    q_pos = jnp.arange(Lq) + (Lk - Lq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, j = inp
+        s = jnp.einsum("blhgd,bchd->blhgc", qg, kb,
+                       preferred_element_type=jnp.float32)
+        k_pos = j * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] < live[:, None]                 # (B, chunk)
+        if causal:
+            cm = k_pos[None, :] <= q_pos[:, None]             # (Lq, chunk)
+            mask = mask[:, None, :] & cm[None]                # (B, Lq, chunk)
+            mask = mask[:, :, None, None, :]
+        else:
+            mask = mask[:, None, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("blhgc,bchd->blhgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Lq, Hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Lq, Hkv, g), jnp.float32)
+    a0 = jnp.zeros((B, Lq, Hkv, g, D), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    if unroll:
+        # Analysis mode: python loop so forward AND backward FLOPs of every
+        # chunk appear in cost_analysis (see scan_layers).
+        carry = (m0, l0, a0)
+        for j in range(nchunks):
+            carry, _ = step(carry, (kc_t[j], vc_t[j], jnp.asarray(j)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), (kc_t, vc_t, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Lq, Hq, D).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, kv_len=None,
+                   scale: Optional[float] = None):
+    """Direct einsum attention for short L (decode steps, smoke tests)."""
+    B, Lq, Hq, D = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Lq, Hkv, g, D)
+    s = jnp.einsum("blhgd,bkhd->blhgk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(Lq) + (Lk - Lq)
+    k_pos = jnp.arange(Lk)
+    if causal:
+        cm = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(cm[None, :, None, None, :], s, -1e30)
+    if kv_len is not None:
+        lm = k_pos[None, :] < kv_len[:, None]
+        s = jnp.where(lm[:, None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("blhgk,bkhd->blhgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Lq, Hq, D).astype(q.dtype)
+
+
+def attention_any(q, k, v, *, causal: bool, chunk: int, kv_len=None,
+                  unroll: bool = False):
+    """Pick the chunked path when the KV extent warrants it."""
+    if k.shape[1] > 2 * chunk:
+        return chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                 kv_len=kv_len, unroll=unroll)
+    return full_attention(q, k, v, causal=causal, kv_len=kv_len)
+
+
+# --------------------------------------------------------------- param utils
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def abstract_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype), tree)
+
+
+def param_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))

@@ -1,0 +1,274 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, F, frontend_dim), which are projected and
+run through a bidirectional encoder; the decoder stacks causal self-attention
++ cross-attention + FFN.  Decode keeps a growing self-attn KV cache and a
+static cross-attn KV (computed once from the encoder output).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    LMConfig, apply_rope, attention_any, dense_init, full_attention, rms_norm,
+    rope_tables, scan_layers, sharded_ce_loss,
+)
+from repro.models.transformer import Dist, _embed, _unembed, vocab_padded
+
+
+def _attn_shapes(cfg: LMConfig):
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": (d, cfg.n_heads * hd), "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd), "wo": (cfg.n_heads * hd, d),
+    }
+
+
+def _enc_layer_shapes(cfg):
+    d = cfg.d_model
+    return {"ln1": (d,), "ln2": (d,), **_attn_shapes(cfg),
+            "w13": (d, 2 * cfg.d_ff), "w2": (cfg.d_ff, d)}
+
+
+def _dec_layer_shapes(cfg):
+    d = cfg.d_model
+    base = _enc_layer_shapes(cfg)
+    base.update({"ln_x": (d,)})
+    base.update({f"x_{k}": v for k, v in _attn_shapes(cfg).items()})
+    return base
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    vp = vocab_padded(cfg)
+    pdt = cfg.param_dtype
+
+    def stack(key, shapes, n):
+        out = {}
+        for name, shp in shapes.items():
+            key, sub = jax.random.split(key)
+            if name.startswith("ln"):
+                out[name] = jnp.ones((n,) + shp, pdt)
+            else:
+                out[name] = (jax.random.normal(sub, (n,) + shp)
+                             * shp[-2] ** -0.5).astype(pdt)
+        return out
+
+    key, ke, ku, kf, k1, k2 = jax.random.split(key, 6)
+    return {
+        "embed": dense_init(ke, (vp, cfg.d_model), pdt, scale=0.02),
+        "unembed": dense_init(ku, (cfg.d_model, vp), pdt, scale=0.02),
+        "frontend_proj": dense_init(kf, (cfg.frontend_dim, cfg.d_model), pdt),
+        "enc_norm": jnp.ones((cfg.d_model,), pdt),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+        "encoder": stack(k1, _enc_layer_shapes(cfg), cfg.n_enc_layers),
+        "decoder": stack(k2, _dec_layer_shapes(cfg), cfg.n_layers),
+    }
+
+
+def param_specs(cfg: LMConfig, dist: Dist) -> Dict:
+    m, da = dist.model_axis, dist.data_axis
+    att = {"wq": P(None, da, m), "wk": P(None, da, m), "wv": P(None, da, m),
+           "wo": P(None, m, da)}
+    enc = {"ln1": P(None, None), "ln2": P(None, None), **att,
+           "w13": P(None, da, m), "w2": P(None, m, da)}
+    dec = dict(enc)
+    dec.update({"ln_x": P(None, None)})
+    dec.update({f"x_{k}": v for k, v in att.items()})
+    return {
+        "embed": P(None, m), "unembed": P(da, m),
+        "frontend_proj": P(None, m),
+        "enc_norm": P(None), "final_norm": P(None),
+        "encoder": enc, "decoder": dec,
+    }
+
+
+def _mha(cfg, p, prefix, x, kv_src, dist, cos_q, sin_q, cos_k, sin_k,
+         causal, cache=None, cache_at=None, kv_len=None, rope: bool = True):
+    B, L, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    w = lambda n: p[prefix + n].astype(x.dtype)
+    q = (x @ w("wq")).reshape(B, L, H, hd)
+    if kv_src is not None:
+        Lk = kv_src.shape[1]
+        k = (kv_src @ w("wk")).reshape(B, Lk, Hkv, hd)
+        v = (kv_src @ w("wv")).reshape(B, Lk, Hkv, hd)
+    else:
+        k = v = None
+    if rope:
+        q = apply_rope(q, cos_q[:, :, None, :], sin_q[:, :, None, :])
+        if k is not None:
+            k = apply_rope(k, cos_k[:, :, None, :], sin_k[:, :, None, :])
+    if cache is not None:
+        ck, cv = cache
+        if k is not None:                      # self-attn decode: append
+            if jnp.ndim(cache_at) == 0:
+                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                                  (0, cache_at, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                                  (0, cache_at, 0, 0))
+            else:                              # per-row (continuous batching)
+                rows = jnp.arange(B)[:, None]
+                cols = cache_at[:, None] + jnp.arange(L)[None, :]
+                ck = ck.at[rows, cols].set(k.astype(ck.dtype))
+                cv = cv.at[rows, cols].set(v.astype(cv.dtype))
+        out = full_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                             causal=False, kv_len=kv_len)
+        kv_out = (ck, cv)
+    else:
+        out = attention_any(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                            unroll=cfg.analysis_unroll)
+        kv_out = (k, v)
+    out = out.reshape(B, L, H * hd)
+    out = dist.wsc(out, dist.batch, None, dist.model_axis)
+    return out @ w("wo"), kv_out
+
+
+def _ffn(cfg, p, x, dist):
+    hh = x @ p["w13"].astype(x.dtype)
+    hh = dist.wsc(hh, dist.batch, None, dist.model_axis)
+    g, u = jnp.split(hh, 2, axis=-1)
+    act = (jax.nn.silu(g.astype(jnp.float32)) *
+           u.astype(jnp.float32)).astype(x.dtype)
+    return act @ p["w2"].astype(x.dtype)
+
+
+def encode(cfg: LMConfig, params, frames, dist: Dist = Dist()):
+    """frames (B, F, frontend_dim) -> encoder memory (B, F, d)."""
+    x = frames.astype(cfg.dtype) @ params["frontend_proj"].astype(cfg.dtype)
+    x = dist.wsc(x, dist.batch, None, None)
+    B, F, _ = x.shape
+    pos = jnp.arange(F)[None, :]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+
+    def body(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = _mha(cfg, p, "", h, h, dist, cos, sin, cos, sin, causal=False)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + _ffn(cfg, p, h, dist), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_layers(cfg.analysis_unroll, body, x, params["encoder"],
+                       cfg.n_enc_layers)
+    return rms_norm(x, params["enc_norm"].astype(cfg.dtype), cfg.norm_eps)
+
+
+def _decoder_stack(cfg, params, x, memory, dist, cos, sin, cos_m, sin_m,
+                   cache=None, cache_at=None, kv_len=None):
+    def body(x, sl):
+        if cache is not None:
+            p, ck, cv, xk, xv = sl
+        else:
+            p = sl
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cache is not None:
+            a, (k2, v2) = _mha(cfg, p, "", h, h, dist, cos, sin, cos, sin,
+                               causal=False, cache=(ck, cv),
+                               cache_at=cache_at, kv_len=kv_len)
+        else:
+            a, (k2, v2) = _mha(cfg, p, "", h, h, dist, cos, sin, cos, sin,
+                               causal=True)
+        x = x + a
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if cache is not None:
+            a, _ = _mha(cfg, p, "x_", h, None, dist, cos, sin, cos_m, sin_m,
+                        causal=False, cache=(xk, xv), rope=False)
+        else:
+            a, (xk2, xv2) = _mha(cfg, p, "x_", h, memory, dist, cos, sin,
+                                 cos_m, sin_m, causal=False, rope=False)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _ffn(cfg, p, h, dist)
+        if cache is not None:
+            return x, (k2, v2)
+        return x, (k2, v2, xk2, xv2)
+
+    if cache is not None:
+        xs = (params["decoder"], cache["k"], cache["v"],
+              cache["xk"], cache["xv"])
+    else:
+        xs = params["decoder"]
+        if cfg.remat:
+            body = jax.checkpoint(body)
+    return scan_layers(cfg.analysis_unroll, body, x, xs, cfg.n_layers)
+
+
+def forward(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist()):
+    """batch: {'frames': (B,F,fd), 'tokens': (B,L)} -> (logits, 0.0)."""
+    memory = encode(cfg, params, batch["frames"], dist)
+    x = _embed(cfg, params, batch["tokens"], dist)
+    B, L, _ = x.shape
+    Fm = memory.shape[1]
+    cos, sin = rope_tables(jnp.arange(L)[None], cfg.hd, cfg.rope_theta,
+                           cfg.dtype)
+    cos_m, sin_m = rope_tables(jnp.arange(Fm)[None], cfg.hd, cfg.rope_theta,
+                               cfg.dtype)
+    x, _ = _decoder_stack(cfg, params, x, memory, dist, cos, sin, cos_m, sin_m)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    return _unembed(cfg, params, x, dist), 0.0
+
+
+def loss_fn(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist(), **_):
+    logits, _ = forward(cfg, params, batch, dist)
+    return sharded_ce_loss(logits, batch["labels"])
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    """Self-attn cache grows to max_len; cross-attn KV is sized by the
+    (stub) frontend length."""
+    F = cfg.frontend_len
+    kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    xkv = (cfg.n_layers, batch, F, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(kv, cfg.dtype), "v": jnp.zeros(kv, cfg.dtype),
+        "xk": jnp.zeros(xkv, cfg.dtype), "xv": jnp.zeros(xkv, cfg.dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+        "xlen": jnp.full((batch,), F, jnp.int32),
+    }
+
+
+def prefill(cfg: LMConfig, params, batch: Dict, max_len: int,
+            dist: Dist = Dist()):
+    """Encode + run the target prefix; build self+cross caches."""
+    memory = encode(cfg, params, batch["frames"], dist)
+    x = _embed(cfg, params, batch["tokens"], dist)
+    B, L, _ = x.shape
+    Fm = memory.shape[1]
+    cos, sin = rope_tables(jnp.arange(L)[None], cfg.hd, cfg.rope_theta,
+                           cfg.dtype)
+    cos_m, sin_m = rope_tables(jnp.arange(Fm)[None], cfg.hd, cfg.rope_theta,
+                               cfg.dtype)
+    x, (k, v, xk, xv) = _decoder_stack(cfg, params, x, memory, dist, cos, sin,
+                                       cos_m, sin_m)
+    pad = max_len - L
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = _unembed(cfg, params, x[:, -1:], dist)
+    cache = {"k": k, "v": v, "xk": xk, "xv": xv,
+             "len": jnp.full((B,), L, jnp.int32),
+             "xlen": jnp.full((B,), Fm, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache, dist: Dist = Dist()):
+    x = _embed(cfg, params, tokens, dist)
+    cur = cache["len"]                         # per-row offsets (ragged slots)
+    pos = cache["len"][:, None]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+    kv_len = cache["len"] + 1
+    x, (k2, v2) = _decoder_stack(
+        cfg, params, x, None, dist, cos, sin, None, None,
+        cache=cache, cache_at=cur, kv_len=kv_len)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = _unembed(cfg, params, x, dist)
+    new = dict(cache)
+    new["k"], new["v"] = k2, v2
+    new["len"] = cache["len"] + 1
+    return logits, new

@@ -1,0 +1,436 @@
+"""Mamba2 (SSD) blocks and the Zamba2-style hybrid stack.
+
+Mamba2 layer = in_proj -> causal depthwise conv (x,B,C) -> selective SSM with
+scalar-per-head decay (the SSD formulation) -> gated out_proj.  Training uses
+the chunkwise-parallel SSD algorithm (intra-chunk quadratic + inter-chunk
+state recurrence, O(L * chunk) memory); decode keeps a recurrent state
+(B, H, P, N) + a conv tail — O(1) per token, which is what makes the
+``long_500k`` shape runnable for this family.
+
+Zamba2 hybrid: a stack of Mamba2 blocks with ONE shared attention+MLP block
+(weights reused) applied every ``attn_every`` layers on concat(hidden,
+embedding) — per arXiv:2411.15242.  The shared block's KV cache is kept per
+invocation site.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (
+    LMConfig, apply_rope, attention_any, dense_init, full_attention, rms_norm,
+    rope_tables, scan_layers, sharded_ce_loss,
+)
+from repro.models.transformer import (
+    Dist, _attn, _ffn_dense, _embed, _unembed, vocab_padded,
+)
+
+SSD_CHUNK = 128
+
+
+# ------------------------------------------------------------- mamba2 (SSD)
+def _mamba_dims(cfg: LMConfig):
+    din = cfg.ssm_expand * cfg.d_model
+    H = din // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = din + 2 * N
+    return din, H, N, conv_ch
+
+
+def mamba_layer_shapes(cfg: LMConfig):
+    d = cfg.d_model
+    din, H, N, conv_ch = _mamba_dims(cfg)
+    return {
+        "norm": (d,),
+        "in_proj": (d, 2 * din + 2 * N + H),
+        "conv_w": (cfg.ssm_conv, conv_ch),
+        "conv_b": (conv_ch,),
+        "A_log": (H,),
+        "D": (H,),
+        "dt_bias": (H,),
+        "out_proj": (din, d),
+    }
+
+
+def _ssd_chunked(xbar, loga, Bm, Cm, state0=None, chunk=SSD_CHUNK):
+    """Chunkwise SSD scan.
+
+    xbar (B, L, H, P): dt-scaled inputs;  loga (B, L, H): per-step log decay;
+    Bm/Cm (B, L, N): input/output projections (single group).
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).
+    """
+    Bsz, L, H, Pd = xbar.shape
+    N = Bm.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    C_ = xbar.shape[1] // chunk
+    xb = xbar.reshape(Bsz, C_, chunk, H, Pd)
+    la = loga.reshape(Bsz, C_, chunk, H)
+    Bc = Bm.reshape(Bsz, C_, chunk, N)
+    Cc = Cm.reshape(Bsz, C_, chunk, N)
+
+    cum = jnp.cumsum(la, axis=2)                               # (B,C,Q,H)
+    total = cum[:, :, -1]                                      # (B,C,H)
+    # Intra-chunk: scores[t,s] = (C_t . B_s) exp(cum[t]-cum[s]) [s<=t]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,C,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    dec = jnp.exp(seg)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)                 # (B,C,Q,Q)
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", cb, dec, xb)
+    # Chunk-local states: S_c = sum_s exp(total - cum[s]) B_s (x) xbar[s]
+    w = jnp.exp(total[:, :, None, :] - cum)                    # (B,C,Q,H)
+    S_loc = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bc, w, xb)    # (B,C,H,N,P)
+
+    # Inter-chunk recurrence over C (sequential scan, C_ steps).
+    def scan_fn(S_prev, inp):
+        S_l, tot = inp                                         # (B,H,N,P),(B,H)
+        S_new = S_prev * jnp.exp(tot)[:, :, None, None] + S_l
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((Bsz, H, N, Pd), xbar.dtype)
+          if state0 is None else state0)
+    S_final, S_prevs = jax.lax.scan(
+        scan_fn, S0,
+        (jnp.moveaxis(S_loc, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                      # (B,C,H,N,P)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, jnp.exp(cum), S_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, C_ * chunk, H, Pd)
+    return y[:, :L], S_final
+
+
+def mamba_forward(cfg: LMConfig, p, x, dist: Dist, state=None,
+                  conv_tail=None):
+    """One Mamba2 block.  x (B, L, d) -> (out, (ssm_state, conv_tail)).
+
+    ``state``/``conv_tail`` given -> recurrent decode semantics (L small).
+    """
+    Bsz, L, d = x.shape
+    din, H, N, conv_ch = _mamba_dims(cfg)
+    h = rms_norm(x, p["norm"].astype(x.dtype), cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"].astype(h.dtype)
+    zxbcdt = dist.wsc(zxbcdt, dist.batch, None, dist.model_axis)
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)          # (B,L,conv_ch)
+    K = cfg.ssm_conv
+    if conv_tail is not None:
+        ctx = jnp.concatenate([conv_tail, conv_in], axis=1)    # (B,K-1+L,ch)
+        new_tail = ctx[:, -(K - 1):]
+    else:
+        ctx = jnp.pad(conv_in, ((0, 0), (K - 1, 0), (0, 0)))
+        new_tail = ctx[:, -(K - 1):]
+    # Depthwise causal conv: stack K shifted views.
+    conv = sum(ctx[:, k:k + L] * p["conv_w"].astype(x.dtype)[k][None, None]
+               for k in range(K)) + p["conv_b"].astype(x.dtype)
+    conv = jax.nn.silu(conv)
+    xin, Bm, Cm = jnp.split(conv, [din, din + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,L,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,) < 0
+    loga = dt * A[None, None]                                  # (B,L,H)
+    xh = xin.reshape(Bsz, L, H, cfg.ssm_head_dim)
+    xbar = xh * dt[..., None].astype(xh.dtype)
+
+    if state is not None and L == 1:
+        # Recurrent step: S' = exp(loga) S + B (x) xbar; y = C . S'
+        Sn = (state * jnp.exp(loga)[:, 0, :, None, None]
+              + jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                           xbar[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), Sn)
+        y = y[:, None]
+        S_final = Sn
+    else:
+        y, S_final = _ssd_chunked(
+            xbar.astype(jnp.float32), loga, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32), state0=state)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :,
+                                                                None]
+    y = y.reshape(Bsz, L, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = dist.wsc(y, dist.batch, None, dist.model_axis)
+    return x + y @ p["out_proj"].astype(x.dtype), (S_final, new_tail)
+
+
+# --------------------------------------------------------------- zamba2 stack
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    vp = vocab_padded(cfg)
+    din, H, N, conv_ch = _mamba_dims(cfg)
+    key, ke, km, ks, kp = jax.random.split(key, 5)
+    pdt = cfg.param_dtype
+
+    shapes = mamba_layer_shapes(cfg)
+    stack = {}
+    for name, shp in shapes.items():
+        key, sub = jax.random.split(key)
+        if name == "norm":
+            stack[name] = jnp.ones((cfg.n_layers,) + shp, pdt)
+        elif name == "A_log":
+            a0 = jnp.log(jnp.linspace(1.0, 16.0, shp[0]))
+            stack[name] = jnp.tile(a0[None], (cfg.n_layers, 1)).astype(pdt)
+        elif name == "D":
+            stack[name] = jnp.ones((cfg.n_layers,) + shp, pdt)
+        elif name in ("conv_b", "dt_bias"):
+            stack[name] = jnp.zeros((cfg.n_layers,) + shp, pdt)
+        elif name == "conv_w":
+            stack[name] = (jax.random.normal(sub, (cfg.n_layers,) + shp)
+                           * 0.1).astype(pdt)
+        else:
+            stack[name] = (jax.random.normal(sub, (cfg.n_layers,) + shp)
+                           * shp[0] ** -0.5).astype(pdt)
+
+    params = {
+        "embed": dense_init(ke, (vp, cfg.d_model), pdt, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+        "mamba": stack,
+    }
+    if not cfg.tie_embeddings:
+        key, ku = jax.random.split(key)
+        params["unembed"] = dense_init(ku, (cfg.d_model, vp), pdt, scale=0.02)
+    if cfg.attn_every:
+        d = cfg.d_model
+        hd = cfg.hd
+        sk = jax.random.split(ks, 8)
+        params["shared"] = {
+            "concat_proj": dense_init(sk[0], (2 * d, d), pdt),
+            "ln1": jnp.ones((d,), pdt), "ln2": jnp.ones((d,), pdt),
+            "wq": dense_init(sk[1], (d, cfg.n_heads * hd), pdt),
+            "wk": dense_init(sk[2], (d, cfg.n_kv_heads * hd), pdt),
+            "wv": dense_init(sk[3], (d, cfg.n_kv_heads * hd), pdt),
+            "wo": dense_init(sk[4], (cfg.n_heads * hd, d), pdt),
+            "w13": dense_init(sk[5], (d, 2 * cfg.d_ff), pdt),
+            "w2": dense_init(sk[6], (cfg.d_ff, d), pdt),
+        }
+    return params
+
+
+def param_specs(cfg: LMConfig, dist: Dist) -> Dict:
+    from jax.sharding import PartitionSpec as P
+    m, da = dist.model_axis, dist.data_axis
+    stack = {
+        "norm": P(None, None),
+        "in_proj": P(None, da, m),
+        "conv_w": P(None, None, m),
+        "conv_b": P(None, m),
+        "A_log": P(None, None), "D": P(None, None), "dt_bias": P(None, None),
+        "out_proj": P(None, m, da),
+    }
+    specs = {"embed": P(None, m), "final_norm": P(None), "mamba": stack}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(da, m)
+    if cfg.attn_every:
+        specs["shared"] = {
+            "concat_proj": P(da, m),
+            "ln1": P(None), "ln2": P(None),
+            "wq": P(da, m), "wk": P(da, m), "wv": P(da, m), "wo": P(m, da),
+            "w13": P(da, m), "w2": P(m, da),
+        }
+    return specs
+
+
+def _shared_block(cfg, sp, x, x0, dist, cos, sin, cache=None, cache_at=None,
+                  kv_len=None):
+    """Zamba2 shared attention+MLP on concat(hidden, embedding)."""
+    h = jnp.concatenate([x, x0], axis=-1) @ sp["concat_proj"].astype(x.dtype)
+    h, kv = _attn(cfg, sp, h, dist, cos, sin, cache, cache_at, kv_len)
+    h = _ffn_dense(cfg, sp, h, dist)
+    return x + h, kv
+
+
+def num_shared_calls(cfg: LMConfig) -> int:
+    if not cfg.attn_every:
+        return 0
+    return sum(1 for i in range(cfg.n_layers)
+               if (i + 1) % cfg.attn_every == 0)
+
+
+def forward(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist()):
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens, dist)
+    x0 = x
+    B, L, _ = x.shape
+    pos = jnp.arange(L)[None, :]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+    shared = params.get("shared")
+
+    def body(carry, sl):
+        x, idx = carry
+        p = sl
+        x, _ = mamba_forward(cfg, p, x, dist)
+        if shared is not None:
+            x = jax.lax.cond(
+                (idx + 1) % cfg.attn_every == 0,
+                lambda q: _shared_block(cfg, shared, q, x0, dist, cos, sin)[0],
+                lambda q: q, x)
+        return (x, idx + 1), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, _), _ = scan_layers(cfg.analysis_unroll, body, (x, 0),
+                            params["mamba"], cfg.n_layers)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    return _unembed(cfg, params, x, dist), 0.0
+
+
+def loss_fn(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist(), **_):
+    logits, _ = forward(cfg, params, batch, dist)
+    return sharded_ce_loss(logits, batch["labels"])
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    din, H, N, conv_ch = _mamba_dims(cfg)
+    nsh = num_shared_calls(cfg)
+    cache = {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, cfg.ssm_head_dim, N),
+                         jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch),
+                          cfg.dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if nsh:
+        cache["k"] = jnp.zeros((nsh, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                               cfg.dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache, dist: Dist = Dist()):
+    """tokens (B, 1) against recurrent state (+ shared-attn KV cache)."""
+    x = _embed(cfg, params, tokens, dist)
+    x0 = x
+    cur = cache["len"]                         # per-row offsets (ragged slots)
+    pos = cache["len"][:, None]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+    kv_len = cache["len"] + 1
+    shared = params.get("shared")
+    nsh = num_shared_calls(cfg)
+
+    def body(carry, sl):
+        x, idx, sh_idx = carry
+        p, S, tail = sl
+        x, (S2, tail2) = mamba_forward(cfg, p, x, dist, state=S, conv_tail=tail)
+        return (x, idx + 1, sh_idx), (S2, tail2)
+
+    # Mamba layers run in a scan; shared-attn invocations run between scan
+    # segments (they carry distinct KV caches, so they stay unrolled).
+    x = x0
+    outs_S, outs_tail, ks, vs = [], [], [], []
+    seg_start = 0
+    sh_i = 0
+    layer_ids = list(range(cfg.n_layers))
+    boundaries = [i for i in layer_ids
+                  if shared is not None and (i + 1) % cfg.attn_every == 0]
+    segments = []
+    prev = 0
+    for b in boundaries:
+        segments.append((prev, b + 1, True))
+        prev = b + 1
+    if prev < cfg.n_layers:
+        segments.append((prev, cfg.n_layers, False))
+
+    if not segments:
+        segments = [(0, cfg.n_layers, False)]
+
+    for (a, b, has_shared) in segments:
+        sl = jax.tree.map(lambda t: t[a:b], params["mamba"])
+        Sseg = cache["ssm"][a:b]
+        Tseg = cache["conv"][a:b]
+
+        def seg_body(x, inp):
+            p, S, tail = inp
+            x, (S2, t2) = mamba_forward(cfg, p, x, dist, state=S,
+                                        conv_tail=tail)
+            return x, (S2, t2)
+
+        x, (S2, T2) = scan_layers(cfg.analysis_unroll, seg_body, x,
+                                  (sl, Sseg, Tseg), b - a)
+        outs_S.append(S2)
+        outs_tail.append(T2)
+        if has_shared:
+            ck, cv = cache["k"][sh_i], cache["v"][sh_i]
+            x, (k2, v2) = _shared_block(cfg, shared, x, x0, dist, cos, sin,
+                                        cache=(ck, cv), cache_at=cur,
+                                        kv_len=kv_len)
+            ks.append(k2)
+            vs.append(v2)
+            sh_i += 1
+
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = _unembed(cfg, params, x, dist)
+    new_cache = {
+        "ssm": jnp.concatenate(outs_S, axis=0),
+        "conv": jnp.concatenate(outs_tail, axis=0),
+        "len": cache["len"] + 1,
+    }
+    if nsh:
+        new_cache["k"] = jnp.stack(ks)
+        new_cache["v"] = jnp.stack(vs)
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params, batch: Dict, max_len: int,
+            dist: Dist = Dist()):
+    """Chunked-SSD prompt processing, returning decode-ready state."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens, dist)
+    x0 = x
+    B, L, _ = x.shape
+    pos = jnp.arange(L)[None, :]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+    shared = params.get("shared")
+    nsh = num_shared_calls(cfg)
+
+    boundaries = [i for i in range(cfg.n_layers)
+                  if shared is not None and (i + 1) % cfg.attn_every == 0]
+    segments, prev = [], 0
+    for b in boundaries:
+        segments.append((prev, b + 1, True))
+        prev = b + 1
+    if prev < cfg.n_layers:
+        segments.append((prev, cfg.n_layers, False))
+    if not segments:
+        segments = [(0, cfg.n_layers, False)]
+
+    Ss, Ts, ks, vs = [], [], [], []
+    for (a, b, has_shared) in segments:
+        sl = jax.tree.map(lambda t: t[a:b], params["mamba"])
+
+        def seg_body(x, p):
+            x, (S2, t2) = mamba_forward(cfg, p, x, dist)
+            return x, (S2, t2)
+
+        x, (S2, T2) = scan_layers(cfg.analysis_unroll, seg_body, x, sl,
+                                  b - a)
+        Ss.append(S2)
+        Ts.append(T2)
+        if has_shared:
+            x, (k2, v2) = _shared_block(cfg, shared, x, x0, dist, cos, sin)
+            pad = max_len - L
+            ks.append(jnp.pad(k2, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            vs.append(jnp.pad(v2, ((0, 0), (0, pad), (0, 0), (0, 0))))
+
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = _unembed(cfg, params, x[:, -1:], dist)
+    cache = {
+        "ssm": jnp.concatenate(Ss, axis=0),
+        "conv": jnp.concatenate(Ts, axis=0),
+        "len": jnp.full((B,), L, jnp.int32),
+    }
+    if nsh:
+        cache["k"] = jnp.stack(ks)
+        cache["v"] = jnp.stack(vs)
+    return logits, cache

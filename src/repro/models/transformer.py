@@ -1,0 +1,474 @@
+"""Decoder-only transformer LM: dense GQA (llama/qwen/yi/phi3), fine-grained
+MoE (deepseek/kimi), and VLM-backbone (internvl2, stub patch frontend).
+
+Execution paths:
+  forward      — teacher-forced logits (training / evaluation)
+  prefill      — forward + KV-cache construction (inference prefill)
+  decode_step  — one token against a padded KV cache (inference decode)
+
+Layers are stacked on a leading axis and scanned (remat-wrapped for
+training); the first ``first_dense_layers`` (DeepSeek) live in their own
+stack.  Sharding: batch over ('pod','data'), TP over 'model', FSDP over
+'data' — see param_specs for the exact layout of every tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import moe as moe_lib
+from repro.models.common import (
+    LMConfig, ShapeCfg, apply_rope, attention_any, dense_init, full_attention,
+    rms_norm, rope_tables, scan_layers, sharded_ce_loss,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """Distribution context threaded through model functions."""
+    mesh: Any = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    data_axis: str = "data"
+    seq_shard: bool = False        # long-context: shard KV sequence dim
+    fsdp_axes: Tuple[str, ...] = ()   # () -> (data_axis,); kimi adds 'pod'
+
+    @property
+    def fsdp(self):
+        axes = self.fsdp_axes or (self.data_axis,)
+        return axes if len(axes) > 1 else axes[0]
+
+    def wsc(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def batch(self):
+        if not self.batch_axes:
+            return None                # tiny-batch shapes: replicate batch dim
+        if len(self.batch_axes) > 1:
+            return self.batch_axes
+        return self.batch_axes[0]
+
+
+def vocab_padded(cfg: LMConfig, mult: int = 256) -> int:
+    return ((cfg.vocab + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------- parameters
+def _attn_shapes(cfg: LMConfig):
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": (d, cfg.n_heads * hd), "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd), "wo": (cfg.n_heads * hd, d),
+    }
+
+
+def _layer_shapes(cfg: LMConfig, moe: bool):
+    d = cfg.d_model
+    shapes = {"ln1": (d,), "ln2": (d,), **_attn_shapes(cfg)}
+    if cfg.qkv_bias:
+        shapes.update({"bq": (cfg.n_heads * cfg.hd,),
+                       "bk": (cfg.n_kv_heads * cfg.hd,),
+                       "bv": (cfg.n_kv_heads * cfg.hd,)})
+    if moe:
+        f = cfg.expert_d_ff
+        shapes.update({
+            "router": (d, cfg.n_experts),
+            "moe_w13": (cfg.n_experts, d, 2 * f),
+            "moe_w2": (cfg.n_experts, f, d),
+        })
+        if cfg.n_shared_experts:
+            fs = cfg.n_shared_experts * f
+            shapes.update({"shared_w13": (d, 2 * fs), "shared_w2": (fs, d)})
+    else:
+        shapes.update({"w13": (d, 2 * cfg.d_ff), "w2": (cfg.d_ff, d)})
+    return shapes
+
+
+def _stack_init(key, shapes: Dict[str, tuple], n: int, dtype):
+    out = {}
+    for name, shp in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.startswith(("ln",)):
+            out[name] = jnp.ones((n,) + shp, dtype)
+        elif name.startswith("b"):
+            out[name] = jnp.zeros((n,) + shp, dtype)
+        else:
+            flat = jax.random.normal(sub, (n,) + shp) * (shp[-2] if len(shp) > 1
+                                                         else shp[-1]) ** -0.5
+            out[name] = flat.astype(dtype)
+    return out
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    vp = vocab_padded(cfg)
+    key, ke, ku, kl, kd, kp = jax.random.split(key, 6)
+    pdt = cfg.param_dtype
+    n_moe = cfg.n_layers - cfg.first_dense_layers if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    params = {
+        "embed": dense_init(ke, (vp, cfg.d_model), pdt, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+        "layers": _stack_init(kl, _layer_shapes(cfg, moe=bool(cfg.n_experts)),
+                              n_moe if cfg.n_experts else cfg.n_layers, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ku, (cfg.d_model, vp), pdt, scale=0.02)
+    if cfg.n_experts and n_dense:
+        params["dense_layers"] = _stack_init(
+            kd, _layer_shapes(cfg, moe=False), n_dense, pdt)
+    if cfg.family == "vlm":
+        params["patch_proj"] = dense_init(
+            kp, (cfg.frontend_dim, cfg.d_model), pdt)
+    return params
+
+
+def _layer_specs(cfg: LMConfig, moe: bool, dist: Dist) -> Dict[str, P]:
+    m, d = dist.model_axis, dist.fsdp
+    specs = {
+        "ln1": P(None, None), "ln2": P(None, None),
+        "wq": P(None, d, m), "wk": P(None, d, m), "wv": P(None, d, m),
+        "wo": P(None, m, d),
+    }
+    if cfg.qkv_bias:
+        specs.update({"bq": P(None, m), "bk": P(None, m), "bv": P(None, m)})
+    if moe:
+        specs.update({
+            "router": P(None, d, None),
+            "moe_w13": P(None, m, d, None),
+            "moe_w2": P(None, m, None, d),
+        })
+        if cfg.n_shared_experts:
+            specs.update({"shared_w13": P(None, d, m),
+                          "shared_w2": P(None, m, d)})
+    else:
+        specs.update({"w13": P(None, d, m), "w2": P(None, m, d)})
+    return specs
+
+
+def param_specs(cfg: LMConfig, dist: Dist) -> Dict:
+    m, d = dist.model_axis, dist.fsdp
+    # Tied tables MUST be vocab-sharded: d_model-sharding makes the unembed
+    # matmul contraction-sharded, and GSPMD then all-reduces the full
+    # (B, L, V) fp32 logits (31 GB/device measured on llama train_4k).
+    # Vocab sharding keeps logits output-sharded; the embedding lookup pays
+    # only a (B, L, d) all-reduce.
+    specs = {
+        "embed": P(m, None) if cfg.tie_embeddings else P(None, m),
+        "final_norm": P(None),
+        "layers": _layer_specs(cfg, moe=bool(cfg.n_experts), dist=dist),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(d, m)
+    if cfg.n_experts and cfg.first_dense_layers:
+        specs["dense_layers"] = _layer_specs(cfg, moe=False, dist=dist)
+    if cfg.family == "vlm":
+        specs["patch_proj"] = P(None, m)
+    return specs
+
+
+# ------------------------------------------------------------------- blocks
+def _attn(cfg: LMConfig, p, x, dist: Dist, cos, sin, cache=None,
+          cache_at=None, kv_len=None):
+    """Attention block.  Returns (residual_out, (k_new, v_new))."""
+    B, L, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = h @ p["wq"].astype(h.dtype)
+    k = h @ p["wk"].astype(h.dtype)
+    v = h @ p["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    q = dist.wsc(q, dist.batch, None, dist.model_axis)
+    q = q.reshape(B, L, H, hd)
+    k = k.reshape(B, L, Hkv, hd)
+    v = v.reshape(B, L, Hkv, hd)
+    q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+
+    if cache is not None:
+        ck, cv = cache
+        if jnp.ndim(cache_at) == 0:          # synchronized decode offset
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cache_at, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cache_at, 0, 0))
+        else:                                 # continuous batching: per-row
+            rows = jnp.arange(B)[:, None]
+            cols = cache_at[:, None] + jnp.arange(L)[None, :]
+            ck = ck.at[rows, cols].set(k.astype(ck.dtype))
+            cv = cv.at[rows, cols].set(v.astype(cv.dtype))
+        out = full_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                             causal=False, kv_len=kv_len)
+        knew, vnew = ck, cv
+    else:
+        out = attention_any(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                            unroll=cfg.analysis_unroll)
+        knew, vnew = k, v
+    out = out.reshape(B, L, H * hd)
+    out = dist.wsc(out, dist.batch, None, dist.model_axis)
+    return x + (out @ p["wo"].astype(out.dtype)), (knew, vnew)
+
+
+def _ffn_dense(cfg, p, x, dist: Dist):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    hh = h @ p["w13"].astype(h.dtype)
+    hh = dist.wsc(hh, dist.batch, None, dist.model_axis)
+    g, u = jnp.split(hh, 2, axis=-1)
+    act = (jax.nn.silu(g.astype(jnp.float32)) *
+           u.astype(jnp.float32)).astype(h.dtype)
+    return x + act @ p["w2"].astype(h.dtype)
+
+
+def _ffn_moe(cfg, p, x, dist: Dist):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    routed, aux = moe_lib.moe_ffn(
+        cfg, {"router": p["router"], "w13": p["moe_w13"], "w2": p["moe_w2"]},
+        h, dist.mesh, dist.batch_axes, dist.model_axis, dist.data_axis,
+        fsdp_axes=dist.fsdp_axes or None)
+    out = routed
+    if cfg.n_shared_experts:
+        hh = h @ p["shared_w13"].astype(h.dtype)
+        hh = dist.wsc(hh, dist.batch, None, dist.model_axis)
+        g, u = jnp.split(hh, 2, axis=-1)
+        act = (jax.nn.silu(g.astype(jnp.float32)) *
+               u.astype(jnp.float32)).astype(h.dtype)
+        out = out + act @ p["shared_w2"].astype(h.dtype)
+    return x + out, aux
+
+
+def _ffn_moe_local(cfg, p, x, dist: Dist):
+    """Mesh-free MoE path (smoke tests / 1-device): dense-combine oracle."""
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    routed, aux = moe_lib.moe_ffn_dense_ref(
+        cfg, {"router": p["router"], "w13": p["moe_w13"], "w2": p["moe_w2"]}, h)
+    out = routed
+    if cfg.n_shared_experts:
+        hh = h @ p["shared_w13"].astype(h.dtype)
+        g, u = jnp.split(hh, 2, axis=-1)
+        act = (jax.nn.silu(g.astype(jnp.float32)) *
+               u.astype(jnp.float32)).astype(h.dtype)
+        out = out + act @ p["shared_w2"].astype(h.dtype)
+    return x + out, aux
+
+
+def _one_layer(cfg, p, x, dist, cos, sin, moe: bool, cache=None,
+               cache_at=None, kv_len=None):
+    x, kv = _attn(cfg, p, x, dist, cos, sin, cache, cache_at, kv_len)
+    if moe:
+        fn = _ffn_moe if dist.mesh is not None else _ffn_moe_local
+        x, aux = fn(cfg, p, x, dist)
+    else:
+        x, aux = _ffn_dense(cfg, p, x, dist), 0.0
+    return x, kv, aux
+
+
+# ------------------------------------------------------------------ forward
+def _embed(cfg, params, tokens, dist: Dist):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    return dist.wsc(x, dist.batch, None, None)
+
+
+def _unembed(cfg, params, x, dist: Dist):
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["unembed"]).astype(cfg.dtype)
+    logits = x @ w
+    return dist.wsc(logits, dist.batch, None, dist.model_axis)
+
+
+def _run_stack(cfg, stack, x, dist, cos, sin, moe: bool):
+    """Scan over stacked layers (remat per layer when training)."""
+    def body(x, p):
+        out, _, aux = _one_layer(cfg, p, x, dist, cos, sin, moe)
+        return out, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    n = jax.tree.leaves(stack)[0].shape[0]
+    if n == 0:
+        return x, 0.0
+    x, auxs = scan_layers(cfg.analysis_unroll, body, x, stack, n)
+    return x, jnp.sum(auxs)
+
+
+def forward(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist()):
+    """batch: {'tokens': (B, L) i32, optional 'patches': (B, Pn, fd)}.
+    Returns (logits (B, L_total, vocab_padded), aux_loss)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens, dist)
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = batch["patches"].astype(cfg.dtype) @ params["patch_proj"].astype(
+            cfg.dtype)
+        pe = dist.wsc(pe, dist.batch, None, None)
+        x = jnp.concatenate([pe, x], axis=1)
+    B, L, _ = x.shape
+    pos = jnp.arange(L)[None, :]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+
+    aux = 0.0
+    if cfg.n_experts:
+        if cfg.first_dense_layers:
+            x, a = _run_stack(cfg, params["dense_layers"], x, dist, cos, sin,
+                              moe=False)
+            aux += a
+        x, a = _run_stack(cfg, params["layers"], x, dist, cos, sin, moe=True)
+        aux += a
+    else:
+        x, a = _run_stack(cfg, params["layers"], x, dist, cos, sin, moe=False)
+        aux += a
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    return _unembed(cfg, params, x, dist), aux
+
+
+def loss_fn(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist(),
+            aux_weight: float = 0.01):
+    """Next-token CE.  'labels' (B, L) with -100 = ignore."""
+    logits, aux = forward(cfg, params, batch, dist)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:          # vlm: drop patch positions
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    return sharded_ce_loss(logits, labels, aux, aux_weight)
+
+
+# ------------------------------------------------------------------ serving
+def cache_spec(cfg: LMConfig, dist: Dist) -> P:
+    """KV cache (n_layers, B, S, Hkv, hd) sharding: batch-sharded when B
+    divides, sequence-sharded (SP) for long-context B=1."""
+    if dist.seq_shard:
+        return P(None, None, dist.batch, None, None)
+    return P(None, dist.batch, None, None, None)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               n_layers: Optional[int] = None, dtype=None):
+    n_layers = n_layers or cfg.n_layers
+    dtype = dtype or cfg.dtype
+    shp = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(cfg: LMConfig, params, batch: Dict, max_len: int,
+            dist: Dist = Dist()):
+    """Run the prompt, build the KV cache.  Returns (logits_last, cache)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens, dist)
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = batch["patches"].astype(cfg.dtype) @ params["patch_proj"].astype(
+            cfg.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    B, L, _ = x.shape
+    max_len = max(max_len, L)          # vlm: patch positions extend the cache
+    pos = jnp.arange(L)[None, :]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+
+    def body(x, p):
+        moe = bool(cfg.n_experts)
+        out, kv, _ = _one_layer(cfg, p, x, dist, cos, sin, moe)
+        return out, kv
+
+    stacks = []
+    if cfg.n_experts and cfg.first_dense_layers:
+        stacks.append((params["dense_layers"], False))
+    stacks.append((params["layers"], bool(cfg.n_experts)))
+
+    ks, vs = [], []
+    for stack, moe in stacks:
+        n = jax.tree.leaves(stack)[0].shape[0]
+        if n == 0:
+            continue
+        def body(x, p, moe=moe):
+            out, kv, _ = _one_layer(cfg, p, x, dist, cos, sin, moe)
+            return out, kv
+        x, (k_l, v_l) = scan_layers(cfg.analysis_unroll, body, x, stack, n)
+        ks.append(k_l)
+        vs.append(v_l)
+    k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
+    v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+    pad = max_len - L
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = _unembed(cfg, params, x[:, -1:], dist)
+    cache = {"k": k, "v": v, "len": jnp.full((B,), L, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache, dist: Dist = Dist()):
+    """One token per sequence: tokens (B, 1) -> (logits (B,1,V), cache')."""
+    B = tokens.shape[0]
+    x = _embed(cfg, params, tokens, dist)
+    cur = cache["len"]                         # per-row offsets (ragged slots)
+    pos = cache["len"][:, None]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta, cfg.dtype)
+    kv_len = cache["len"] + 1
+
+    n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+
+    def body(x, sl):
+        p, ck, cv, is_moe = sl
+        out, (k2, v2), _ = _one_layer(
+            cfg, p, x, dist, cos, sin, moe=bool(cfg.n_experts) and is_moe,
+            cache=(ck, cv), cache_at=cur, kv_len=kv_len)
+        return out, (k2, v2)
+
+    n_moe_layers = cfg.n_layers - n_dense
+    if cfg.n_experts and n_dense and n_moe_layers == 0:
+        # Probe configs may have only the dense-first layer.
+        def body_d0(x, sl):
+            p, ck, cv = sl
+            out, kv, _ = _one_layer(cfg, p, x, dist, cos, sin, False,
+                                    cache=(ck, cv), cache_at=cur,
+                                    kv_len=kv_len)
+            return out, kv
+        x, (k2, v2) = scan_layers(
+            cfg.analysis_unroll, body_d0, x,
+            (params["dense_layers"], cache["k"], cache["v"]), n_dense)
+    elif cfg.n_experts and n_dense:
+        kd, km = cache["k"][:n_dense], cache["k"][n_dense:]
+        vd, vm = cache["v"][:n_dense], cache["v"][n_dense:]
+
+        def body_d(x, sl):
+            p, ck, cv = sl
+            out, kv, _ = _one_layer(cfg, p, x, dist, cos, sin, False,
+                                    cache=(ck, cv), cache_at=cur, kv_len=kv_len)
+            return out, kv
+        x, (kd2, vd2) = scan_layers(
+            cfg.analysis_unroll, body_d, x,
+            (params["dense_layers"], kd, vd), n_dense)
+
+        def body_m(x, sl):
+            p, ck, cv = sl
+            out, kv, _ = _one_layer(cfg, p, x, dist, cos, sin, True,
+                                    cache=(ck, cv), cache_at=cur, kv_len=kv_len)
+            return out, kv
+        x, (km2, vm2) = scan_layers(
+            cfg.analysis_unroll, body_m, x,
+            (params["layers"], km, vm), cfg.n_layers - n_dense)
+        k2 = jnp.concatenate([kd2, km2], axis=0)
+        v2 = jnp.concatenate([vd2, vm2], axis=0)
+    else:
+        def body_p(x, sl):
+            p, ck, cv = sl
+            out, kv, _ = _one_layer(cfg, p, x, dist, cos, sin,
+                                    bool(cfg.n_experts),
+                                    cache=(ck, cv), cache_at=cur, kv_len=kv_len)
+            return out, kv
+        x, (k2, v2) = scan_layers(
+            cfg.analysis_unroll, body_p, x,
+            (params["layers"], cache["k"], cache["v"]), cfg.n_layers)
+
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = _unembed(cfg, params, x, dist)
+    return logits, {"k": k2, "v": v2, "len": cache["len"] + 1}

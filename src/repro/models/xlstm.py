@@ -1,0 +1,387 @@
+"""xLSTM stack (arXiv:2405.04517): mLSTM blocks (parallel, chunkwise) with
+interleaved sLSTM blocks (sequential scan), for the xlstm-1.3b arch.
+
+mLSTM — matrix-memory LSTM.  Recurrence per head
+    C_t = f_t C_{t-1} + i_t (k_t (x) v_t),   n_t = f_t n_{t-1} + i_t k_t,
+    y_t = (q_t . C_t) / max(|q_t . n_t|, 1)
+is the SSD recurrence with B<-k, xbar<-i*v, C<-q, loga<-log f, so training
+reuses the chunkwise SSD machinery from models/ssm.py (exact — chunking does
+not approximate).  Input gate i = exp(clamp(itilde)) computed in fp32; the
+running-max stabilizer of the reference implementation is replaced by this
+clamp (noted in DESIGN.md §7 — identical numerics at the sequence lengths we
+train, cheaper on TPU).
+
+sLSTM — scalar-memory LSTM with block-diagonal recurrence, exponential gating
+and the (m_t) stabilizer, executed as a lax.scan over time.  O(1)-state
+decode makes long_500k runnable for this family.
+
+Per the 1.3B config: d_ff = 0 (no FFN; the block's own up/down projections
+carry the nonlinearity), 4 heads.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (LMConfig, dense_init, rms_norm,
+    scan_layers, sharded_ce_loss)
+from repro.models.ssm import _ssd_chunked
+from repro.models.transformer import Dist, _embed, _unembed, vocab_padded
+
+ICLAMP = 8.0
+
+
+# ------------------------------------------------------------------- mLSTM
+def _hdims(cfg: LMConfig):
+    din = cfg.ssm_expand * cfg.d_model if cfg.ssm_expand else 2 * cfg.d_model
+    H = cfg.n_heads
+    P = din // H
+    return din, H, P
+
+
+def mlstm_forward(cfg: LMConfig, p, x, dist: Dist, state=None):
+    """x (B, L, d) -> (out, (C, n)) — C (B,H,P,P) matrix memory, n (B,H,P)."""
+    Bz, L, d = x.shape
+    din, H, P = _hdims(cfg)
+    h = rms_norm(x, p["norm"].astype(x.dtype), cfg.norm_eps)
+    up = h @ p["up"].astype(h.dtype)
+    up = dist.wsc(up, dist.batch, None, dist.model_axis)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = (xm @ p["wq"].astype(h.dtype)).reshape(Bz, L, H, P) * (P ** -0.5)
+    k = (xm @ p["wk"].astype(h.dtype)).reshape(Bz, L, H, P) * (P ** -0.5)
+    v = (xm @ p["wv"].astype(h.dtype)).reshape(Bz, L, H, P)
+    gif = (xm @ p["w_if"].astype(h.dtype)).astype(jnp.float32)
+    it, ft = jnp.split(gif.reshape(Bz, L, H, 2), 2, axis=-1)
+    logf = jax.nn.log_sigmoid(ft[..., 0])                    # (B,L,H)
+    i = jnp.exp(jnp.minimum(it[..., 0], ICLAMP))             # (B,L,H)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    if state is not None and L == 1:
+        C0, n0 = state
+        f1 = jnp.exp(logf[:, 0])                              # (B,H)
+        Cn = (C0 * f1[:, :, None, None]
+              + i[:, 0][:, :, None, None] * kf[:, 0][..., :, None]
+              * vf[:, 0][..., None, :])                       # (B,H,P,P)
+        nn = n0 * f1[:, :, None] + i[:, 0][:, :, None] * kf[:, 0]
+        num = jnp.einsum("bhp,bhpq->bhq", qf[:, 0], Cn)
+        den = jnp.abs(jnp.einsum("bhp,bhp->bh", qf[:, 0], nn))
+        y = (num / jnp.maximum(den, 1.0)[..., None])[:, None]  # (B,1,H,P)
+        Sn, nn_out = Cn, nn
+    else:
+        # Chunkwise: S carries (B,H,N=P,P); n via a width-1 value channel.
+        xbar = vf * i[..., None]
+        y_num, Sn = _ssd_chunked_heads(xbar, logf, kf, qf,
+                                       state0=state[0] if state else None)
+        ones = i[..., None]                                   # (B,L,H,1)
+        n_y, nn_out = _ssd_chunked_heads(
+            ones, logf, kf, qf,
+            state0=state[1][..., None] if state else None)
+        nn_out = nn_out[..., 0]
+        den = jnp.abs(n_y[..., 0])
+        y = y_num / jnp.maximum(den, 1.0)[..., None]
+
+    y = y.reshape(Bz, L, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = dist.wsc(y, dist.batch, None, dist.model_axis)
+    return x + y @ p["down"].astype(x.dtype), (Sn, nn_out)
+
+
+def _ssd_chunked_heads(xbar, loga, keys, queries, state0=None, chunk=128):
+    """SSD scan with PER-HEAD B/C (keys/queries (B,L,H,N)) — the mLSTM case.
+
+    xbar (B,L,H,P).  Returns (y (B,L,H,P), S (B,H,N,P))."""
+    Bsz, L, H, Pd = xbar.shape
+    N = keys.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        xbar = jnp.pad(xbar, z4)
+        keys = jnp.pad(keys, z4)
+        queries = jnp.pad(queries, z4)
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    C_ = xbar.shape[1] // chunk
+    xb = xbar.reshape(Bsz, C_, chunk, H, Pd)
+    la = loga.reshape(Bsz, C_, chunk, H)
+    Kc = keys.reshape(Bsz, C_, chunk, H, N)
+    Qc = queries.reshape(Bsz, C_, chunk, H, N)
+
+    cum = jnp.cumsum(la, axis=2)
+    total = cum[:, :, -1]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    dec = jnp.exp(seg)                                        # (B,C,Q,S,H)
+    qk = jnp.einsum("bcqhn,bcshn->bcqsh", Qc, Kc)
+    y_intra = jnp.einsum("bcqsh,bcqsh,bcshp->bcqhp", qk, dec, xb)
+    w = jnp.exp(total[:, :, None, :] - cum)
+    S_loc = jnp.einsum("bcshn,bcsh,bcshp->bchnp", Kc, w, xb)
+
+    def scan_fn(S_prev, inp):
+        S_l, tot = inp
+        S_new = S_prev * jnp.exp(tot)[:, :, None, None] + S_l
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((Bsz, H, N, Pd), xbar.dtype) if state0 is None else state0)
+    S_fin, S_prevs = jax.lax.scan(
+        scan_fn, S0, (jnp.moveaxis(S_loc, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", Qc, jnp.exp(cum), S_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, C_ * chunk, H, Pd)
+    return y[:, :L], S_fin
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_shapes(cfg: LMConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    return {
+        "norm": (d,),
+        "w_in": (d, 4 * d),               # z, i, f, o pre-activations
+        "r": (H, P, 4 * P),               # block-diagonal recurrent weights
+        "bias": (4 * d,),
+        "out": (d, d),
+    }
+
+
+def slstm_forward(cfg: LMConfig, p, x, dist: Dist, state=None):
+    """x (B, L, d) -> (out, (h, c, n, m)) with exponential-gate stabilizer."""
+    Bz, L, d = x.shape
+    H = cfg.n_heads
+    P = d // H
+    xin = rms_norm(x, p["norm"].astype(x.dtype), cfg.norm_eps)
+    pre = (xin @ p["w_in"].astype(x.dtype)
+           + p["bias"].astype(x.dtype)).astype(jnp.float32)   # (B,L,4d)
+    pre = pre.reshape(Bz, L, H, 4 * P)
+
+    if state is None:
+        h0 = jnp.zeros((Bz, H, P), jnp.float32)
+        c0 = jnp.zeros((Bz, H, P), jnp.float32)
+        n0 = jnp.ones((Bz, H, P), jnp.float32)
+        m0 = jnp.zeros((Bz, H, P), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, pre_t):
+        h, c, n, m = carry                                    # (B,H,P)
+        rec = jnp.einsum("bhp,hpq->bhq", h, r)                # (B,H,4P)
+        g = pre_t + rec
+        z_, i_, f_, o_ = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        logf = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(logf + m, i_)
+        ig = jnp.exp(i_ - m_new)
+        fg = jnp.exp(logf + m - m_new)
+        c_new = fg * c + ig * z
+        n_new = fg * n + ig
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bz, L, d).astype(x.dtype)
+    return x + y @ p["out"].astype(x.dtype), (h, c, n, m)
+
+
+# -------------------------------------------------------------------- stack
+def _layer_kinds(cfg: LMConfig):
+    if not cfg.slstm_every:
+        return ["m"] * cfg.n_layers
+    return ["s" if (i + 1) % cfg.slstm_every == 0 else "m"
+            for i in range(cfg.n_layers)]
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    vp = vocab_padded(cfg)
+    pdt = cfg.param_dtype
+    kinds = _layer_kinds(cfg)
+    nm, ns = kinds.count("m"), kinds.count("s")
+
+    def init_stack(key, shapes, n):
+        out = {}
+        for name, shp in shapes.items():
+            key, sub = jax.random.split(key)
+            if name == "norm":
+                out[name] = jnp.ones((n,) + shp, pdt)
+            elif name == "bias":
+                out[name] = jnp.zeros((n,) + shp, pdt)
+            else:
+                out[name] = (jax.random.normal(sub, (n,) + shp)
+                             * shp[-2] ** -0.5).astype(pdt)
+        return out
+
+    key, ke, ku, k1, k2 = jax.random.split(key, 5)
+    params = {
+        "embed": dense_init(ke, (vp, cfg.d_model), pdt, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+        "mlstm": init_stack(k1, _mlstm_shapes_fixed(cfg), nm),
+    }
+    if ns:
+        params["slstm"] = init_stack(k2, slstm_shapes(cfg), ns)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ku, (cfg.d_model, vp), pdt, scale=0.02)
+    return params
+
+
+def _mlstm_shapes_fixed(cfg: LMConfig):
+    d = cfg.d_model
+    din, H, P = _hdims(cfg)
+    return {
+        "norm": (d,),
+        "up": (d, 2 * din),
+        "wq": (din, din), "wk": (din, din), "wv": (din, din),
+        "w_if": (din, 2 * H),
+        "down": (din, d),
+    }
+
+
+def param_specs(cfg: LMConfig, dist: Dist) -> Dict:
+    from jax.sharding import PartitionSpec as P
+    m, da = dist.model_axis, dist.data_axis
+    kinds = _layer_kinds(cfg)
+    specs = {
+        "embed": P(None, m), "final_norm": P(None),
+        "mlstm": {
+            "norm": P(None, None), "up": P(None, da, m),
+            "wq": P(None, da, m), "wk": P(None, da, m), "wv": P(None, da, m),
+            "w_if": P(None, da, None), "down": P(None, m, da),
+        },
+    }
+    if "s" in kinds:
+        specs["slstm"] = {
+            "norm": P(None, None), "w_in": P(None, da, m),
+            "r": P(None, None, None, None), "bias": P(None, m),
+            "out": P(None, da, m),
+        }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(da, m)
+    return specs
+
+
+def _segments(cfg: LMConfig):
+    """Contiguous same-kind runs: [(kind, start_in_its_stack, count), ...]."""
+    kinds = _layer_kinds(cfg)
+    segs = []
+    offsets = {"m": 0, "s": 0}
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        segs.append((kinds[i], offsets[kinds[i]], j - i))
+        offsets[kinds[i]] += j - i
+        i = j
+    return segs
+
+
+def forward(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist()):
+    x = _embed(cfg, params, batch["tokens"], dist)
+
+    for kind, off, cnt in _segments(cfg):
+        stack = params["mlstm" if kind == "m" else "slstm"]
+        sl = jax.tree.map(lambda t: t[off:off + cnt], stack)
+        fwd = mlstm_forward if kind == "m" else slstm_forward
+
+        def body(x, p, fwd=fwd):
+            out, _ = fwd(cfg, p, x, dist)
+            return out, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = scan_layers(cfg.analysis_unroll, body, x, sl, cnt)
+
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    return _unembed(cfg, params, x, dist), 0.0
+
+
+def loss_fn(cfg: LMConfig, params, batch: Dict, dist: Dist = Dist(), **_):
+    logits, _ = forward(cfg, params, batch, dist)
+    return sharded_ce_loss(logits, batch["labels"])
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    din, H, P = _hdims(cfg)
+    kinds = _layer_kinds(cfg)
+    nm, ns = kinds.count("m"), kinds.count("s")
+    d = cfg.d_model
+    Ph = d // cfg.n_heads
+    cache = {
+        "mC": jnp.zeros((nm, batch, H, P, P), jnp.float32),
+        "mn": jnp.zeros((nm, batch, H, P), jnp.float32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if ns:
+        cache.update({
+            "sh": jnp.zeros((ns, batch, cfg.n_heads, Ph), jnp.float32),
+            "sc": jnp.zeros((ns, batch, cfg.n_heads, Ph), jnp.float32),
+            "sn": jnp.ones((ns, batch, cfg.n_heads, Ph), jnp.float32),
+            "sm": jnp.zeros((ns, batch, cfg.n_heads, Ph), jnp.float32),
+        })
+    return cache
+
+
+def _run_segments(cfg, params, x, dist, cache):
+    """Shared segment walker for prefill/decode (state-threading)."""
+    new = dict(cache)
+    mC, mn = [], []
+    sh, sc, sn, sm = [], [], [], []
+    for kind, off, cnt in _segments(cfg):
+        stack = params["mlstm" if kind == "m" else "slstm"]
+        sl = jax.tree.map(lambda t: t[off:off + cnt], stack)
+        if kind == "m":
+            st = (cache["mC"][off:off + cnt], cache["mn"][off:off + cnt])
+
+            def body(x, inp):
+                p, C0, n0 = inp
+                out, (C1, n1) = mlstm_forward(cfg, p, x, dist, state=(C0, n0))
+                return out, (C1, n1)
+            x, (C1, n1) = scan_layers(cfg.analysis_unroll, body, x,
+                                      (sl, st[0], st[1]), cnt)
+            mC.append(C1)
+            mn.append(n1)
+        else:
+            st = tuple(cache[kk][off:off + cnt]
+                       for kk in ("sh", "sc", "sn", "sm"))
+
+            def body(x, inp):
+                p, h0, c0, n0, m0 = inp
+                out, s1 = slstm_forward(cfg, p, x, dist,
+                                        state=(h0, c0, n0, m0))
+                return out, s1
+            x, s1 = scan_layers(cfg.analysis_unroll, body, x,
+                                (sl,) + st, cnt)
+            sh.append(s1[0]); sc.append(s1[1])
+            sn.append(s1[2]); sm.append(s1[3])
+    new["mC"] = jnp.concatenate(mC, axis=0)
+    new["mn"] = jnp.concatenate(mn, axis=0)
+    if sh:
+        new["sh"] = jnp.concatenate(sh, axis=0)
+        new["sc"] = jnp.concatenate(sc, axis=0)
+        new["sn"] = jnp.concatenate(sn, axis=0)
+        new["sm"] = jnp.concatenate(sm, axis=0)
+    return x, new
+
+
+def prefill(cfg: LMConfig, params, batch: Dict, max_len: int,
+            dist: Dist = Dist()):
+    x = _embed(cfg, params, batch["tokens"], dist)
+    B, L, _ = x.shape
+    cache = init_cache(cfg, B, max_len)
+    x, cache = _run_segments(cfg, params, x, dist, cache)
+    cache["len"] = jnp.full((B,), L, jnp.int32)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    return _unembed(cfg, params, x[:, -1:], dist), cache
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache, dist: Dist = Dist()):
+    x = _embed(cfg, params, tokens, dist)
+    x, new = _run_segments(cfg, params, x, dist, cache)
+    new["len"] = cache["len"] + 1
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    return _unembed(cfg, params, x, dist), new

@@ -1,0 +1,6 @@
+from repro.runtime.fault import (
+    DeviceHealth, ElasticCoordinator, FailureDetector, RelayoutEvent,
+)
+
+__all__ = ["DeviceHealth", "ElasticCoordinator", "FailureDetector",
+           "RelayoutEvent"]

@@ -1,0 +1,148 @@
+"""Fault tolerance runtime: failure detection, elastic re-layout, restart.
+
+This is where the paper's algorithms become the cluster's control plane:
+
+  * node loss      -> vertex deletions in the server graph; GLAD-E proves
+                      deletions never raise cost (Sec. V-B), so the surviving
+                      fleet re-layouts incrementally in O(changed) time;
+  * straggler      -> per-device step-time EWMA feeds the alpha_i compute
+                      coefficients; the Thm-8 drift bound decides WHEN a
+                      re-layout pays for the migration it causes;
+  * restart        -> CheckpointManager's mesh-agnostic restore re-shards the
+                      state onto whatever slice count survived.
+
+Heartbeats are timestamps supplied by the caller (tests drive a fake clock).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cost import CostModel, GNNWorkload
+from repro.core.glad_s import glad_s
+from repro.core.partition import DevicePartition, partition_from_assign
+from repro.graphs.datagraph import DataGraph
+from repro.graphs.edgenet import EdgeNetwork
+
+
+@dataclasses.dataclass
+class DeviceHealth:
+    last_heartbeat: float = 0.0
+    step_time_ewma: float = 0.0
+    alive: bool = True
+
+
+class FailureDetector:
+    """Heartbeat-timeout failure detection + step-time EWMA (straggler)."""
+
+    def __init__(self, num_devices: int, timeout_s: float = 30.0,
+                 ewma: float = 0.2):
+        self.devices = [DeviceHealth() for _ in range(num_devices)]
+        self.timeout_s = timeout_s
+        self.ewma = ewma
+
+    def heartbeat(self, device: int, now: float,
+                  step_time_s: Optional[float] = None):
+        d = self.devices[device]
+        d.last_heartbeat = now
+        d.alive = True
+        if step_time_s is not None:
+            d.step_time_ewma = (step_time_s if d.step_time_ewma == 0.0 else
+                                (1 - self.ewma) * d.step_time_ewma
+                                + self.ewma * step_time_s)
+
+    def sweep(self, now: float) -> List[int]:
+        """Mark timed-out devices dead; return newly-dead ids."""
+        dead = []
+        for i, d in enumerate(self.devices):
+            if d.alive and now - d.last_heartbeat > self.timeout_s:
+                d.alive = False
+                dead.append(i)
+        return dead
+
+    def stragglers(self, factor: float = 2.0) -> List[int]:
+        """Devices whose EWMA step time exceeds factor x fleet median."""
+        ts = [d.step_time_ewma for d in self.devices
+              if d.alive and d.step_time_ewma > 0]
+        if not ts:
+            return []
+        med = float(np.median(ts))
+        return [i for i, d in enumerate(self.devices)
+                if d.alive and d.step_time_ewma > factor * med]
+
+
+@dataclasses.dataclass
+class RelayoutEvent:
+    kind: str                   # 'failure' | 'straggler'
+    devices: List[int]
+    old_cost: float
+    new_cost: float
+    migrated: int
+    wall_time_s: float
+
+
+class ElasticCoordinator:
+    """Drives GLAD re-layout when the failure detector reports changes.
+
+    Holds the data-graph layout of the current workload (the GNN data
+    partition, or any workload expressed as a graph — MoE expert placement
+    plugs in the same way).
+    """
+
+    def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload,
+                 part: DevicePartition):
+        self.net = net
+        self.graph = graph
+        self.gnn = gnn
+        self.part = part
+        self.events: List[RelayoutEvent] = []
+
+    def on_failure(self, dead: List[int], seed: int = 0) -> DevicePartition:
+        """Node loss: disconnect dead servers, re-layout incrementally
+        (warm-started — survivors keep their placement unless they hosted
+        orphans)."""
+        t0 = time.perf_counter()
+        net = self.net
+        for d in dead:
+            net = net.without_server(d)
+        cm = CostModel(net, self.graph, self.gnn)
+        old_cost = self.part.cost_factors.get("total", float("inf"))
+        # Orphans must move; everything else is warm-started.
+        assign = self.part.assign.copy()
+        orphan = np.isin(assign, dead)
+        alive = [i for i in range(net.m) if i not in dead]
+        rng = np.random.default_rng(seed)
+        assign[orphan] = rng.choice(alive, size=int(orphan.sum()))
+        res = glad_s(cm, init=assign, R=net.m, seed=seed)
+        new_part = partition_from_assign(self.graph, res.assign,
+                                         self.part.num_parts, res.factors)
+        migrated = int((res.assign != self.part.assign).sum())
+        self.events.append(RelayoutEvent(
+            "failure", dead, old_cost, res.cost, migrated,
+            time.perf_counter() - t0))
+        self.net = net
+        self.part = new_part
+        return new_part
+
+    def on_straggler(self, slow: List[int], slow_factor: float = 3.0,
+                     seed: int = 0) -> DevicePartition:
+        """Degrade the straggler's compute coefficients and re-layout."""
+        t0 = time.perf_counter()
+        net = self.net
+        for s in slow:
+            net = net.degrade(s, slow_factor)
+        cm = CostModel(net, self.graph, self.gnn)
+        old_cost = cm.total(self.part.assign)
+        res = glad_s(cm, init=self.part.assign, R=net.m, seed=seed)
+        new_part = partition_from_assign(self.graph, res.assign,
+                                         self.part.num_parts, res.factors)
+        migrated = int((res.assign != self.part.assign).sum())
+        self.events.append(RelayoutEvent(
+            "straggler", slow, old_cost, res.cost, migrated,
+            time.perf_counter() - t0))
+        self.net = net
+        self.part = new_part
+        return new_part

@@ -1,0 +1,3 @@
+from repro.serve.engine import EngineStats, Request, ServeEngine
+
+__all__ = ["EngineStats", "Request", "ServeEngine"]

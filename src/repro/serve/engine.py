@@ -1,0 +1,132 @@
+"""Batched serving engine: continuous batching over a slot-based KV cache.
+
+One jitted decode_step serves B slots per tick; requests flow through
+  queue -> prefill (builds the request's KV, written into a free slot)
+  -> decode ticks (all live slots advance one token)
+  -> completion (EOS / max_new_tokens) frees the slot.
+
+Per-slot lengths ride in the cache's ``len`` vector, so ragged occupancy
+needs no recompilation.  This is the paper's "resident service" pattern
+(Sec. II-A: GNN services process streams continuously) applied to LM decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models as zoo
+from repro.models.common import LMConfig
+from repro.models.transformer import Dist
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (L,) i32
+    max_new_tokens: int = 16
+    eos_id: int = 0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    ticks: int = 0
+    prefills: int = 0
+    completed: int = 0
+    generated_tokens: int = 0
+
+
+class ServeEngine:
+    """Only transformer-family archs (KV-cache semantics) for now; SSM
+    archs decode through their own state caches via the same interface."""
+
+    def __init__(self, cfg: LMConfig, params, slots: int = 4,
+                 max_len: int = 256, dist: Dist = Dist()):
+        self.cfg, self.params, self.dist = cfg, params, dist
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = zoo.init_cache(cfg, slots, max_len)
+        self.live: List[Optional[Request]] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.stats = EngineStats()
+
+        self._decode = jax.jit(
+            lambda p, t, c: zoo.decode_step(cfg, p, t, c, dist))
+        self._prefill = jax.jit(
+            lambda p, b: zoo.prefill(cfg, p, b, max_len, dist),
+            static_argnames=())
+
+    # ----------------------------------------------------------------- admin
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.live) if r is None]
+
+    def _insert(self, slot: int, req: Request):
+        """Prefill one request and splice its KV into the batch cache."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        batch = {"tokens": prompt}
+        logits, rcache = self._prefill(self.params, batch)
+        L = len(req.prompt)
+        for key in ("k", "v"):
+            if key in self.cache:
+                self.cache[key] = self.cache[key].at[:, slot].set(
+                    rcache[key][:, 0])
+        for key in rcache:
+            if key in ("k", "v", "len"):
+                continue
+            if key in self.cache:            # ssm states etc.
+                self.cache[key] = self.cache[key].at[:, slot].set(
+                    rcache[key][:, 0])
+        self.cache["len"] = self.cache["len"].at[slot].set(L)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+        self.live[slot] = req
+        self.stats.prefills += 1
+
+    # ------------------------------------------------------------------ tick
+    def tick(self):
+        """Admit from queue, then advance every live slot one token."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._insert(slot, self.queue.popleft())
+
+        if not any(r is not None for r in self.live):
+            return
+
+        last = np.zeros((self.slots, 1), np.int32)
+        for i, r in enumerate(self.live):
+            if r is not None:
+                last[i, 0] = r.out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(last), self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        self.stats.ticks += 1
+
+        for i, r in enumerate(self.live):
+            if r is None:
+                continue
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            self.stats.generated_tokens += 1
+            full = int(self.cache["len"][i]) >= self.max_len - 1
+            if tok == r.eos_id or len(r.out_tokens) >= r.max_new_tokens or full:
+                r.done = True
+                self.live[i] = None
+                self.cache["len"] = self.cache["len"].at[i].set(0)
+                self.stats.completed += 1
+
+    def run(self, max_ticks: int = 1000):
+        while (self.queue or any(r is not None for r in self.live)) \
+                and self.stats.ticks < max_ticks:
+            self.tick()
+        return self.stats

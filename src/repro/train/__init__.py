@@ -1,0 +1,16 @@
+from repro.train.optim import (
+    OptConfig, OptState, apply_updates, for_model, init_opt_state,
+    opt_state_specs,
+)
+from repro.train.step import (
+    init_error_feedback, jit_train_step, make_train_step,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, batch_at_step, stream
+
+__all__ = [
+    "OptConfig", "OptState", "apply_updates", "for_model", "init_opt_state",
+    "opt_state_specs", "init_error_feedback", "jit_train_step",
+    "make_train_step", "CheckpointManager", "DataConfig", "batch_at_step",
+    "stream",
+]

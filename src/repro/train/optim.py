@@ -1,0 +1,115 @@
+"""Optimizers (pure JAX): AdamW and Lion.
+
+States inherit the parameter PartitionSpecs leaf-for-leaf (ZeRO: optimizer
+state lives wherever the param shard lives — never gathered).  Lion keeps a
+single momentum (2 bytes/param in bf16): the config for the 1T-param MoE
+selects it so total state stays inside the 512-chip HBM budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | lion
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    momentum_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any                        # None-like (zeros scalar tree) for lion
+
+
+def init_opt_state(cfg: OptConfig, params) -> OptState:
+    m = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, cfg.momentum_dtype), params)
+    if cfg.name == "adamw":
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    else:
+        v = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), m, v)
+
+
+def opt_state_specs(cfg: OptConfig, param_specs):
+    from jax.sharding import PartitionSpec as P
+    if cfg.name == "adamw":
+        v_specs = param_specs
+    else:
+        v_specs = jax.tree.map(lambda s: P(), param_specs)
+    return OptState(P(), param_specs, v_specs)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(cfg: OptConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, grad_norm)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+
+    if cfg.name == "adamw":
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - cfg.lr * delta
+            return (p2.astype(p.dtype), m2.astype(m.dtype), v2)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_m, new_v), gn
+
+    if cfg.name == "lion":
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32)
+            u = jnp.sign(cfg.b1 * m32 + (1 - cfg.b1) * g32)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - cfg.lr * u
+            m2 = cfg.b2 * m32 + (1 - cfg.b2) * g32
+            return (p2.astype(p.dtype), m2.astype(m.dtype))
+
+        out = jax.tree.map(upd, params, grads, state.m)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_m, state.v), gn
+
+    raise ValueError(cfg.name)
+
+
+def for_model(model_cfg) -> OptConfig:
+    return OptConfig(name=getattr(model_cfg, "optimizer", "adamw"),
+                     momentum_dtype=(jnp.bfloat16
+                                     if model_cfg.optimizer == "lion"
+                                     else jnp.float32))

@@ -1,0 +1,41 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real (single) device; only dryrun sets the 512-device flag, and the
+multi-device integration tests spawn subprocesses."""
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel, workload_for
+from repro.graphs.datagraph import DataGraph, synthetic_siot, synthetic_yelp
+from repro.graphs.edgenet import build_edge_network
+
+
+@pytest.fixture(scope="session")
+def small_yelp():
+    return synthetic_yelp(n=120, target_links=160)
+
+
+@pytest.fixture(scope="session")
+def small_siot():
+    return synthetic_siot(n=150, target_links=450)
+
+
+@pytest.fixture()
+def cm_small(small_yelp):
+    net = build_edge_network(small_yelp, 4, seed=0)
+    return CostModel(net, small_yelp, workload_for("gcn", 100))
+
+
+def random_graph(rng, n, extra_edges):
+    """Connected-ish random graph for property tests."""
+    edges = []
+    for v in range(1, n):
+        edges.append((rng.integers(0, v), v))
+    for _ in range(extra_edges):
+        u, v = rng.integers(0, n, size=2)
+        if u != v:
+            edges.append((min(u, v), max(u, v)))
+    g = DataGraph(n=n, edges=np.array(edges))
+    g.coords = rng.uniform(0, 10, size=(n, 2)).astype(np.float32)
+    g.features = rng.normal(size=(n, 8)).astype(np.float32)
+    g.labels = rng.integers(0, 2, size=n)
+    return g

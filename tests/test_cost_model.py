@@ -1,0 +1,84 @@
+"""Cost model (paper Eq. 4-9): brute-force cross-check + structural
+properties (Thm 2 pseudo-boolean decomposition, Thm 3 submodularity)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, workload_for
+from repro.graphs.edgenet import build_edge_network
+from tests.conftest import random_graph
+
+
+def brute_force_cost(cm, assign):
+    """Direct Eq. (4)-(9) evaluation, O(n^2) loops — the oracle."""
+    net, g = cm.net, cm.graph
+    gnn = cm.gnn
+    cu = sum(net.mu[v, assign[v]] for v in range(g.n))
+    deg = g.degrees
+    cp = 0.0
+    for v in range(g.n):
+        i = assign[v]
+        cp += (net.alpha[i] * deg[v] * gnn.agg_units
+               + net.beta[i] * gnn.upd_units + net.gamma[i] * gnn.act_units)
+    ct = sum(net.tau[assign[u], assign[v]] for u, v in g.edges)
+    cmn = sum(net.rho[assign[v]] for v in range(g.n)) + net.eps.sum()
+    return cu + cp + ct + cmn
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 5000))
+def test_vectorized_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, int(rng.integers(5, 25)), 10)
+    net = build_edge_network(g, int(rng.integers(2, 5)), seed=seed)
+    cm = CostModel(net, g, workload_for("gat", 8))
+    assign = rng.integers(0, net.m, size=g.n)
+    assert cm.total(assign) == pytest.approx(brute_force_cost(cm, assign),
+                                             rel=1e-9)
+
+
+def test_pseudo_boolean_decomposition(cm_small):
+    """C == C0 + C1(x) + C2(x,x) with the Thm-2 terms (unary/constant)."""
+    rng = np.random.default_rng(0)
+    g, net = cm_small.graph, cm_small.net
+    assign = rng.integers(0, net.m, size=g.n)
+    c1 = cm_small.unary[np.arange(g.n), assign].sum()
+    e = g.edges
+    c2 = net.tau[assign[e[:, 0]], assign[e[:, 1]]].sum()
+    total = c1 + c2 + cm_small.constant
+    assert total == pytest.approx(cm_small.total(assign), rel=1e-9)
+
+
+def test_factor_signs_and_zero_traffic_when_colocated(cm_small):
+    assign = np.zeros(cm_small.graph.n, dtype=np.int64)   # all on server 0
+    f = cm_small.factors(assign)
+    assert f["C_T"] == 0.0
+    assert all(v >= 0 for v in f.values())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000))
+def test_submodularity_marginal_fp(seed):
+    """Thm 3 for the compute factor: F_P(X, v) >= F_P(Y, v) for X ⊆ Y."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, 14, 12)
+    net = build_edge_network(g, 3, seed=seed)
+    cm = CostModel(net, g, workload_for("gcn", 8))
+    perm = rng.permutation(g.n)
+    kx, ky = sorted(rng.integers(1, g.n - 1, size=2))
+    X = np.zeros(g.n, bool)
+    Y = np.zeros(g.n, bool)
+    X[perm[:kx]] = True
+    Y[perm[:ky]] = True                      # X ⊆ Y by construction
+    outside = np.where(~Y)[0]
+    v = int(outside[rng.integers(0, len(outside))])
+    assert cm.marginal_fp(X, v) >= cm.marginal_fp(Y, v) - 1e-9
+
+
+def test_traffic_bytes_counts_cut_links(cm_small):
+    g = cm_small.graph
+    assign = np.arange(g.n) % cm_small.net.m
+    cut = (assign[g.edges[:, 0]] != assign[g.edges[:, 1]]).sum()
+    b = cm_small.traffic_bytes(assign, feat_bytes=4)
+    layers = len(cm_small.gnn.layer_dims) - 1
+    assert b == cut * 2 * 4 * layers

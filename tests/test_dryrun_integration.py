@@ -1,0 +1,32 @@
+"""Integration guard for deliverable (e): one full dry-run cell per family
+compiles on the production mesh in a 512-fake-device subprocess, and the
+artifact carries sane corrected roofline terms."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+CELLS = [
+    ("llama3.2-1b", "decode_32k"),        # dense serve + seq-sharded KV
+    ("zamba2-1.2b", "long_500k"),         # hybrid recurrent long-context
+]
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_dryrun_cell_compiles_and_reports(arch, shape, tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.abspath("src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=1500)
+    assert "1 ok" in r.stdout, r.stdout + r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "pod16x16" / f"{arch}__{shape}.json"))
+    assert rec["status"] == "ok"
+    rf = rec["roofline"]
+    assert rf["flops_per_device"] > 0
+    assert 0 < rf["useful_ratio"] <= 1.5
+    assert rf["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["memory"]["peak_estimate_bytes"] > 0

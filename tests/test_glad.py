@@ -1,0 +1,146 @@
+"""GLAD-S/E/A: pairwise-cut exactness (Thm 4), approximation (Thm 5),
+convergence (Thm 6), baselines dominance, incremental + adaptive behavior."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import greedy_layout, random_layout
+from repro.core.cost import CostModel, workload_for
+from repro.core.evolution import apply_delta, sample_delta
+from repro.core.glad_a import GladA, drift_bound
+from repro.core.glad_e import glad_e
+from repro.core.glad_s import glad_s, solve_pair
+from repro.graphs.edgenet import build_edge_network
+from tests.conftest import random_graph
+
+
+def brute_force_optimum(cm):
+    g, net = cm.graph, cm.net
+    best, best_a = np.inf, None
+    for assign in itertools.product(range(net.m), repeat=g.n):
+        a = np.array(assign)
+        c = cm.total(a)
+        if c < best:
+            best, best_a = c, a
+    return best, best_a
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000))
+def test_pairwise_cut_is_exact_two_servers(seed):
+    """Thm 4: with m=2 one solve_pair IS the optimal layout."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, int(rng.integers(3, 9)), 6)
+    net = build_edge_network(g, 2, seed=seed)
+    cm = CostModel(net, g, workload_for("gcn", 8))
+    init = rng.integers(0, 2, size=g.n)
+    prop = solve_pair(cm, init, 0, 1)
+    best, _ = brute_force_optimum(cm)
+    assert cm.total(prop) == pytest.approx(best, rel=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 5000))
+def test_glad_s_near_optimal_small(seed):
+    """Thm 5 sanity on brute-force-solvable instances: GLAD-S within the
+    2*lambda*C* + eps bound (and usually much closer)."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, 7, 5)
+    net = build_edge_network(g, 3, seed=seed)
+    cm = CostModel(net, g, workload_for("gcn", 8))
+    res = glad_s(cm, seed=seed)
+    best, _ = brute_force_optimum(cm)
+    lam = net.tau[net.tau > 0].max() / max(net.tau[net.tau > 0].min(), 1e-12)
+    assert res.cost <= 2 * lam * best + net.eps.sum() + 1e-6
+    assert res.cost >= best - 1e-9
+
+
+def test_glad_beats_baselines(cm_small):
+    res = glad_s(cm_small, seed=0)
+    r = cm_small.total(random_layout(cm_small, seed=0))
+    g = cm_small.total(greedy_layout(cm_small))
+    assert res.cost <= g + 1e-9
+    assert res.cost <= r + 1e-9
+
+
+def test_history_monotone_nonincreasing(cm_small):
+    res = glad_s(cm_small, seed=1)
+    h = np.array(res.history)
+    assert (np.diff(h) <= 1e-9).all()
+    assert res.iterations < 100_000           # converged (Thm 6)
+
+
+def test_feasibility_every_vertex_placed(cm_small):
+    res = glad_s(cm_small, seed=2)
+    assert res.assign.shape == (cm_small.graph.n,)
+    assert ((res.assign >= 0) & (res.assign < cm_small.net.m)).all()
+
+
+def test_active_mask_freezes_vertices(cm_small):
+    rng = np.random.default_rng(3)
+    init = rng.integers(0, cm_small.net.m, size=cm_small.graph.n)
+    active = np.zeros(cm_small.graph.n, bool)
+    active[:10] = True
+    res = glad_s(cm_small, init=init, active=active, seed=3)
+    assert (res.assign[10:] == init[10:]).all()
+
+
+# ------------------------------------------------------------------- GLAD-E
+def test_glad_e_improves_and_limits_migration(small_yelp):
+    gnn = workload_for("gcn", 100)
+    net = build_edge_network(small_yelp, 4, seed=0)
+    cm0 = CostModel(net, small_yelp, gnn)
+    res0 = glad_s(cm0, seed=0)
+
+    delta = sample_delta(small_yelp, pct_links=0.1, pct_vertices=0.05, seed=7)
+    g1 = apply_delta(small_yelp, delta)
+    net1 = build_edge_network(g1, 4, seed=0)
+    net1.mu = net1.mu[:g1.n]
+    cm1 = CostModel(net1, g1, gnn)
+    res1 = glad_e(cm1, small_yelp, res0.assign, seed=1)
+    carried = np.zeros(g1.n, dtype=np.int64)
+    carried[:small_yelp.n] = res0.assign[:small_yelp.n]
+    # GLAD-E should not be worse than naive carry-forward with greedy seeds.
+    assert res1.cost <= cm1.total(res1.assign) + 1e-9
+    assert np.isfinite(res1.cost)
+
+
+def test_drift_bound_is_upper_bound(small_yelp):
+    """Thm 8: the computable bound dominates the true drift f(t)."""
+    gnn = workload_for("gcn", 100)
+    net = build_edge_network(small_yelp, 4, seed=0)
+    cm0 = CostModel(net, small_yelp, gnn)
+    res0 = glad_s(cm0, seed=0)
+    delta = sample_delta(small_yelp, pct_links=0.05, seed=11)
+    g1 = apply_delta(small_yelp, delta)
+    cm1 = CostModel(net, g1, gnn)
+    bound = drift_bound(cm1, small_yelp, res0.assign, res0.cost)
+    res_e = glad_e(cm1, small_yelp, res0.assign, seed=1)
+    res_s = glad_s(cm1, seed=1, init=res_e.assign)
+    true_drift = max(0.0, res_e.cost - res_s.cost)
+    assert bound >= true_drift - 1e-6
+
+
+def test_glad_a_switches_between_algorithms(small_yelp):
+    gnn = workload_for("gcn", 100)
+    net = build_edge_network(small_yelp, 4, seed=0)
+    sched = GladA(net, gnn, small_yelp, theta=1e-6, seed=0)   # tight SLA
+    g = small_yelp
+    algos = []
+    for t in range(4):
+        delta = sample_delta(g, pct_links=0.08, seed=100 + t)
+        g = apply_delta(g, delta)
+        rec = sched.step(g)
+        algos.append(rec.algorithm)
+    # With a near-zero SLA, global re-layout must fire at least once.
+    assert "glad-s" in algos
+    sched2 = GladA(net, gnn, small_yelp, theta=1e12, seed=0)  # loose SLA
+    g = small_yelp
+    algos2 = []
+    for t in range(4):
+        delta = sample_delta(g, pct_links=0.08, seed=100 + t)
+        g = apply_delta(g, delta)
+        algos2.append(sched2.step(g).algorithm)
+    assert all(a == "glad-e" for a in algos2)

@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.gnn.models import directed_edges
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gnn_aggregate import build_bsr, spmm
+from repro.kernels.ops import BSRAggregate
+from repro.kernels.ref import attention_ref, spmm_ref
+from tests.conftest import random_graph
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------- spmm
+@pytest.mark.parametrize("n,extra,bm,bk,d", [
+    (40, 60, 8, 128, 128),
+    (100, 200, 8, 128, 256),
+    (17, 10, 16, 128, 128),
+    (250, 500, 8, 256, 128),
+])
+def test_spmm_matches_ref_and_segment_sum(n, extra, bm, bk, d):
+    g = random_graph(RNG, n, extra)
+    sd = directed_edges(g.edges)
+    vals, cols, n_dst, n_src = build_bsr(sd, None, n, bm, bk)
+    feats = RNG.normal(size=(n_src, d)).astype(np.float32)
+    out = spmm(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(feats),
+               bm=bm, bk=bk, interpret=True)
+    ref = spmm_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(feats),
+                   bm, bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    oracle = jax.ops.segment_sum(jnp.asarray(feats)[sd[:, 0]],
+                                 jnp.asarray(sd[:, 1]), num_segments=n_dst)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_weighted_edges():
+    g = random_graph(RNG, 30, 40)
+    sd = directed_edges(g.edges)
+    w = RNG.uniform(0.1, 2.0, size=len(sd)).astype(np.float32)
+    vals, cols, n_dst, n_src = build_bsr(sd, w, g.n, 8, 128)
+    feats = RNG.normal(size=(n_src, 128)).astype(np.float32)
+    out = spmm(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(feats),
+               bm=8, bk=128, interpret=True)
+    oracle = jax.ops.segment_sum(
+        jnp.asarray(w)[:, None] * jnp.asarray(feats)[sd[:, 0]],
+        jnp.asarray(sd[:, 1]), num_segments=n_dst)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_aggregate_wrapper_pads_feature_dim(small_yelp):
+    sd = directed_edges(small_yelp.edges)
+    agg = BSRAggregate(sd, small_yelp.n)
+    out = agg(jnp.asarray(small_yelp.features), impl="ref")
+    oracle = jax.ops.segment_sum(
+        jnp.asarray(small_yelp.features)[sd[:, 0]], jnp.asarray(sd[:, 1]),
+        num_segments=small_yelp.n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- attention
+CASES = [
+    # B, Hq, Hkv, Lq, Lk, D, causal, kv_len, dtype
+    (2, 4, 2, 128, 128, 64, True, None, jnp.float32),
+    (1, 8, 8, 192, 192, 64, True, None, jnp.float32),
+    (2, 4, 1, 100, 100, 32, True, None, jnp.float32),
+    (1, 4, 2, 1, 256, 64, True, [190], jnp.float32),
+    (2, 2, 2, 64, 64, 16, False, None, jnp.float32),
+    (1, 4, 4, 96, 160, 64, True, None, jnp.float32),
+    (2, 4, 2, 64, 64, 64, True, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Lq,Lk,D,causal,kv_len,dtype", CASES)
+def test_flash_attention_sweep(B, Hq, Hkv, Lq, Lk, D, causal, kv_len, dtype):
+    rng = np.random.default_rng(B * 100 + Lq)
+    q = jnp.asarray(rng.normal(size=(B, Hq, Lq, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Lk, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Lk, D)), dtype)
+    kl = jnp.asarray(kv_len, jnp.int32) if kv_len else None
+    out = flash_attention(q, k, v, kl, causal=causal, bq=64, bkv=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, kv_len=kl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_flash_attention_property(seed):
+    """Random shapes: kernel == reference."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 3))
+    Hkv = int(rng.integers(1, 3))
+    Hq = Hkv * int(rng.integers(1, 4))
+    Lq = int(rng.integers(1, 70))
+    Lk = Lq + int(rng.integers(0, 70))
+    D = int(rng.choice([16, 32, 64]))
+    q = jnp.asarray(rng.normal(size=(B, Hq, Lq, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Lk, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Lk, D)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True, bq=32, bkv=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_attention_softmax_rows_bounded():
+    """Outputs are convex combinations of V rows (within numerics)."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 16)).astype(np.float32))
+    v = jnp.asarray(rng.uniform(0, 1, size=(1, 2, 32, 16)).astype(np.float32))
+    out = flash_attention(q, q, v, causal=True, bq=16, bkv=16, interpret=True)
+    assert float(out.min()) >= -1e-5
+    assert float(out.max()) <= 1.0 + 1e-5

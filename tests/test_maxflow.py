@@ -1,0 +1,68 @@
+"""Max-flow/min-cut: scipy backend vs pure-python Dinic oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.maxflow import Dinic, min_st_cut
+
+
+def _random_network(rng, n, m):
+    us = rng.integers(0, n, size=m)
+    vs = rng.integers(0, n, size=m)
+    keep = us != vs
+    us, vs = us[keep], vs[keep]
+    caps = rng.uniform(0.1, 5.0, size=len(us)).round(3)
+    return us, vs, caps
+
+
+def test_known_cut_value():
+    # s -> a (3), s -> b (2), a -> t (2), b -> t (3), a -> b (1): max flow 5.
+    us = np.array([0, 0, 1, 2, 1])
+    vs = np.array([1, 2, 3, 3, 2])
+    caps = np.array([3.0, 2.0, 2.0, 3.0, 1.0])
+    zero = np.zeros(5)
+    for backend in ("scipy", "dinic"):
+        val, side = min_st_cut(4, 0, 3, us, vs, caps, zero, backend=backend)
+        assert val == pytest.approx(5.0, abs=1e-6)
+        assert side[0] and not side[3]
+
+
+def test_disconnected_zero_flow():
+    val, side = min_st_cut(4, 0, 3, np.array([0]), np.array([1]),
+                           np.array([1.0]), np.array([0.0]), backend="dinic")
+    assert val == 0.0
+    assert side[0] and not side[3]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_backends_agree_on_cut_value(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 12))
+    m = int(rng.integers(n, 4 * n))
+    us, vs, caps = _random_network(rng, n, m)
+    if len(us) == 0:
+        return
+    zero = np.zeros(len(us))
+    v1, s1 = min_st_cut(n, 0, n - 1, us, vs, caps, zero, backend="scipy")
+    v2, s2 = min_st_cut(n, 0, n - 1, us, vs, caps, zero, backend="dinic")
+    assert v1 == pytest.approx(v2, rel=1e-5, abs=1e-5)
+    # Both sides must be valid s-t separations.
+    for s in (s1, s2):
+        assert s[0] and not s[n - 1]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cut_value_equals_crossing_capacity(seed):
+    """Min-cut duality: flow value == capacity crossing the returned cut."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 10))
+    us, vs, caps = _random_network(rng, n, 3 * n)
+    if len(us) == 0:
+        return
+    zero = np.zeros(len(us))
+    val, side = min_st_cut(n, 0, n - 1, us, vs, caps, zero, backend="dinic")
+    crossing = sum(c for u, v, c in zip(us, vs, caps)
+                   if side[u] and not side[v])
+    assert val == pytest.approx(crossing, rel=1e-6, abs=1e-6)

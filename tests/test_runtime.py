@@ -1,0 +1,82 @@
+"""Fault-tolerance runtime: detection, elastic GLAD re-layout, stragglers."""
+import numpy as np
+import pytest
+
+from repro.core import CostModel, workload_for, data_partition
+from repro.graphs import synthetic_yelp
+from repro.graphs.edgenet import pod_edge_network
+from repro.runtime import ElasticCoordinator, FailureDetector
+
+
+@pytest.fixture()
+def cluster():
+    g = synthetic_yelp(n=200, target_links=300)
+    gnn = workload_for("gcn", 100)
+    net = pod_edge_network(6, g.n, pods=2, seed=0)
+    # Heterogeneous-ish rho so the layout spreads across servers.
+    net.rho = np.linspace(0.1, 0.2, 6)
+    part = data_partition(g, gnn, num_parts=6, net=net, seed=0)
+    return g, gnn, net, part
+
+
+def test_failure_detector_timeout_and_recovery():
+    fd = FailureDetector(4, timeout_s=10)
+    for d in range(4):
+        fd.heartbeat(d, now=0.0)
+    fd.heartbeat(0, now=12.0)
+    dead = fd.sweep(now=15.0)
+    assert set(dead) == {1, 2, 3}
+    fd.heartbeat(1, now=16.0)               # node came back
+    assert fd.devices[1].alive
+    assert fd.sweep(now=17.0) == []
+
+
+def test_straggler_detection_ewma():
+    fd = FailureDetector(4)
+    for s in range(6):
+        for d in range(4):
+            fd.heartbeat(d, now=float(s), step_time_s=5.0 if d == 2 else 1.0)
+    assert fd.stragglers(factor=2.0) == [2]
+
+
+def test_elastic_failure_relayout_no_orphans(cluster):
+    g, gnn, net, part = cluster
+    # Force some vertices onto server 5 so the failure actually migrates.
+    assign = part.assign.copy()
+    assign[:40] = 5
+    from repro.core.partition import partition_from_assign
+    cm = CostModel(net, g, gnn)
+    part = partition_from_assign(g, assign, 6, cm.factors(assign))
+    coord = ElasticCoordinator(net, g, gnn, part)
+    newp = coord.on_failure([5])
+    assert not (newp.assign == 5).any()
+    ev = coord.events[-1]
+    assert ev.migrated >= 40
+    assert np.isfinite(ev.new_cost)
+
+
+def test_straggler_relayout_reduces_load_on_slow_server(cluster):
+    g, gnn, net, part = cluster
+    from repro.core.partition import partition_from_assign
+    assign = np.zeros(g.n, dtype=np.int64)          # all on server 0
+    cm = CostModel(net, g, gnn)
+    part = partition_from_assign(g, assign, 6, cm.factors(assign))
+    coord = ElasticCoordinator(net, g, gnn, part)
+    before = (part.assign == 0).sum()
+    newp = coord.on_straggler([0], slow_factor=50.0)
+    after = (newp.assign == 0).sum()
+    assert after < before                            # load moved off
+
+
+def test_checkpoint_restore_after_failure_smaller_mesh(tmp_path):
+    """Elastic restart: save under one 'mesh', restore leaves host-side —
+    mesh shape never constrains the restore."""
+    import jax, jax.numpy as jnp
+    from repro.train import CheckpointManager
+    ck = CheckpointManager(str(tmp_path), async_write=False)
+    state = {"w": jnp.arange(64.0).reshape(8, 8)}
+    ck.save(1, state, extra={"mesh": "2x16x16"})
+    restored, man = ck.restore(1, state)
+    assert man["extra"]["mesh"] == "2x16x16"
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
