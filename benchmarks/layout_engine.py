@@ -1,0 +1,266 @@
+"""Layout-engine benchmark: incremental delta-cost engine vs the seed path.
+
+Measures GLAD-S wall time and iterations/sec at n in {1k, 5k, 20k} and
+m in {8, 16} on SIoT-shaped graphs, comparing three paths on the same seeds:
+
+  * ``seed``        — a vendored, faithful copy of the seed-commit Alg. 1
+                      (full O(n+m) total() per proposal, dict/loop auxiliary
+                      construction, Python residual BFS) — the baseline the
+                      speedup is measured against.
+  * ``incremental`` — repro.core.engine: cached delta-cost accept path,
+                      vectorized auxiliary assembly, symmetric-CSR flow
+                      solves, dirty-pair skipping.  Bit-identical trajectory.
+  * ``batched``     — the incremental engine sweeping disjoint-pair
+                      matchings per round.
+
+Emits BENCH_layout.json.  Per cell: wall time of each path, the headline
+``speedup`` (fastest GLAD-S engine configuration whose final cost matches
+the seed engine within 1e-6 relative — both sweeps converge to the seed's
+cost to ~1e-15 at exhaustive R), per-path speedups/costs, and iterations/s.
+
+Usage: PYTHONPATH=src python benchmarks/layout_engine.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.glad_s import glad_s
+from repro.graphs.datagraph import synthetic_siot
+from repro.graphs.edgenet import build_edge_network
+
+# --------------------------------------------------------------------------
+# Vendored seed path (commit 112a22e), kept verbatim so the baseline cannot
+# silently inherit engine-era optimizations.  Only the module plumbing
+# (imports, names) is adapted.
+# --------------------------------------------------------------------------
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import maximum_flow as _scipy_maxflow
+
+_SCALE = 10 ** 7
+
+
+def _seed_min_st_cut(n, s, t, edges_u, edges_v, caps_uv, caps_vu):
+    """Seed-commit scipy path: COO build + Python residual BFS."""
+    u = np.concatenate([edges_u, edges_v])
+    v = np.concatenate([edges_v, edges_u])
+    c = np.concatenate([caps_uv, caps_vu])
+    keep = c > 0
+    u, v, c = u[keep], v[keep], c[keep]
+    cmax = float(c.max()) if len(c) else 1.0
+    scale = _SCALE / max(cmax, 1e-30)
+    ci = np.round(c * scale).astype(np.int64)
+    ci = np.maximum(ci, 0)
+    mat = csr_matrix((ci, (u, v)), shape=(n, n))
+    mat.sum_duplicates()
+    res = _scipy_maxflow(mat, s, t)
+    residual = mat - res.flow
+    side = np.zeros(n, dtype=bool)
+    side[s] = True
+    q = deque([s])
+    indptr, indices, data = residual.indptr, residual.indices, residual.data
+    while q:
+        x = q.popleft()
+        for k in range(indptr[x], indptr[x + 1]):
+            y = indices[k]
+            if data[k] > 0 and not side[y]:
+                side[y] = True
+                q.append(y)
+    return res.flow_value / scale, side
+
+
+def _seed_solve_pair(cm, assign, i, j):
+    members = np.where((assign == i) | (assign == j))[0]
+    if len(members) == 0:
+        return None
+    net, graph = cm.net, cm.graph
+    n_aux = len(members) + 2
+    S, T = len(members), len(members) + 1
+    aux_id = {int(v): k for k, v in enumerate(members)}
+    theta_i = cm.unary[members, i].astype(np.float64).copy()
+    theta_j = cm.unary[members, j].astype(np.float64).copy()
+    edges = graph.edges
+    weights = graph.weights_or_ones()
+    eu, ev = edges[:, 0], edges[:, 1]
+    m_mask = np.zeros(graph.n, dtype=bool)
+    m_mask[members] = True
+    internal = m_mask[eu] & m_mask[ev]
+    bnd_u = m_mask[eu] & ~m_mask[ev]
+    bnd_v = ~m_mask[eu] & m_mask[ev]
+    if bnd_u.any():
+        ins, outs, w = eu[bnd_u], ev[bnd_u], weights[bnd_u]
+        np.add.at(theta_i, [aux_id[int(x)] for x in ins],
+                  net.tau[i, assign[outs]] * w)
+        np.add.at(theta_j, [aux_id[int(x)] for x in ins],
+                  net.tau[j, assign[outs]] * w)
+    if bnd_v.any():
+        ins, outs, w = ev[bnd_v], eu[bnd_v], weights[bnd_v]
+        np.add.at(theta_i, [aux_id[int(x)] for x in ins],
+                  net.tau[i, assign[outs]] * w)
+        np.add.at(theta_j, [aux_id[int(x)] for x in ins],
+                  net.tau[j, assign[outs]] * w)
+    k = len(members)
+    us = [S] * k + [kk for kk in range(k)]
+    vs = list(range(k)) + [T] * k
+    caps_uv = list(theta_j) + list(theta_i)
+    caps_vu = [0.0] * (2 * k)
+    if internal.any():
+        tij = float(net.tau[i, j])
+        for a, b, w in zip(eu[internal], ev[internal], weights[internal]):
+            us.append(aux_id[int(a)])
+            vs.append(aux_id[int(b)])
+            caps_uv.append(tij * w)
+            caps_vu.append(tij * w)
+    _, side = _seed_min_st_cut(
+        n_aux, S, T, np.array(us), np.array(vs),
+        np.array(caps_uv), np.array(caps_vu))
+    proposal = assign.copy()
+    on_source = side[:k]
+    proposal[members[on_source]] = i
+    proposal[members[~on_source]] = j
+    return proposal
+
+
+def seed_glad_s(cm, R=None, seed=0, max_iterations=100_000):
+    """Seed-commit Algorithm 1 driver (full total() on the accept path)."""
+    rng = np.random.default_rng(seed)
+    net, graph = cm.net, cm.graph
+    t0 = time.perf_counter()
+    assign = rng.integers(0, net.m, size=graph.n).astype(np.int64)
+    pairs = net.pairs
+    if R is None:
+        R = net.m * (net.m - 1) // 2
+    visits = np.zeros(len(pairs), dtype=np.int64)
+    cur_cost = cm.total(assign)
+    history = [cur_cost]
+    r = iters = accepted = 0
+    while r <= R and iters < max_iterations:
+        mn = visits.min()
+        cand = np.where(visits == mn)[0]
+        p = cand[rng.integers(0, len(cand))]
+        visits[p] += 1
+        i, j = int(pairs[p, 0]), int(pairs[p, 1])
+        proposal = _seed_solve_pair(cm, assign, i, j)
+        iters += 1
+        if proposal is not None:
+            new_cost = cm.total(proposal)
+            if new_cost < cur_cost - 1e-9:
+                assign, cur_cost = proposal, new_cost
+                accepted += 1
+                r = 0
+            else:
+                r += 1
+        else:
+            r += 1
+        history.append(cur_cost)
+    return {
+        "assign": assign, "cost": cur_cost, "iterations": iters,
+        "accepted": accepted, "wall_time_s": time.perf_counter() - t0,
+    }
+
+
+# --------------------------------------------------------------------------
+def run_cell(n: int, m: int, seed: int = 0, R=None, reps: int = 3):
+    target_links = int(n * 4.2)           # SIoT link density (33509/8001)
+    g = synthetic_siot(n=n, target_links=target_links, seed=seed)
+    net = build_edge_network(g, m, seed=seed)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+
+    # Interleave the three paths' repetitions so shared-box scheduler noise
+    # hits them alike; the runs are deterministic (identical work), so the
+    # per-path MIN is the noise-filtered wall time.
+    fns = {
+        "seed": lambda: seed_glad_s(cm, R=R, seed=seed),
+        "incremental": lambda: glad_s(cm, R=R, seed=seed),
+        "batched": lambda: glad_s(cm, R=R, seed=seed, sweep="batched"),
+    }
+    best = {k: float("inf") for k in fns}
+    out = {}
+    for _ in range(max(1, reps)):
+        for key, fn in fns.items():
+            t0 = time.perf_counter()
+            out[key] = fn()
+            best[key] = min(best[key], time.perf_counter() - t0)
+    sd, inc, bat = out["seed"], out["incremental"], out["batched"]
+    sd["wall_time_s"] = best["seed"]
+    t_inc, t_bat = best["incremental"], best["batched"]
+
+    rel_inc = abs(inc.cost - sd["cost"]) / max(abs(sd["cost"]), 1e-12)
+    rel_bat = abs(bat.cost - sd["cost"]) / max(abs(sd["cost"]), 1e-12)
+    # Headline speedup: the fastest GLAD-S engine configuration whose final
+    # cost matches the seed engine within 1e-6 relative (at the exhaustive-R
+    # setting both the trajectory-identical single sweep and the batched
+    # matching sweep converge to the seed's cost to ~1e-15).
+    candidates = [
+        (s, r)
+        for s, r in ((sd["wall_time_s"] / t_inc, rel_inc),
+                     (sd["wall_time_s"] / t_bat, rel_bat))
+        if r < 1e-6
+    ]
+    if not candidates:   # no config matched the seed cost: report the
+        candidates = [(sd["wall_time_s"] / t_inc, rel_inc)]  # mismatch
+    speedup, rel = max(candidates)
+    return {
+        "n": n, "m": m, "R": "exhaustive" if R is None else R,
+        "seed_wall_s": round(sd["wall_time_s"], 4),
+        "incremental_wall_s": round(t_inc, 4),
+        "batched_wall_s": round(t_bat, 4),
+        "speedup": round(speedup, 2),
+        "rel_cost_err": rel,
+        "incremental_speedup": round(sd["wall_time_s"] / t_inc, 2),
+        "batched_speedup": round(sd["wall_time_s"] / t_bat, 2),
+        "seed_cost": sd["cost"],
+        "incremental_cost": inc.cost,
+        "batched_cost": bat.cost,
+        "rel_cost_err_incremental": rel_inc,
+        "rel_cost_err_batched": rel_bat,
+        "iters_per_sec_seed": round(sd["iterations"] / sd["wall_time_s"], 1),
+        "iters_per_sec_incremental": round(inc.iterations / t_inc, 1),
+        "seed_iterations": sd["iterations"],
+        "incremental_iterations": inc.iterations,
+        "batched_iterations": bat.iterations,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="n=1k/5k only (CI-sized)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="repetitions per path; min wall time is reported")
+    ap.add_argument("--out", default="BENCH_layout.json")
+    args = ap.parse_args(argv)
+
+    sizes = [1000, 5000] if args.quick else [1000, 5000, 20000]
+    cells = []
+    for n in sizes:
+        for m in (8, 16):
+            cell = run_cell(n, m, reps=args.reps)
+            cells.append(cell)
+            print(f"n={n:>6} m={m:>2}: seed {cell['seed_wall_s']:.2f}s "
+                  f"incremental {cell['incremental_wall_s']:.2f}s "
+                  f"({cell['incremental_speedup']}x) "
+                  f"batched {cell['batched_wall_s']:.2f}s "
+                  f"({cell['batched_speedup']}x) -> speedup {cell['speedup']}x "
+                  f"rel_err {cell['rel_cost_err']:.2e}")
+    out = {
+        "benchmark": "layout_engine",
+        "graph": "synthetic_siot (links ~ 4.2n)",
+        "workload": "gcn d=52",
+        "R": "exhaustive |D|(|D|-1)/2",
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

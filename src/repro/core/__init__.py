@@ -1,4 +1,5 @@
-from repro.core.cost import CostModel, GNNWorkload, workload_for
+from repro.core.cost import CostModel, GNNWorkload, LayoutState, workload_for
+from repro.core.engine import PairCutEngine, round_robin_rounds
 from repro.core.glad_s import GladResult, glad_s, solve_pair
 from repro.core.glad_e import glad_e
 from repro.core.glad_a import GladA, drift_bound
@@ -12,7 +13,8 @@ from repro.core.partition import (
 )
 
 __all__ = [
-    "CostModel", "GNNWorkload", "workload_for",
+    "CostModel", "GNNWorkload", "LayoutState", "workload_for",
+    "PairCutEngine", "round_robin_rounds",
     "GladResult", "glad_s", "solve_pair", "glad_e", "GladA", "drift_bound",
     "greedy_layout", "random_layout", "uploading_first_layout",
     "GraphDelta", "apply_delta", "changed_vertices", "evolution_trace",

@@ -81,25 +81,27 @@ class CostModel:
     """Vectorized evaluator of the four cost factors for a (net, graph, gnn)."""
 
     def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload):
-        self.net = net
-        self.graph = graph
-        self.gnn = gnn
-        self._unary = None
         # Graph evolution can add clients the fleet has no upload entry for
         # yet (Sec. V-A): derive mu for them from coordinates when present,
-        # else charge the fleet-average upload cost.
+        # else charge the fleet-average upload cost.  The padded mu lives on
+        # a shallow copy — the caller's EdgeNetwork (often shared between
+        # several CostModels over different graph snapshots) is never
+        # mutated.
         if net.mu.shape[0] < graph.n:
             extra = graph.n - net.mu.shape[0]
             if graph.coords is not None and net.coords is not None:
                 d = np.linalg.norm(
                     graph.coords[net.mu.shape[0]:, None, :]
                     - net.coords[None, :, :], axis=-1)
-                base = net.mu.mean() / max(np.mean(
-                    np.linalg.norm(net.coords, axis=-1)), 1e-9)
                 new_mu = d * (net.mu.mean() / max(d.mean(), 1e-9))
             else:
                 new_mu = np.tile(net.mu.mean(0, keepdims=True), (extra, 1))
-            net.mu = np.concatenate([net.mu, new_mu], axis=0)
+            net = dataclasses.replace(
+                net, mu=np.concatenate([net.mu, new_mu], axis=0))
+        self.net = net
+        self.graph = graph
+        self.gnn = gnn
+        self._unary = None
 
     # ------------------------------------------------------------ components
     @property
@@ -155,15 +157,30 @@ class CostModel:
         return float(cut.sum()) * 2 * feat_bytes * (len(self.gnn.layer_dims) - 1)
 
     # --------------------------------------------------- marginal quantities
+    def marginal_all(
+        self, placed: np.ndarray, assign: np.ndarray, v: int
+    ) -> np.ndarray:
+        """Incremental placement cost of vertex v at EVERY server, given the
+        subset mask ``placed`` with layout ``assign``: (m,) vector.
+
+        Vectorized over servers x placed neighbors — used by GLAD-E to seed
+        newly-inserted vertices (argmin) and by GLAD-A's drift bound (max,
+        Thm 8)."""
+        out = self.unary[v].astype(np.float64).copy()
+        nbrs = self.graph.neighbors(v)
+        if len(nbrs):
+            nbrs = nbrs[placed[nbrs]]
+        if len(nbrs):
+            out += self.net.tau[:, assign[nbrs]].sum(axis=1)
+        return out
+
     def marginal(self, placed: np.ndarray, assign: np.ndarray, v: int, i: int) -> float:
-        """Incremental placement cost of adding vertex v at server i given the
-        subset mask ``placed`` with layout ``assign`` — used by GLAD-E to seed
-        newly-inserted vertices and by GLAD-A's drift bound (Thm 8)."""
-        delta = self.unary[v, i]
-        for u in self.graph.neighbors(v):
-            if placed[u]:
-                delta += self.net.tau[i, assign[u]]
-        return float(delta)
+        """Scalar view of :meth:`marginal_all` (kept for the Thm-8 tests)."""
+        return float(self.marginal_all(placed, assign, v)[i])
+
+    def layout_state(self, assign: np.ndarray) -> "LayoutState":
+        """Cached per-assignment state for O(moved + incident) delta costs."""
+        return LayoutState(self, assign)
 
     def marginal_fp(self, subset: np.ndarray, v: int) -> float:
         """Paper's F_P(X, v) under auxiliary-graph accounting (Thm 3, Eq. 14):
@@ -177,3 +194,116 @@ class CostModel:
         # Use mean C_P(u, ·) — server-independent comparison is what Thm 3 uses
         # (the newly added vertex goes to the *same* server for X and Y).
         return float(self.cp_matrix[new, 0].sum()) if new else 0.0
+
+
+class LayoutState:
+    """Cached evaluation state of one assignment under one CostModel.
+
+    Holds the per-vertex unary picks ``unary[v, assign[v]]`` and the
+    per-edge quadratic contributions ``tau[a_u, a_v] * w_uv`` so that the
+    cost change of moving a vertex subset is computable in
+    O(|moved| + incident links) — the accept path of the layout engine
+    never re-evaluates the full O(n+m) objective.
+
+    Invariant: ``total == unary_pick.sum() + edge_ct.sum() + cm.constant``
+    (Thm 2's C1 + C2 + C0), kept exact by routing every mutation through
+    :meth:`commit`.
+    """
+
+    def __init__(self, cm: CostModel, assign: np.ndarray):
+        self.cm = cm
+        self.assign = np.array(assign, dtype=np.int64)      # owned copy
+        g = cm.graph
+        if self.assign.shape != (g.n,):
+            raise ValueError(
+                f"assign shape {self.assign.shape} != ({g.n},)")
+        idx = np.arange(g.n)
+        self.unary_pick = cm.unary[idx, self.assign].astype(np.float64)
+        e = g.edges
+        self._w = g.weights_or_ones().astype(np.float64)
+        if len(e):
+            self.edge_ct = (
+                cm.net.tau[self.assign[e[:, 0]], self.assign[e[:, 1]]]
+                * self._w)
+        else:
+            self.edge_ct = np.zeros(0, dtype=np.float64)
+        self.total = float(
+            self.unary_pick.sum() + self.edge_ct.sum() + cm.constant)
+        # Proposal overlay: kept identical to ``assign`` between calls so
+        # delta() can evaluate incident edges against the proposed layout
+        # without copying the full vector.
+        self._overlay = self.assign.copy()
+        self._pending = None
+
+    # ------------------------------------------------------------- delta API
+    def _delta_parts(self, moved: np.ndarray, new_servers: np.ndarray):
+        cm, g = self.cm, self.cm.graph
+        du = float(
+            cm.unary[moved, new_servers].sum()
+            - self.unary_pick[moved].sum())
+        eids = g.incident_edge_ids(moved)
+        if len(eids) == 0:
+            return du, eids, np.zeros(0, dtype=np.float64)
+        overlay = self._overlay
+        overlay[moved] = new_servers
+        e = g.edges
+        new_ct = (
+            cm.net.tau[overlay[e[eids, 0]], overlay[e[eids, 1]]]
+            * self._w[eids])
+        overlay[moved] = self.assign[moved]                  # restore
+        return du + float(new_ct.sum() - self.edge_ct[eids].sum()), eids, new_ct
+
+    def delta(self, moved: np.ndarray, new_servers: np.ndarray) -> float:
+        """Exact cost change of re-assigning ``moved[k] -> new_servers[k]``
+        (everything else fixed), in O(|moved| + incident links)."""
+        moved = np.asarray(moved, dtype=np.int64)
+        new_servers = np.asarray(new_servers, dtype=np.int64)
+        d, _, _ = self._delta_parts(moved, new_servers)
+        return d
+
+    def commit(self, moved: np.ndarray, new_servers: np.ndarray) -> float:
+        """Apply the move, updating all caches incrementally; returns the
+        (exact) delta that was applied."""
+        moved = np.asarray(moved, dtype=np.int64)
+        new_servers = np.asarray(new_servers, dtype=np.int64)
+        return self._apply(moved, new_servers,
+                           self._delta_parts(moved, new_servers))
+
+    def propose(self, moved: np.ndarray, new_servers: np.ndarray) -> float:
+        """Like :meth:`delta`, but keeps the computed parts so an immediate
+        :meth:`commit_pending` applies them without re-evaluation (the
+        engine's accept path: one delta pass per accepted move)."""
+        moved = np.asarray(moved, dtype=np.int64)
+        new_servers = np.asarray(new_servers, dtype=np.int64)
+        parts = self._delta_parts(moved, new_servers)
+        self._pending = (moved, new_servers, parts)
+        return parts[0]
+
+    def commit_pending(self) -> float:
+        if self._pending is None:
+            raise RuntimeError("no pending proposal: call propose() first")
+        moved, new_servers, parts = self._pending
+        return self._apply(moved, new_servers, parts)
+
+    def discard_pending(self) -> None:
+        """Drop a rejected proposal so a later commit_pending() cannot
+        apply stale parts."""
+        self._pending = None
+
+    def _apply(self, moved, new_servers, parts) -> float:
+        # Any commit invalidates an outstanding proposal (its cached edge
+        # contributions were computed against the pre-commit layout).
+        self._pending = None
+        d, eids, new_ct = parts
+        self.assign[moved] = new_servers
+        self._overlay[moved] = new_servers
+        self.unary_pick[moved] = self.cm.unary[moved, new_servers]
+        if len(eids):
+            self.edge_ct[eids] = new_ct
+        self.total += d
+        return d
+
+    def factors(self) -> Dict[str, float]:
+        """Full factor breakdown of the current assignment (O(n+m); for
+        reporting — never on the per-iteration accept path)."""
+        return self.cm.factors(self.assign)

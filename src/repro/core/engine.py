@@ -1,0 +1,382 @@
+"""Incremental pairwise min-cut layout engine (the fast path behind GLAD).
+
+The seed implementation of Alg. 1 re-evaluated the full O(n+m) objective per
+proposal and rebuilt every auxiliary graph with per-edge Python loops; at the
+ROADMAP's production graph sizes the *optimizer* dominated end-to-end time.
+This engine makes one Alg.-1 iteration cost O(|members| + vol(members)):
+
+  * cached assignment state (:class:`repro.core.cost.LayoutState`) turns the
+    accept decision into an exact delta over moved vertices + incident links;
+  * auxiliary graphs are assembled with pure array ops — global->local index
+    translation via preallocated scratch vectors, incident-edge discovery via
+    the CSR edge-id view (no scan of the global edge list);
+  * scratch buffers (member mask, local ids, theta vectors, flow arenas) are
+    allocated once and reused across iterations;
+  * a *batched sweep* solves a round-robin matching of disjoint server pairs
+    per round.  Disjoint pairs touch disjoint member sets, so their cuts can
+    be solved from one snapshot and composed; every acceptance still uses an
+    exact delta against the live state, so composing never mis-accepts.
+
+The engine preserves the paper's auxiliary-graph semantics exactly
+(Sec. IV-B: t-link = unary + side-effect traffic to third servers, n-link =
+tau_ij per internal link), so Thm 4-6 continue to hold per pair.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost import CostModel, LayoutState
+from repro.core.maxflow import _HAVE_SCIPY, CutArena, min_st_cut, min_st_cut_csr
+from repro.graphs.datagraph import csr_multirange
+
+
+def round_robin_rounds(m: int) -> List[List[Tuple[int, int]]]:
+    """Circle-method tournament schedule: m-1 rounds (m even; m rounds if
+    odd) of vertex-disjoint pairs that jointly cover every pair i < j."""
+    ids = list(range(m))
+    if m % 2:
+        ids.append(-1)                       # bye slot
+    k = len(ids)
+    rounds: List[List[Tuple[int, int]]] = []
+    for _ in range(max(k - 1, 0)):
+        rnd = []
+        for a in range(k // 2):
+            x, y = ids[a], ids[k - 1 - a]
+            if x >= 0 and y >= 0:
+                rnd.append((min(x, y), max(x, y)))
+        rounds.append(rnd)
+        ids = [ids[0], ids[-1]] + ids[1:-1]  # rotate all but the pivot
+    return rounds
+
+
+class PairCutEngine:
+    """Stateful solver of restricted two-server subproblems over one layout.
+
+    Owns a :class:`LayoutState` (read ``.state.assign`` / ``.state.total``)
+    plus the preallocated scratch that keeps per-pair work at
+    O(n bool-scan + pair member volume): the accept path is
+    O(moved + incident links), auxiliary construction is proportional to
+    the pair's member volume, and the only full-graph term left is the
+    vectorized member scan in :meth:`members_of` — deliberate, it is
+    memory-bandwidth noise next to one min-cut solve.
+    """
+
+    def __init__(
+        self,
+        cm: CostModel,
+        assign: np.ndarray,
+        active: Optional[np.ndarray] = None,
+        backend: str = "auto",
+    ):
+        self.cm = cm
+        self.state = cm.layout_state(assign)
+        g = cm.graph
+        self._indptr = g.indptr
+        self._indices = g.indices
+        self._eids = g.edge_ids
+        self._w = self.state._w                  # share LayoutState's copy
+        self._unit_w = g.edge_weights is None    # skip weight gathers
+        self._tau = cm.net.tau
+        self._active = None if active is None else np.asarray(active, bool)
+        self._backend = backend
+        self._use_csr = _HAVE_SCIPY and backend in ("auto", "scipy")
+        self._arena = CutArena()
+        # Scratch, allocated once: member mask + global->local translation.
+        self._mask = np.zeros(g.n, dtype=bool)
+        self._loc = np.full(g.n, -1, dtype=np.int64)
+        # Grown-on-demand per-pair buffers (theta / flow edge arrays).
+        self._theta_cap = 0
+        self._theta_i = self._theta_j = None
+        # Dirty-pair tracking: the auxiliary graph of (i, j) depends only on
+        # its member set and the layout of members' neighbors, so a pair is
+        # clean — its solve would reproduce the last (rejected) proposal
+        # verbatim — until a commit touches one of its servers.  Clean
+        # probes are skipped; this keeps the Alg.-1 trajectory bit-identical
+        # while eliding most non-improving cut solves near convergence.
+        self._version = 0
+        self._server_dirty = np.zeros(cm.net.m, dtype=np.int64)
+        self._pair_stamp: dict = {}
+
+    def pair_clean(self, i: int, j: int) -> bool:
+        """True iff (i, j)'s auxiliary graph is unchanged since its last
+        solve AND that solve did not end in an accept (an accepted solve
+        dirties both servers, so clean implies last-result == reject)."""
+        stamp = self._pair_stamp.get((i, j), -1)
+        return stamp >= max(self._server_dirty[i], self._server_dirty[j])
+
+    def _mark_dirty(self, moved: np.ndarray, old_servers: np.ndarray) -> None:
+        """After committing ``moved``, dirty every server whose pairs could
+        see a different auxiliary graph: the movers' old and new servers
+        (membership changes) plus every server hosting a neighbor of a
+        mover (their boundary side-effect terms reference the movers'
+        layout)."""
+        assign = self.state.assign
+        servers = [old_servers, assign[moved]]
+        flat, _ = csr_multirange(self._indptr, moved)
+        if len(flat):
+            servers.append(assign[self._indices[flat]])
+        dirty = np.unique(np.concatenate(servers))
+        self._version += 1
+        self._server_dirty[dirty] = self._version
+
+    # ------------------------------------------------------------- internals
+    def _thetas(self, k: int):
+        if k > self._theta_cap:
+            cap = max(256, 1 << int(np.ceil(np.log2(max(k, 1)))))
+            self._theta_i = np.empty(cap, dtype=np.float64)
+            self._theta_j = np.empty(cap, dtype=np.float64)
+            self._theta_cap = cap
+        return self._theta_i[:k], self._theta_j[:k]
+
+    def members_of(self, i: int, j: int) -> np.ndarray:
+        assign = self.state.assign
+        pair_mask = (assign == i) | (assign == j)
+        if self._active is not None:
+            pair_mask &= self._active
+        return np.flatnonzero(pair_mask)
+
+    # ----------------------------------------------------------- pair solve
+    def solve_pair(
+        self, i: int, j: int
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Min s-t cut of the auxiliary graph A(i, j) over the current
+        layout.  Returns (members, proposed_servers_for_members) or None if
+        the pair hosts no active vertices.  Does NOT mutate the state."""
+        members = self.members_of(i, j)
+        k = len(members)
+        if k == 0:
+            return None
+        cm, assign = self.cm, self.state.assign
+        mask, loc = self._mask, self._loc
+        mask[members] = True
+        loc[members] = np.arange(k)
+
+        theta_i, theta_j = self._thetas(k)
+        theta_i[:] = cm.unary[members, i]
+        theta_j[:] = cm.unary[members, j]
+
+        # Incident links, straight from the member rows of the CSR view:
+        # one ragged multi-range gather gives (member-local row, neighbor,
+        # edge id) triples — no scan of the global edge list, no sort/unique.
+        flat, row = csr_multirange(self._indptr, members)
+        if len(flat):
+            nbr = self._indices[flat]
+            nbr_in = mask[nbr]
+            # Boundary links (neighbor outside the member set) appear exactly
+            # once: side-effect traffic to the frozen third-server neighbor,
+            # added to BOTH unary columns so each cut stays globally
+            # cost-aware (Sec. IV-B).
+            bnd = ~nbr_in
+            if bnd.any():
+                ins = row[bnd]
+                outs = assign[nbr[bnd]]
+                ti = self._tau[i, outs]
+                tj = self._tau[j, outs]
+                if not self._unit_w:
+                    bw = self._w[self._eids[flat[bnd]]]
+                    ti = ti * bw
+                    tj = tj * bw
+                theta_i += np.bincount(ins, weights=ti, minlength=k)
+                theta_j += np.bincount(ins, weights=tj, minlength=k)
+            # Internal links appear twice (once per endpoint's row) — which
+            # is exactly the two directed arcs the flow network needs.
+            internal = nbr_in
+            int_a = row[internal]
+            int_b = loc[nbr[internal]]
+            tij = float(self._tau[i, j])
+            if self._unit_w:
+                int_w = np.broadcast_to(tij, len(int_a))
+            else:
+                int_w = tij * self._w[self._eids[flat[internal]]]
+        else:
+            int_a = int_b = np.zeros(0, dtype=np.int64)
+            int_w = np.zeros(0, dtype=np.float64)
+
+        # Members without intra-pair links are singleton flow components:
+        # the cut decides them by the cheaper t-link alone, so settle them
+        # with a vectorized argmin and solve the flow only over the core.
+        # (Disjoint components of a flow network optimize independently —
+        # this is exact, and it shrinks the solver input by the boundary-
+        # heavy majority of members on sparse layouts.)
+        new_assign = np.empty(k, dtype=np.int64)
+        has_int = np.zeros(k, dtype=bool)
+        has_int[int_a] = True
+        singles = ~has_int
+        # Tie -> sink side (j), matching the max-flow residual convention
+        # (both t-links saturate, so v is unreachable from s).
+        new_assign[singles] = np.where(
+            theta_i[singles] < theta_j[singles], i, j)
+
+        core = np.flatnonzero(has_int)
+        kc = len(core)
+        if kc:
+            cloc = np.empty(k, dtype=np.int64)
+            cloc[core] = np.arange(kc)
+            int_a = cloc[int_a]
+            int_b = cloc[int_b]
+            th_i = theta_i[core]
+            th_j = theta_j[core]
+            side = self._solve_flow(kc, int_a, int_b, int_w, th_i, th_j)
+            new_assign[core] = np.where(side[:kc], i, j)
+
+        # Reset scratch (only the touched entries).
+        mask[members] = False
+        loc[members] = -1
+        return members, new_assign
+
+    def _solve_flow(self, k, int_a, int_b, int_w, theta_i, theta_j):
+        """Min cut of the (connected-core) auxiliary flow network: nodes
+        0..k-1 plus S=k, T=k+1; t-link caps theta_j (s->v) / theta_i (v->t);
+        internal arcs already both directions in (int_a, int_b)."""
+        S, T = k, k + 1
+        n_int = len(int_w)
+        if self._use_csr:
+            # Direct CSR assembly with SYMMETRIC structure (zero-capacity
+            # reverse arcs for every t-link; internal arcs are already both
+            # directions): scipy's flow matrix then shares this sparsity
+            # exactly, making the residual a plain array difference in
+            # min_st_cut_csr.  That fast path compares flow.indices against
+            # mat.indices, and scipy returns the flow CANONICALIZED — so the
+            # input must be canonical too: sort internal arcs by (row, col).
+            # ``int_a`` arrives row-grouped from the CSR member gather, and
+            # each member row ends with ->S(=k), ->T(=k+1) which exceed
+            # every member column, so sorting columns within rows suffices.
+            if n_int:
+                order = np.lexsort((int_b, int_a))
+                int_a = int_a[order]
+                int_b = int_b[order]
+                if not self._unit_w:
+                    int_w = int_w[order]
+            int_counts = np.bincount(int_a, minlength=k)
+            aux_indptr = np.zeros(k + 3, dtype=np.int32)
+            np.cumsum(int_counts + 2, out=aux_indptr[1:k + 1])
+            aux_indptr[k + 1] = aux_indptr[k] + k        # S row
+            aux_indptr[k + 2] = aux_indptr[k + 1] + k    # T row
+            nnz = n_int + 4 * k
+            cols = np.empty(nnz, dtype=np.int32)
+            caps = np.empty(nnz, dtype=np.float64)
+            ar = np.arange(k)
+            row_start = aux_indptr[:k].astype(np.int64)  # of member rows
+            if n_int:
+                # Within-row offsets of the (already grouped) internal arcs.
+                excl = np.cumsum(int_counts) - int_counts
+                pos = np.arange(n_int) - np.repeat(excl, int_counts) \
+                    + row_start[int_a]
+                cols[pos] = int_b
+                caps[pos] = int_w
+            t_pos = row_start + int_counts
+            cols[t_pos] = S
+            caps[t_pos] = 0.0
+            cols[t_pos + 1] = T
+            caps[t_pos + 1] = theta_i
+            cols[n_int + 2 * k:n_int + 3 * k] = ar
+            caps[n_int + 2 * k:n_int + 3 * k] = theta_j
+            cols[n_int + 3 * k:] = ar
+            caps[n_int + 3 * k:] = 0.0
+            _, side = min_st_cut_csr(k + 2, S, T, aux_indptr, cols, caps)
+            return side
+        us = np.empty(2 * k + n_int, dtype=np.int64)
+        vs = np.empty(2 * k + n_int, dtype=np.int64)
+        caps_uv = np.empty(2 * k + n_int, dtype=np.float64)
+        caps_vu = np.zeros(2 * k + n_int, dtype=np.float64)
+        us[:k] = S
+        vs[:k] = np.arange(k)
+        caps_uv[:k] = theta_j
+        us[k:2 * k] = np.arange(k)
+        vs[k:2 * k] = T
+        caps_uv[k:2 * k] = theta_i
+        # Internal arcs appear twice in (int_a, int_b) (both directions);
+        # emit them as one-way capacities.
+        us[2 * k:] = int_a
+        vs[2 * k:] = int_b
+        caps_uv[2 * k:] = int_w
+        _, side = min_st_cut(
+            k + 2, S, T, us, vs, caps_uv, caps_vu,
+            backend=self._backend, arena=self._arena,
+        )
+        return side
+
+    # ----------------------------------------------------------- accept path
+    def try_pair(self, i: int, j: int, tol: float = 1e-9) -> Tuple[bool, bool]:
+        """Solve pair (i, j) and commit iff the exact delta improves.
+
+        Returns (solved, accepted).  Clean pairs (see :meth:`pair_clean`)
+        skip the solve entirely — the result is known to be a reject.  The
+        accept decision costs O(|moved| + incident links) via the cached
+        LayoutState — no full objective evaluation."""
+        if self.pair_clean(i, j):
+            return True, False
+        sol = self.solve_pair(i, j)
+        if sol is None:
+            self._pair_stamp[(i, j)] = self._version
+            return False, False
+        members, proposed = sol
+        accepted = self.try_apply(members, proposed, tol=tol)
+        # Stamp AFTER a possible commit: re-solving the just-accepted pair
+        # reproduces the committed layout verbatim (same auxiliary graph,
+        # deterministic cut), i.e. a reject — so the pair starts clean.
+        self._pair_stamp[(i, j)] = self._version
+        return True, accepted
+
+    def sweep_round(
+        self, pairs: Sequence[Tuple[int, int]], tol: float = 1e-9
+    ) -> List[Tuple[bool, bool]]:
+        """One batched round: solve a matching of disjoint server pairs from
+        the current snapshot, then apply each cut with an exact live delta.
+
+        The member sets are disjoint, so the solves are independent (and
+        parallelizable); composition is guarded per pair by the delta
+        against the state as commits land.  Returns (solved, accepted) per
+        pair, in order."""
+        sols = []
+        for i, j in pairs:
+            if self.pair_clean(i, j):
+                sols.append((i, j, "clean", self._version))
+            else:
+                sols.append((i, j, self.solve_pair(i, j), self._version))
+        out = []
+        for i, j, sol, solve_version in sols:
+            if isinstance(sol, str):                 # clean: known reject
+                out.append((True, False))
+                continue
+            if sol is None:
+                self._pair_stamp[(i, j)] = solve_version
+                out.append((False, False))
+                continue
+            dirt_before = max(self._server_dirty[i], self._server_dirty[j])
+            accepted = self.try_apply(*sol, tol=tol)
+            # "Clean implies re-solve == reject" only holds for an accepted
+            # pair if nothing ELSE dirtied it between its snapshot solve and
+            # this commit — then its layout equals its own deterministic cut
+            # and the post-commit stamp is valid.  If another pair's commit
+            # in this round touched its servers (dirt_before > solve
+            # version), or it was rejected, keep the solve-time stamp so the
+            # pair is re-solved against the fresh state.
+            if accepted and dirt_before <= solve_version:
+                self._pair_stamp[(i, j)] = self._version
+            else:
+                self._pair_stamp[(i, j)] = solve_version
+            out.append((True, accepted))
+        return out
+
+    def try_apply(
+        self, members: np.ndarray, proposed: np.ndarray, tol: float = 1e-9
+    ) -> bool:
+        """Delta-check a proposed re-assignment of ``members`` against the
+        LIVE state and commit when improving (used by the batched sweep,
+        where the cut may have been computed against a slightly stale
+        snapshot: the exact live delta is what guards acceptance)."""
+        changed = proposed != self.state.assign[members]
+        if not changed.any():
+            return False
+        moved = members[changed]
+        new_servers = proposed[changed]
+        old_servers = self.state.assign[moved].copy()
+        if self.state.propose(moved, new_servers) < -tol:
+            self.state.commit_pending()
+            self._mark_dirty(moved, old_servers)
+            return True
+        self.state.discard_pending()
+        return False

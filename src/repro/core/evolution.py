@@ -109,14 +109,21 @@ def changed_vertices(
     if new.n > old.n:
         mask[old.n:] = True
     n = max(old.n, new.n)
-    old_keys = set((old.edges[:, 0] * n + old.edges[:, 1]).tolist())
-    for u, v in new.edges:
-        if int(u * n + v) in old_keys:
-            continue
-        # New link: relevant only if it can cross servers.
-        au = assign_old[u] if u < old.n else -1
-        av = assign_old[v] if v < old.n else -2
-        if au != av:
-            mask[u] = True
-            mask[v] = True
+    if len(new.edges) == 0:
+        return mask
+    # Vectorized: key-match new links against old, then flag the endpoints
+    # of genuinely-new links whose endpoints live on different servers
+    # (inserted vertices count as their own pseudo-server).
+    new_keys = new.edges[:, 0] * n + new.edges[:, 1]
+    if len(old.edges):
+        old_keys = old.edges[:, 0] * n + old.edges[:, 1]
+        fresh = ~np.isin(new_keys, old_keys)
+    else:
+        fresh = np.ones(len(new_keys), dtype=bool)
+    eu, ev = new.edges[fresh, 0], new.edges[fresh, 1]
+    pad = np.concatenate([assign_old[:old.n],
+                          -1 - np.arange(max(n - old.n, 0))])
+    cross = pad[eu] != pad[ev]
+    mask[eu[cross]] = True
+    mask[ev[cross]] = True
     return mask

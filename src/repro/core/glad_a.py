@@ -46,10 +46,8 @@ def drift_bound(
         placed[old_graph.n:] = False
         extra = 0.0
         for v in range(old_graph.n, new_graph.n):
-            worst = max(
-                cm_new.marginal(placed, assign, v, i) for i in range(cm_new.net.m)
-            )
-            extra += worst
+            # Vectorized over servers x placed neighbors (CostModel caches).
+            extra += float(cm_new.marginal_all(placed, assign, v).max())
             placed[v] = True
         # carried already counted them at server 0; replace with the max bound.
         base_ids = np.arange(old_graph.n, new_graph.n)

@@ -22,16 +22,15 @@ from repro.graphs.datagraph import DataGraph
 def seed_new_vertices(
     cm: CostModel, assign: np.ndarray, new_mask: np.ndarray
 ) -> np.ndarray:
-    """Greedy-marginal initial placement for vertices with no slot yet."""
+    """Greedy-marginal initial placement for vertices with no slot yet.
+
+    Sequential over new vertices (each placement feeds the next one's
+    marginal), vectorized over servers x placed neighbors via
+    :meth:`CostModel.marginal_all`."""
     assign = assign.copy()
     placed = ~new_mask
     for v in np.where(new_mask)[0]:
-        best_i, best_c = 0, np.inf
-        for i in range(cm.net.m):
-            c = cm.marginal(placed, assign, int(v), i)
-            if c < best_c:
-                best_i, best_c = i, c
-        assign[v] = best_i
+        assign[v] = int(np.argmin(cm.marginal_all(placed, assign, int(v))))
         placed[v] = True
     return assign
 

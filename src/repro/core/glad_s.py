@@ -16,6 +16,21 @@ Auxiliary-graph weights (Sec. IV-B):
 
 The side-effect terms make each pairwise cut *globally* cost-aware, which is
 what lets the pairwise sweep descend the full objective.
+
+Two execution engines:
+  * ``engine='incremental'`` (default) — repro.core.engine.PairCutEngine:
+    vectorized auxiliary-graph assembly, reused scratch arenas, and an exact
+    O(moved + incident links) delta on the accept path (no full-objective
+    re-evaluation per iteration).
+  * ``engine='reference'`` — the direct transcription of Alg. 1 kept as the
+    oracle for property tests and the speedup benchmark.
+
+Two sweep disciplines (incremental engine only):
+  * ``sweep='single'`` — Alg. 1 verbatim: one least-visited pair at a time.
+  * ``sweep='batched'`` — a round-robin matching of disjoint server pairs
+    per round; disjoint pairs host disjoint member sets so their cuts are
+    solved from one snapshot and composed, each acceptance guarded by an
+    exact live delta.
 """
 from __future__ import annotations
 
@@ -26,6 +41,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core.cost import CostModel
+from repro.core.engine import PairCutEngine, round_robin_rounds
 from repro.core.maxflow import min_st_cut
 
 
@@ -57,7 +73,12 @@ def solve_pair(
     backend: str = "auto",
 ) -> Optional[np.ndarray]:
     """One min s-t cut for server pair (i, j).  Returns a full proposed
-    assignment vector (copy), or None if the pair hosts no active vertices."""
+    assignment vector (copy), or None if the pair hosts no active vertices.
+
+    Reference construction (per-edge scan of the whole graph); the engine
+    path in repro.core.engine builds the same auxiliary graph from the CSR
+    incident-edge view.  Kept as the oracle for the Thm-4 exactness tests.
+    """
     members = _pair_members(assign, i, j, active)
     if len(members) == 0:
         return None
@@ -120,6 +141,18 @@ def solve_pair(
     return proposal
 
 
+def _init_assign(cm: CostModel, init: Optional[np.ndarray],
+                 rng: np.random.Generator) -> np.ndarray:
+    if init is None:
+        return rng.integers(0, cm.net.m, size=cm.graph.n).astype(np.int64)
+    return np.asarray(init, dtype=np.int64).copy()
+
+
+def _empty_result(cm: CostModel, assign: np.ndarray) -> GladResult:
+    f = cm.factors(assign)
+    return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f)
+
+
 def glad_s(
     cm: CostModel,
     R: Optional[int] = None,
@@ -129,6 +162,8 @@ def glad_s(
     backend: str = "auto",
     max_iterations: int = 100_000,
     on_iteration: Optional[Callable[[int, float], None]] = None,
+    sweep: str = "single",
+    engine: str = "incremental",
 ) -> GladResult:
     """Paper Algorithm 1.
 
@@ -140,31 +175,109 @@ def glad_s(
       active: optional mask — only these vertices may move (GLAD-E reuses
         this to freeze the unfiltered layout).
       backend: max-flow backend.
+      sweep: 'single' (Alg. 1 verbatim) or 'batched' (disjoint-pair rounds).
+      engine: 'incremental' (delta-cost engine) or 'reference' (seed Alg. 1
+        transcription — oracle/benchmark baseline).
     """
     rng = np.random.default_rng(seed)
     net, graph = cm.net, cm.graph
     t0 = time.perf_counter()
 
-    if init is None:
-        assign = rng.integers(0, net.m, size=graph.n).astype(np.int64)
-    else:
-        assign = np.asarray(init, dtype=np.int64).copy()
-
+    assign = _init_assign(cm, init, rng)
     pairs = net.pairs
     if len(pairs) == 0 or graph.n == 0:
-        f = cm.factors(assign)
-        return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f)
+        return _empty_result(cm, assign)
     if R is None:
         R = net.m * (net.m - 1) // 2
 
+    if engine == "reference":
+        return _glad_s_reference(
+            cm, assign, pairs, R, active, rng, backend, max_iterations,
+            on_iteration, t0)
+    if engine != "incremental":
+        raise ValueError(f"unknown engine {engine!r}")
+
+    eng = PairCutEngine(cm, assign, active=active, backend=backend)
+    history = [eng.state.total]
+    if sweep == "single":
+        iters, accepted = _sweep_single(
+            eng, pairs, R, rng, max_iterations, on_iteration, history)
+    elif sweep == "batched":
+        iters, accepted = _sweep_batched(
+            eng, net, R, max_iterations, on_iteration, history)
+    else:
+        raise ValueError(f"unknown sweep {sweep!r}")
+
+    return GladResult(
+        assign=eng.state.assign, cost=eng.state.total, history=history,
+        iterations=iters, accepted=accepted,
+        wall_time_s=time.perf_counter() - t0,
+        factors=eng.state.factors(),
+    )
+
+
+def _sweep_single(eng, pairs, R, rng, max_iterations, on_iteration, history):
+    """Alg. 1 line 3-9: least-visited pair, accept on (delta) improvement."""
+    visits = np.zeros(len(pairs), dtype=np.int64)
+    r = iters = accepted = 0
+    while r <= R and iters < max_iterations:
+        mn = visits.min()
+        cand = np.where(visits == mn)[0]
+        p = cand[rng.integers(0, len(cand))]
+        visits[p] += 1
+        i, j = int(pairs[p, 0]), int(pairs[p, 1])
+
+        solved, ok = eng.try_pair(i, j)
+        iters += 1
+        if solved and ok:
+            accepted += 1
+            r = 0
+        else:
+            r += 1
+        history.append(eng.state.total)
+        if on_iteration is not None:
+            on_iteration(iters, eng.state.total)
+    return iters, accepted
+
+
+def _sweep_batched(eng, net, R, max_iterations, on_iteration, history):
+    """Disjoint-pair rounds: each round solves a matching of server pairs
+    from one snapshot, then applies the cuts with exact live deltas."""
+    connected = {(int(i), int(j)) for i, j in net.pairs}
+    rounds = [
+        [p for p in rnd if p in connected]
+        for rnd in round_robin_rounds(net.m)
+    ]
+    rounds = [rnd for rnd in rounds if rnd]
+    if not rounds:
+        return 0, 0
+    r = iters = accepted = 0
+    while r <= R and iters < max_iterations:
+        for rnd in rounds:
+            for _solved, ok in eng.sweep_round(rnd):
+                iters += 1
+                if ok:
+                    accepted += 1
+                    r = 0
+                else:
+                    r += 1
+                history.append(eng.state.total)
+                if on_iteration is not None:
+                    on_iteration(iters, eng.state.total)
+                if r > R or iters >= max_iterations:
+                    return iters, accepted
+    return iters, accepted
+
+
+def _glad_s_reference(cm, assign, pairs, R, active, rng, backend,
+                      max_iterations, on_iteration, t0):
+    """Seed-path Alg. 1: full total() per proposal, per-edge-scan auxiliary
+    construction.  Oracle for equivalence tests + the speedup benchmark."""
     visits = np.zeros(len(pairs), dtype=np.int64)
     cur_cost = cm.total(assign)
     history = [cur_cost]
-    r = 0
-    iters = 0
-    accepted = 0
+    r = iters = accepted = 0
     while r <= R and iters < max_iterations:
-        # Least-visited pair; random tie-break (Alg. 1 line 4).
         mn = visits.min()
         cand = np.where(visits == mn)[0]
         p = cand[rng.integers(0, len(cand))]

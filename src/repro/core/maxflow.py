@@ -31,6 +31,32 @@ except Exception:  # pragma: no cover
 _SCALE = 10 ** 7  # float -> int64 capacity resolution for the scipy backend
 
 
+class CutArena:
+    """Reusable scratch buffers for repeated min-cut solves.
+
+    The layout engine solves tens of thousands of small cuts per sweep; the
+    per-call assembly of the merged directed edge list is served from one
+    geometrically-grown arena instead of four fresh allocations per call.
+    Pass the same instance to every :func:`min_st_cut` of a sweep.
+    """
+
+    def __init__(self):
+        self._cap = 0
+        self._u = self._v = self._c = self._ci = None
+
+    def edge_buffers(self, size: int):
+        """(u, v, c, ci) views of length ``size`` (int64/int64/f64/int64)."""
+        if self._u is None or size > self._cap:
+            cap = max(256, 1 << int(np.ceil(np.log2(max(size, 1)))))
+            self._u = np.empty(cap, dtype=np.int64)
+            self._v = np.empty(cap, dtype=np.int64)
+            self._c = np.empty(cap, dtype=np.float64)
+            self._ci = np.empty(cap, dtype=np.int64)
+            self._cap = cap
+        return (self._u[:size], self._v[:size], self._c[:size],
+                self._ci[:size])
+
+
 class Dinic:
     """Textbook Dinic max-flow with adjacency arrays (float capacities)."""
 
@@ -98,6 +124,89 @@ class Dinic:
         return side
 
 
+def _bfs_source_side(indptr, indices, data, n: int, s: int) -> np.ndarray:
+    """Reachability from s over strictly-positive entries of a CSR graph.
+
+    Frontier-vectorized BFS on raw CSR arrays: each level is one ragged
+    multi-range gather, so the Python-loop count is the BFS depth
+    (typically 2-4 for GLAD's auxiliary graphs), not the entry count.
+    """
+    from repro.graphs.datagraph import csr_multirange
+
+    side = np.zeros(n, dtype=bool)
+    side[s] = True
+    frontier = np.array([s], dtype=np.int64)
+    while len(frontier):
+        flat, _ = csr_multirange(indptr, frontier)
+        if len(flat) == 0:
+            break
+        nxt = indices[flat][data[flat] > 0]
+        nxt = nxt[~side[nxt]]
+        if len(nxt) == 0:
+            break
+        nxt = np.unique(nxt)
+        side[nxt] = True
+        frontier = nxt
+    return side
+
+
+def _residual_source_side(mat, flow, n: int, s: int) -> np.ndarray:
+    """Source-side reachability of the min cut, via the residual graph."""
+    residual = mat - flow
+    return _bfs_source_side(residual.indptr, residual.indices,
+                            residual.data, n, s)
+
+
+def min_st_cut_csr(
+    n: int,
+    s: int,
+    t: int,
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    caps: np.ndarray,
+) -> Tuple[float, np.ndarray]:
+    """Min s-t cut on a caller-built CSR capacity structure (scipy backend).
+
+    Fast path for the layout engine: the auxiliary graph's CSR arrays are
+    assembled directly (int32 indices, canonical order, no duplicates),
+    skipping the COO round-trip, dtype upcasting and duplicate merging of
+    the generic :func:`min_st_cut`.  When the structure is *symmetric*
+    (every arc's reverse is present, zero-capacity reverse arcs included —
+    the engine builds it this way), scipy's flow matrix shares the input's
+    sparsity exactly, so the residual is a plain elementwise array
+    difference — no sparse subtraction, no format conversions.
+
+    ``caps`` is float64; capacities are scaled to int32 with relative
+    resolution 1/_SCALE exactly like the generic path.  ``caps`` is
+    clobbered (scaled in place) — pass a scratch array.
+    """
+    cmax = float(caps.max()) if len(caps) else 1.0
+    scale = _SCALE / max(cmax, 1e-30)
+    np.multiply(caps, scale, out=caps)
+    np.rint(caps, out=caps)
+    np.maximum(caps, 0, out=caps)
+    data = caps.astype(np.int32)
+    try:
+        # The engine guarantees well-formed arrays; skip csr validation
+        # (check_format + index-dtype sniffing are ~20% of small solves).
+        mat = csr_matrix.__new__(csr_matrix)
+        mat.data = data
+        mat.indices = indices
+        mat.indptr = indptr
+        mat._shape = (n, n)
+    except Exception:  # pragma: no cover - scipy internals drift
+        mat = csr_matrix((data, indices, indptr), shape=(n, n))
+    res = _scipy_maxflow(mat, s, t)
+    flow = res.flow
+    if (np.array_equal(flow.indptr, mat.indptr)
+            and np.array_equal(flow.indices, mat.indices)):
+        side = _bfs_source_side(mat.indptr, mat.indices,
+                                mat.data - flow.data, n, s)
+    else:  # pragma: no cover - asymmetric structure / scipy internals drift
+        side = _residual_source_side(mat, flow, n, s)
+    return res.flow_value / scale, side
+
+
 def min_st_cut(
     n: int,
     s: int,
@@ -107,6 +216,7 @@ def min_st_cut(
     caps_uv: np.ndarray,
     caps_vu: np.ndarray,
     backend: str = "auto",
+    arena: CutArena | None = None,
 ) -> Tuple[float, np.ndarray]:
     """Solve min s-t cut on a directed-capacity graph.
 
@@ -114,6 +224,8 @@ def min_st_cut(
       n: node count (s, t included).
       edges_u/v: endpoints; caps_uv/vu: directed capacities per edge row.
       backend: 'scipy' | 'dinic' | 'auto'.
+      arena: optional reusable scratch (see :class:`CutArena`) for callers
+        that solve many cuts in a loop.
 
     Returns:
       (cut_value, source_side_mask) with mask[s]=True, mask[t]=False.
@@ -130,32 +242,28 @@ def min_st_cut(
         # to the largest capacity so huge costs (e.g. congestion-priced
         # layouts) cannot overflow: resolution is relative, and the cut
         # PARTITION is exact as long as gaps exceed max_cap/_SCALE.
-        u = np.concatenate([edges_u, edges_v])
-        v = np.concatenate([edges_v, edges_u])
-        c = np.concatenate([caps_uv, caps_vu])
-        keep = c > 0
-        u, v, c = u[keep], v[keep], c[keep]
+        E = len(edges_u)
+        if arena is not None:
+            u, v, c, ci = arena.edge_buffers(2 * E)
+            u[:E], u[E:] = edges_u, edges_v
+            v[:E], v[E:] = edges_v, edges_u
+            c[:E], c[E:] = caps_uv, caps_vu
+        else:
+            u = np.concatenate([edges_u, edges_v])
+            v = np.concatenate([edges_v, edges_u])
+            c = np.concatenate([caps_uv, caps_vu])
+            ci = np.empty_like(u)
         cmax = float(c.max()) if len(c) else 1.0
         scale = _SCALE / max(cmax, 1e-30)
-        ci = np.round(c * scale).astype(np.int64)
-        ci = np.maximum(ci, 0)
-        mat = csr_matrix((ci, (u, v)), shape=(n, n))
+        np.multiply(c, scale, out=c)
+        np.rint(c, out=c)
+        np.maximum(c, 0, out=c)
+        ci[:] = c
+        keep = ci > 0
+        mat = csr_matrix((ci[keep], (u[keep], v[keep])), shape=(n, n))
         mat.sum_duplicates()
         res = _scipy_maxflow(mat, s, t)
-        flow = res.flow  # antisymmetric flow matrix (csr)
-        residual = mat - flow
-        # BFS from s over strictly-positive residual capacity.
-        side = np.zeros(n, dtype=bool)
-        side[s] = True
-        q = deque([s])
-        indptr, indices, data = residual.indptr, residual.indices, residual.data
-        while q:
-            x = q.popleft()
-            for k in range(indptr[x], indptr[x + 1]):
-                y = indices[k]
-                if data[k] > 0 and not side[y]:
-                    side[y] = True
-                    q.append(y)
+        side = _residual_source_side(mat, res.flow, n, s)
         return res.flow_value / scale, side
 
     dinic = Dinic(n)

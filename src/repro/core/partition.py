@@ -97,11 +97,14 @@ def data_partition(
     seed: int = 0,
     init: Optional[np.ndarray] = None,
 ) -> DevicePartition:
-    """GLAD-S over a pod-shaped EdgeNetwork -> shard_map-ready partition."""
+    """GLAD-S over a pod-shaped EdgeNetwork -> shard_map-ready partition.
+
+    Uses the batched disjoint-pair sweep — the placement bridge wants wall
+    time, not the paper's exact Alg.-1 trajectory."""
     if net is None:
         net = pod_edge_network(num_parts, graph.n, pods=pods, seed=seed)
     cm = CostModel(net, graph, gnn)
-    res = glad_s(cm, R=R, seed=seed, init=init)
+    res = glad_s(cm, R=R, seed=seed, init=init, sweep="batched")
     return partition_from_assign(graph, res.assign, num_parts, res.factors)
 
 
@@ -194,7 +197,7 @@ def expert_layout(
     #    only while the load imbalance stays within tolerance (makespan is
     #    outside GLAD's linear objective — noted in DESIGN.md §7).
     cm = CostModel(net, g, gnn)
-    res = glad_s(cm, seed=seed, init=assign0, R=num_slices)
+    res = glad_s(cm, seed=seed, init=assign0, R=num_slices, sweep="batched")
     sl = np.array([load[res.assign == s].sum() for s in range(num_slices)])
     if sl.max() > cap * 1.05:
         assign = assign0
@@ -218,5 +221,5 @@ def rebalance(
     and run an incremental re-layout warm-started from the current one."""
     net2 = net.degrade(straggler, slow_factor)
     cm = CostModel(net2, graph, gnn)
-    res = glad_s(cm, init=part.assign, R=net2.m, seed=seed)
+    res = glad_s(cm, init=part.assign, R=net2.m, seed=seed, sweep="batched")
     return partition_from_assign(graph, res.assign, part.num_parts, res.factors)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import jaxcompat
 from repro.core.partition import DevicePartition
 from repro.gnn.models import GNNConfig, _LAYERS, segment_sum
 from repro.graphs.datagraph import DataGraph
@@ -83,7 +84,12 @@ def compile_plan(
         slot_of[vs] = p * cap + np.arange(len(vs))
     local_mask = local >= 0
 
+    # Local index of every vertex within its own part (slot_of = p*cap + k).
+    loc_idx = slot_of - assign.astype(np.int64) * cap
+
     # Halo membership: out-of-part neighbors each part aggregates from.
+    # ``halos[p]`` is sorted-unique, so a vertex's halo position on p is a
+    # searchsorted lookup — no per-vertex dicts.
     e = graph.edges
     halos = []
     for p in range(Pn):
@@ -97,36 +103,37 @@ def compile_plan(
     halo_cap = _pad_up(max((len(h) for h in halos), default=1), pad_mult)
     halo = np.full((Pn, halo_cap), -1, dtype=np.int64)
     halo_slot = np.full((Pn, halo_cap), Pn * cap, dtype=np.int64)
-    halo_pos = {}                   # (p, vertex) -> halo index on p
     for p, hs in enumerate(halos):
         halo[p, : len(hs)] = hs
         halo_slot[p, : len(hs)] = slot_of[hs]
-        for k, v in enumerate(hs):
-            halo_pos[(p, int(v))] = k
 
-    # Per-device directed edge lists in table coordinates.
-    local_idx = {}                  # (p, vertex) -> local index
-    for p, vs in enumerate(parts):
-        for k, v in enumerate(vs):
-            local_idx[(p, int(v))] = k
-    dev_edges = [[] for _ in range(Pn)]
-    for u, v in e:
-        for dst, src in ((int(v), int(u)), (int(u), int(v))):
-            p = int(assign[dst])
-            d_loc = local_idx[(p, dst)]
-            if assign[src] == p:
-                s_tab = local_idx[(p, src)]
-            else:
-                s_tab = cap + halo_pos[(p, src)]
-            dev_edges[p].append((s_tab, d_loc))
-    e_cap = _pad_up(max((len(de) for de in dev_edges), default=1), pad_mult)
-    edges_src = np.full((Pn, e_cap), cap + halo_cap, dtype=np.int32)
-    edges_dst = np.full((Pn, e_cap), cap, dtype=np.int32)
-    for p, de in enumerate(dev_edges):
-        if de:
-            arr = np.array(de, dtype=np.int32)
-            edges_src[p, : len(de)] = arr[:, 0]
-            edges_dst[p, : len(de)] = arr[:, 1]
+    # Per-device directed edge lists in table coordinates, fully vectorized:
+    # double the edge list into (src, dst) arcs, group by destination part,
+    # translate sources to local or halo coordinates per part.
+    e_cap = pad_mult
+    edges_src = np.full((Pn, pad_mult), cap + halo_cap, dtype=np.int32)
+    edges_dst = np.full((Pn, pad_mult), cap, dtype=np.int32)
+    if len(e):
+        src_all = np.concatenate([e[:, 0], e[:, 1]])
+        dst_all = np.concatenate([e[:, 1], e[:, 0]])
+        p_all = assign[dst_all]
+        d_loc = loc_idx[dst_all]
+        same = assign[src_all] == p_all
+        s_tab = np.where(same, loc_idx[src_all], 0)
+        for p in range(Pn):
+            crossp = ~same & (p_all == p)
+            if crossp.any():
+                s_tab[crossp] = cap + np.searchsorted(
+                    halos[p], src_all[crossp])
+        counts = np.bincount(p_all, minlength=Pn)
+        e_cap = _pad_up(int(counts.max()), pad_mult)
+        edges_src = np.full((Pn, e_cap), cap + halo_cap, dtype=np.int32)
+        edges_dst = np.full((Pn, e_cap), cap, dtype=np.int32)
+        order = np.argsort(p_all, kind="stable")
+        offs = np.arange(len(order)) - np.repeat(
+            np.cumsum(counts) - counts, counts)
+        edges_src[p_all[order], offs] = s_tab[order]
+        edges_dst[p_all[order], offs] = d_loc[order]
 
     deg_all = graph.degrees.astype(np.float32)
     deg = np.zeros((Pn, cap), dtype=np.float32)
@@ -138,11 +145,10 @@ def compile_plan(
     total_rows = 0
     for s in range(1, Pn):
         sends = []                 # per source device p: rows destined to q
-        recv_lists = []
         for p in range(Pn):
             q = (p + s) % Pn
-            mine = [v for v in halos[q] if assign[v] == p]
-            sends.append(mine)
+            hq = halos[q]
+            sends.append(hq[assign[hq] == p] if len(hq) else hq)
         max_send = max((len(x) for x in sends), default=0)
         if max_send == 0:
             continue
@@ -152,11 +158,11 @@ def compile_plan(
         for p in range(Pn):
             q = (p + s) % Pn
             rows = sends[p]
-            for k, v in enumerate(rows):
-                send_idx[p, k] = local_idx[(p, int(v))]
-                # device q receives from p at round s; store where the row
+            if len(rows):
+                send_idx[p, : len(rows)] = loc_idx[rows]
+                # device q receives from p at round s; store where each row
                 # lands in q's halo buffer.
-                recv_pos[q, k] = halo_pos[(q, int(v))]
+                recv_pos[q, : len(rows)] = np.searchsorted(halos[q], rows)
             total_rows += len(rows)
         rounds.append({
             "shift": s, "send_idx": send_idx, "recv_pos": recv_pos,
@@ -331,7 +337,7 @@ def make_bsp_forward(
                 plan.halo_cap, exchange, axis_name)
             return out[None]
 
-        smapped = jax.shard_map(
+        smapped = jaxcompat.shard_map(
             inner, mesh=mesh,
             in_specs=(P(), spec_b, spec_b, spec_b, spec_b, spec_b)
             + tuple(spec_b for _ in round_ops),

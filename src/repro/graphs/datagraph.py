@@ -14,6 +14,29 @@ from typing import Optional
 import numpy as np
 
 
+def csr_multirange(indptr: np.ndarray, rows: np.ndarray):
+    """Vectorized concatenation of CSR row slices.
+
+    Returns ``(flat, rep)`` where ``flat`` indexes the CSR data arrays for
+    the concatenation of slices ``indptr[r]:indptr[r+1]`` over ``rows`` (in
+    order), and ``rep[i]`` is the position within ``rows`` that produced
+    ``flat[i]``.  O(output) with no Python loop — the shared primitive
+    behind neighbor gathers, incident-edge queries and residual BFS.
+    """
+    rows = np.asarray(rows)
+    starts = indptr[rows]
+    counts = indptr[rows + 1] - starts
+    total = int(counts.sum())
+    if total == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return empty, empty
+    rep = np.repeat(np.arange(len(rows)), counts)
+    flat = (np.arange(total)
+            - np.repeat(np.cumsum(counts) - counts, counts)
+            + starts[rep])
+    return flat, rep
+
+
 def _canonicalize(edges: np.ndarray, n: int) -> np.ndarray:
     """Dedup + sort an undirected edge list; drop self loops."""
     if edges.size == 0:
@@ -46,6 +69,8 @@ class DataGraph:
     # CSR views (built lazily)
     _indptr: Optional[np.ndarray] = None
     _indices: Optional[np.ndarray] = None
+    _edge_ids: Optional[np.ndarray] = None
+    _degrees: Optional[np.ndarray] = None
 
     def __post_init__(self):
         self.edges = _canonicalize(self.edges, self.n)
@@ -57,14 +82,17 @@ class DataGraph:
 
     # ------------------------------------------------------------------ CSR
     def _build_csr(self) -> None:
+        E = len(self.edges)
         src = np.concatenate([self.edges[:, 0], self.edges[:, 1]])
         dst = np.concatenate([self.edges[:, 1], self.edges[:, 0]])
+        eid = np.concatenate([np.arange(E), np.arange(E)])
         order = np.argsort(src, kind="stable")
-        src, dst = src[order], dst[order]
+        src, dst, eid = src[order], dst[order], eid[order]
         self._indptr = np.zeros(self.n + 1, dtype=np.int64)
         np.add.at(self._indptr, src + 1, 1)
         self._indptr = np.cumsum(self._indptr)
         self._indices = dst
+        self._edge_ids = eid
 
     @property
     def indptr(self) -> np.ndarray:
@@ -79,19 +107,43 @@ class DataGraph:
         return self._indices
 
     @property
+    def edge_ids(self) -> np.ndarray:
+        """Undirected edge index aligned with ``indices``: entry k says which
+        row of ``edges`` produced the CSR slot k (each edge appears twice)."""
+        if self._edge_ids is None:
+            self._build_csr()
+        return self._edge_ids
+
+    @property
     def num_edges(self) -> int:
         return int(self.edges.shape[0])
 
     @property
     def degrees(self) -> np.ndarray:
-        deg = np.zeros(self.n, dtype=np.int64)
-        if self.num_edges:
-            np.add.at(deg, self.edges[:, 0], 1)
-            np.add.at(deg, self.edges[:, 1], 1)
-        return deg
+        if self._degrees is None:
+            deg = np.zeros(self.n, dtype=np.int64)
+            if self.num_edges:
+                np.add.at(deg, self.edges[:, 0], 1)
+                np.add.at(deg, self.edges[:, 1], 1)
+            self._degrees = deg
+        return self._degrees
 
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def incident_edge_ids(self, vertices: np.ndarray) -> np.ndarray:
+        """Edge ids with >=1 endpoint in ``vertices``, each id once.
+
+        Vectorized multi-range gather over the CSR slices of ``vertices``
+        (O(sum deg) — no per-vertex Python loop, no scan of the edge list).
+        """
+        vertices = np.asarray(vertices, dtype=np.int64)
+        if len(vertices) == 0 or self.num_edges == 0:
+            return np.zeros(0, dtype=np.int64)
+        flat, _ = csr_multirange(self.indptr, vertices)
+        if len(flat) == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.unique(self.edge_ids[flat])
 
     # ------------------------------------------------------------ mutation
     def with_changes(

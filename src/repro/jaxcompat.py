@@ -1,0 +1,91 @@
+"""Version-compatible accessors for JAX APIs that drifted across releases.
+
+The repo targets current JAX but must run on older installs (the pinned CI
+image ships 0.4.x).  Three surfaces moved:
+
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` —
+    absent before 0.5; meshes there are implicitly fully ``Auto``.
+  * ``jax.shard_map`` — lived at ``jax.experimental.shard_map.shard_map``
+    with ``check_rep`` instead of ``check_vma``.
+  * ``jax.lax.ragged_dot_general`` / ``RaggedDotDimensionNumbers`` — absent;
+    callers need a segment-sum fallback for the grouped outer product
+    (see models/moe.py).
+
+Every accessor resolves the feature at call time (not import time) so test
+monkeypatching and lazy plugin loading keep working.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_type_auto():
+    """``jax.sharding.AxisType.Auto`` where it exists, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return getattr(axis_type, "Auto", None)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with all-Auto axis types when supported.
+
+    Older JAX has neither ``AxisType`` nor the ``axis_types`` kwarg; its
+    meshes behave as fully automatic, which is exactly what every caller
+    here wants, so omitting the kwarg is semantically equivalent.
+    """
+    auto = axis_type_auto()
+    if auto is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(auto,) * len(axis_names))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the legacy ``check_rep`` flag (same meaning:
+    statically verify per-value replication/varying-axes annotations).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    Old JAX wrapped the per-device properties in a one-element list; new
+    JAX returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the CompilerParams rename.
+
+    New JAX exposes ``pltpu.CompilerParams``; older releases call the same
+    dataclass ``TPUCompilerParams``.
+    """
+    import jax.experimental.pallas.tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def has_ragged_dot_general() -> bool:
+    return hasattr(jax.lax, "ragged_dot_general") and hasattr(
+        jax.lax, "RaggedDotDimensionNumbers")

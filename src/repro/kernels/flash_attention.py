@@ -23,6 +23,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import jaxcompat
+
 _NEG_INF = -1e30
 
 
@@ -134,7 +136,7 @@ def flash_attention(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, lq_pad, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=jaxcompat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

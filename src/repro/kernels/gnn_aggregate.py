@@ -33,6 +33,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import jaxcompat
+
 
 def _kernel(block_cols_ref, vals_ref, feats_ref, out_ref):
     j = pl.program_id(1)
@@ -84,7 +86,7 @@ def spmm(values, block_cols, feats, *, bm: int, bk: int, bd: int = 128,
             out_specs=pl.BlockSpec((bm, bd), out_map),
         ),
         out_shape=jax.ShapeDtypeStruct((n_rows_out, d), feats.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=jaxcompat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "parallel"),
         ),
         interpret=interpret,

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import jaxcompat
 from repro import models as zoo
 from repro.configs import (ARCHS, get_config, input_specs, skip_reason)
 from repro.launch.hlo import model_flops_for, roofline
@@ -136,7 +137,7 @@ def measure_probe(cfg, arch, shape_name, multi_pod):
     _, _, mesh, lowered = lower_cell(arch, shape_name, multi_pod, cfg=cfg,
                                      microbatches=1)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis()
+    ca = jaxcompat.cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text(), default_group=mesh.size)
     per_kind = {}
     for c in colls:
@@ -175,7 +176,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = jaxcompat.cost_analysis(compiled)
         hlo = compiled.as_text()
         rf = roofline(compiled, mesh.size,
                       model_flops_for(cfg, shape), cost, hlo)

@@ -116,7 +116,8 @@ class Roofline:
 
 def roofline(compiled, mesh_devices: int, model_flops: float = 0.0,
              cost: Optional[dict] = None, hlo: Optional[str] = None) -> Roofline:
-    ca = cost or compiled.cost_analysis()
+    from repro.jaxcompat import cost_analysis
+    ca = cost or cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     hbm = float(ca.get("bytes accessed", 0.0))
     text = hlo if hlo is not None else compiled.as_text()

@@ -1,26 +1,28 @@
 """Production mesh builders.  Functions, not module constants — importing
-this module never touches jax device state (smoke tests keep 1 device)."""
+this module never touches jax device state (smoke tests keep 1 device).
+
+Mesh construction goes through repro.jaxcompat so the same code runs on
+JAX versions with and without ``jax.sharding.AxisType``.
+"""
 from __future__ import annotations
 
 import jax
+
+from repro.jaxcompat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (one pod, 256 chips) or 2x16x16 (two pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many local devices exist (tests/examples)."""
     n = len(jax.devices())
     data = min(data, n // model) or 1
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes_of(mesh) -> tuple:

@@ -4,6 +4,13 @@ multi-device integration tests spawn subprocesses."""
 import numpy as np
 import pytest
 
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    from tests._hypothesis_fallback import install as _install_hypothesis
+
+    _install_hypothesis()
+
 from repro.core.cost import CostModel, workload_for
 from repro.graphs.datagraph import DataGraph, synthetic_siot, synthetic_yelp
 from repro.graphs.edgenet import build_edge_network

@@ -1,0 +1,169 @@
+"""Incremental layout engine: delta-cost exactness, engine/reference
+equivalence, batched-sweep quality, and the direct-CSR cut fast path."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.engine import PairCutEngine, round_robin_rounds
+from repro.core.glad_s import glad_s, solve_pair
+from repro.graphs.edgenet import build_edge_network
+from tests.conftest import random_graph
+
+
+def _instance(rng, n=None, m=None, weighted=False):
+    n = n or int(rng.integers(8, 40))
+    m = m or int(rng.integers(2, 6))
+    g = random_graph(rng, n, int(rng.integers(4, 30)))
+    if weighted:
+        g.edge_weights = rng.uniform(0.2, 3.0, size=len(g.edges))
+    net = build_edge_network(g, m, seed=int(rng.integers(0, 1000)))
+    return CostModel(net, g, workload_for("gcn", 8)), g, net
+
+
+# ------------------------------------------------------------- LayoutState
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 5000))
+def test_delta_equals_full_reevaluation(seed):
+    """state.delta(moved) == total(after) - total(before), for random move
+    batches, committing every other one (so caches are exercised too)."""
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng, weighted=bool(seed % 2))
+    state = cm.layout_state(rng.integers(0, net.m, size=g.n))
+    assert state.total == pytest.approx(cm.total(state.assign), rel=1e-12)
+    for t in range(20):
+        k = int(rng.integers(1, max(2, g.n // 2)))
+        moved = rng.choice(g.n, size=k, replace=False)
+        new = rng.integers(0, net.m, size=k)
+        before = cm.total(state.assign)
+        prop = state.assign.copy()
+        prop[moved] = new
+        expect = cm.total(prop) - before
+        assert state.delta(moved, new) == pytest.approx(expect, abs=1e-8)
+        if t % 2 == 0:
+            state.commit(moved, new)
+            assert state.total == pytest.approx(cm.total(state.assign),
+                                                abs=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000))
+def test_delta_on_every_accepted_move_during_glad(seed):
+    """Each accepted GLAD-S iteration's cached total matches a from-scratch
+    evaluation (the accept path never drifts from the true objective)."""
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng)
+    totals = []
+    res = glad_s(cm, seed=seed,
+                 on_iteration=lambda it, c: totals.append(c))
+    assert totals[-1] == pytest.approx(cm.total(res.assign), rel=1e-9)
+    assert res.cost == pytest.approx(cm.total(res.assign), rel=1e-9)
+
+
+# ------------------------------------------------- engine == reference path
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000))
+def test_incremental_matches_reference_trajectory(seed):
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng, weighted=bool(seed % 3 == 0))
+    ref = glad_s(cm, seed=seed, engine="reference")
+    inc = glad_s(cm, seed=seed, engine="incremental")
+    assert inc.cost == pytest.approx(ref.cost, rel=1e-6)
+    assert inc.iterations == ref.iterations
+    assert inc.accepted == ref.accepted
+    np.testing.assert_allclose(inc.history, ref.history, rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000))
+def test_engine_solve_pair_matches_reference_solve_pair(seed):
+    """The vectorized auxiliary construction (CSR gather + singleton
+    reduction + symmetric flow CSR) induces the same cut cost as the seed's
+    per-edge-scan construction."""
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng)
+    assign = rng.integers(0, net.m, size=g.n)
+    i, j = sorted(rng.choice(net.m, size=2, replace=False))
+    ref_prop = solve_pair(cm, assign, int(i), int(j))
+    eng = PairCutEngine(cm, assign)
+    sol = eng.solve_pair(int(i), int(j))
+    assert (ref_prop is None) == (sol is None)
+    if sol is not None:
+        members, proposed = sol
+        eng_prop = assign.copy()
+        eng_prop[members] = proposed
+        # Cuts may tie; the induced objective must agree.
+        assert cm.total(eng_prop) == pytest.approx(cm.total(ref_prop),
+                                                   rel=1e-6)
+
+
+# ------------------------------------------------------------ batched sweep
+def test_round_robin_rounds_cover_all_pairs_disjointly():
+    for m in range(2, 12):
+        rounds = round_robin_rounds(m)
+        seen = set()
+        for rnd in rounds:
+            used = [s for p in rnd for s in p]
+            assert len(used) == len(set(used)), "pairs in a round overlap"
+            seen.update(rnd)
+        assert seen == {(i, j) for i in range(m) for j in range(i + 1, m)}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 5000))
+def test_batched_sweep_not_worse_than_sequential(seed):
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng)
+    seq = glad_s(cm, seed=seed, sweep="single")
+    bat = glad_s(cm, seed=seed, sweep="batched")
+    assert bat.cost <= seq.cost + 1e-9
+    h = np.array(bat.history)
+    assert (np.diff(h) <= 1e-9).all()
+
+
+def test_batched_sweep_fixed_seeds_small_yelp(cm_small):
+    for seed in (0, 1, 2):
+        seq = glad_s(cm_small, seed=seed, sweep="single")
+        bat = glad_s(cm_small, seed=seed, sweep="batched")
+        assert bat.cost <= seq.cost + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 5000))
+def test_batched_terminates_pairwise_optimal(seed):
+    """Dirty-pair bookkeeping regression: after a batched run converges, no
+    server pair admits an improving cut (a stale 'clean' stamp must never
+    mask an improving re-solve)."""
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng)
+    res = glad_s(cm, seed=seed, sweep="batched")
+    eng = PairCutEngine(cm, res.assign)
+    for i, j in net.pairs:
+        _, accepted = eng.try_pair(int(i), int(j))
+        assert not accepted, (seed, i, j)
+
+
+def test_batched_respects_active_mask(cm_small):
+    rng = np.random.default_rng(3)
+    init = rng.integers(0, cm_small.net.m, size=cm_small.graph.n)
+    active = np.zeros(cm_small.graph.n, bool)
+    active[:10] = True
+    res = glad_s(cm_small, init=init, active=active, seed=3, sweep="batched")
+    assert (res.assign[10:] == init[10:]).all()
+
+
+# ------------------------------------------------------- engine result shape
+def test_glad_result_fields_preserved(cm_small):
+    res = glad_s(cm_small, seed=0)
+    assert set(res.factors) == {"C_U", "C_P", "C_T", "C_M", "total"}
+    assert res.cost == pytest.approx(res.factors["total"], rel=1e-9)
+    assert len(res.history) == res.iterations + 1
+    assert res.accepted <= res.iterations
+    assert res.wall_time_s >= 0.0
+
+
+def test_unknown_engine_and_sweep_raise(cm_small):
+    with pytest.raises(ValueError):
+        glad_s(cm_small, seed=0, engine="nope")
+    with pytest.raises(ValueError):
+        glad_s(cm_small, seed=0, sweep="nope")
