@@ -1,6 +1,10 @@
 """Benchmark driver: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
+
+``--smoke`` runs a single CI-sized sanity pass (the layout-engine benchmark
+at quick sizes, one repetition, written to BENCH_layout.smoke.json) so the
+harness can be exercised cheaply without touching the committed numbers.
 """
 from __future__ import annotations
 
@@ -8,8 +12,8 @@ import argparse
 import time
 
 from benchmarks import (adaptability, convergence, cost_comparison,
-                        cost_factors, kernel_density, overhead,
-                        roofline_table, sensitivity)
+                        cost_factors, kernel_density, layout_engine,
+                        overhead, roofline_table, sensitivity)
 
 SECTIONS = [
     ("cost_comparison  (Fig. 8/9)", cost_comparison.run),
@@ -20,6 +24,7 @@ SECTIONS = [
     ("sensitivity      (Fig. 19/20)", sensitivity.run),
     ("kernel_density   (ablation: layout -> MXU)", kernel_density.run),
     ("roofline_table   (deliverable g)", roofline_table.run),
+    ("layout_engine    (engine vs seed, round solvers)", layout_engine.run),
 ]
 
 
@@ -28,7 +33,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale graphs (slow)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sanity pass (layout_engine quick, 1 rep, "
+                         "separate output file)")
     args = ap.parse_args()
+    if args.smoke:
+        print("\n===== smoke: layout_engine (quick, 1 rep) =====")
+        t0 = time.perf_counter()
+        layout_engine.run(smoke=True)
+        print(f"# smoke wall time: {time.perf_counter() - t0:.1f}s")
+        return
     for name, fn in SECTIONS:
         if args.only and args.only not in name:
             continue

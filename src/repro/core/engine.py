@@ -17,6 +17,29 @@ This engine makes one Alg.-1 iteration cost O(|members| + vol(members)):
     be solved from one snapshot and composed; every acceptance still uses an
     exact delta against the live state, so composing never mis-accepts.
 
+Round -> block -> scatter pipeline (the block-diagonal round solver):
+
+  1. **round** — :meth:`PairCutEngine.sweep_round` takes one round-robin
+     matching of disjoint server pairs, skips the clean ones, and
+     batch-assembles the dirty ones' auxiliary graphs in a single pass of
+     array ops: one vertex->block lookup classifies every vertex, one
+     ragged CSR gather yields all incident links, and per-block t-link /
+     n-link weights come from vectorized gathers over the concatenated
+     member list (no per-pair Python work).
+  2. **block** — members without intra-pair links are settled by the
+     vectorized t-link argmin; the connected cores of all blocks are packed
+     into ONE block-diagonal symmetric-CSR flow problem glued at a shared
+     source/sink and solved by a single scipy max-flow pass whose BFS never
+     crosses block boundaries (:func:`repro.core.maxflow.
+     min_st_cut_csr_blocks`).  Scratch (member masks, local ids, the flow
+     CSR arena) is grown once per sweep and reused across rounds.  Without
+     scipy, blocks fall back to per-block pure-python Dinic solves, fanned
+     out over ``workers`` threads/processes.
+  3. **scatter** — each block's slice of the source-side mask maps back to
+     "member stays on i / moves to j"; the proposals are then applied in
+     pair order, each guarded by an exact O(moved + incident) live delta,
+     so composition semantics are identical to the per-pair batched sweep.
+
 The engine preserves the paper's auxiliary-graph semantics exactly
 (Sec. IV-B: t-link = unary + side-effect traffic to third servers, n-link =
 tau_ij per internal link), so Thm 4-6 continue to hold per pair.
@@ -28,7 +51,9 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cost import CostModel, LayoutState
-from repro.core.maxflow import _HAVE_SCIPY, CutArena, min_st_cut, min_st_cut_csr
+from repro.core.maxflow import (_HAVE_SCIPY, CutArena,
+                                assemble_symmetric_flow_csr, min_st_cut,
+                                min_st_cut_csr, min_st_cut_csr_blocks)
 from repro.graphs.datagraph import csr_multirange
 
 
@@ -69,8 +94,12 @@ class PairCutEngine:
         assign: np.ndarray,
         active: Optional[np.ndarray] = None,
         backend: str = "auto",
+        workers: int = 0,
+        worker_mode: str = "thread",
     ):
         self.cm = cm
+        self._workers = int(workers)
+        self._worker_mode = worker_mode
         self.state = cm.layout_state(assign)
         g = cm.graph
         self._indptr = g.indptr
@@ -237,45 +266,14 @@ class PairCutEngine:
             # reverse arcs for every t-link; internal arcs are already both
             # directions): scipy's flow matrix then shares this sparsity
             # exactly, making the residual a plain array difference in
-            # min_st_cut_csr.  That fast path compares flow.indices against
-            # mat.indices, and scipy returns the flow CANONICALIZED — so the
-            # input must be canonical too: sort internal arcs by (row, col).
-            # ``int_a`` arrives row-grouped from the CSR member gather, and
-            # each member row ends with ->S(=k), ->T(=k+1) which exceed
-            # every member column, so sorting columns within rows suffices.
-            if n_int:
-                order = np.lexsort((int_b, int_a))
-                int_a = int_a[order]
-                int_b = int_b[order]
-                if not self._unit_w:
-                    int_w = int_w[order]
-            int_counts = np.bincount(int_a, minlength=k)
-            aux_indptr = np.zeros(k + 3, dtype=np.int32)
-            np.cumsum(int_counts + 2, out=aux_indptr[1:k + 1])
-            aux_indptr[k + 1] = aux_indptr[k] + k        # S row
-            aux_indptr[k + 2] = aux_indptr[k + 1] + k    # T row
-            nnz = n_int + 4 * k
-            cols = np.empty(nnz, dtype=np.int32)
-            caps = np.empty(nnz, dtype=np.float64)
-            ar = np.arange(k)
-            row_start = aux_indptr[:k].astype(np.int64)  # of member rows
-            if n_int:
-                # Within-row offsets of the (already grouped) internal arcs.
-                excl = np.cumsum(int_counts) - int_counts
-                pos = np.arange(n_int) - np.repeat(excl, int_counts) \
-                    + row_start[int_a]
-                cols[pos] = int_b
-                caps[pos] = int_w
-            t_pos = row_start + int_counts
-            cols[t_pos] = S
-            caps[t_pos] = 0.0
-            cols[t_pos + 1] = T
-            caps[t_pos + 1] = theta_i
-            cols[n_int + 2 * k:n_int + 3 * k] = ar
-            caps[n_int + 2 * k:n_int + 3 * k] = theta_j
-            cols[n_int + 3 * k:] = ar
-            caps[n_int + 3 * k:] = 0.0
-            _, side = min_st_cut_csr(k + 2, S, T, aux_indptr, cols, caps)
+            # min_st_cut_csr.  scipy's canonical flow output requires
+            # canonical input; the member gather already yields arcs in
+            # (row, col) order (DataGraph rows are dst-sorted, member-local
+            # ids rank-monotone), so the assembler's lexsort is skipped.
+            n_aux, S, T, indptr, cols, caps = assemble_symmetric_flow_csr(
+                k, int_a, int_b, int_w, theta_i, theta_j, arena=self._arena,
+                presorted=True)
+            _, side = min_st_cut_csr(n_aux, S, T, indptr, cols, caps)
             return side
         us = np.empty(2 * k + n_int, dtype=np.int64)
         vs = np.empty(2 * k + n_int, dtype=np.int64)
@@ -321,28 +319,68 @@ class PairCutEngine:
         return True, accepted
 
     def sweep_round(
-        self, pairs: Sequence[Tuple[int, int]], tol: float = 1e-9
+        self,
+        pairs: Sequence[Tuple[int, int]],
+        tol: float = 1e-9,
+        solver: str = "auto",
     ) -> List[Tuple[bool, bool]]:
         """One batched round: solve a matching of disjoint server pairs from
         the current snapshot, then apply each cut with an exact live delta.
 
-        The member sets are disjoint, so the solves are independent (and
-        parallelizable); composition is guarded per pair by the delta
-        against the state as commits land.  Returns (solved, accepted) per
-        pair, in order."""
-        sols = []
-        for i, j in pairs:
-            if self.pair_clean(i, j):
-                sols.append((i, j, "clean", self._version))
-            else:
-                sols.append((i, j, self.solve_pair(i, j), self._version))
+        The member sets are disjoint, so the solves are independent;
+        composition is guarded per pair by the delta against the state as
+        commits land.  Returns (solved, accepted) per pair, in order.
+
+        ``solver``:
+          * ``'block'`` (the ``'auto'`` default) — batch-assemble every
+            dirty pair's auxiliary graph and solve them as ONE
+            block-diagonal flow problem (one scipy pass; per-block Dinic
+            with optional ``workers`` fan-out without scipy).
+          * ``'pairwise'`` — PR-1 behavior: one cut solve per dirty pair.
+        """
+        if solver == "auto":
+            solver = "block"
+        # Solve phase — nothing mutates the state, so every solve sees the
+        # same snapshot and the same dirty-version.
+        snapshot_version = self._version
+        if solver == "pairwise":
+            sols = [
+                "clean" if self.pair_clean(i, j) else self.solve_pair(i, j)
+                for i, j in pairs
+            ]
+        elif solver == "block":
+            sols: List = []
+            dirty_slots, dirty_pairs = [], []
+            for slot, (i, j) in enumerate(pairs):
+                if self.pair_clean(i, j):
+                    sols.append("clean")
+                else:
+                    sols.append(None)
+                    dirty_slots.append(slot)
+                    dirty_pairs.append((i, j))
+            servers = [s for p in dirty_pairs for s in p]
+            if len(servers) != len(set(servers)):
+                # Blocks are only well-defined for a MATCHING; a shared
+                # server would silently misclassify its members, so solve
+                # overlapping rounds per pair instead.
+                for slot, (i, j) in zip(dirty_slots, dirty_pairs):
+                    sols[slot] = self.solve_pair(i, j)
+            elif dirty_pairs:
+                for slot, sol in zip(dirty_slots,
+                                     self._solve_round_blocks(dirty_pairs)):
+                    sols[slot] = sol
+        else:
+            raise ValueError(f"unknown round solver {solver!r}")
+
+        # Apply phase — identical for every solver: pair order, exact live
+        # delta per acceptance, PR-1 dirty-stamp semantics.
         out = []
-        for i, j, sol, solve_version in sols:
+        for (i, j), sol in zip(pairs, sols):
             if isinstance(sol, str):                 # clean: known reject
                 out.append((True, False))
                 continue
             if sol is None:
-                self._pair_stamp[(i, j)] = solve_version
+                self._pair_stamp[(i, j)] = snapshot_version
                 out.append((False, False))
                 continue
             dirt_before = max(self._server_dirty[i], self._server_dirty[j])
@@ -354,12 +392,111 @@ class PairCutEngine:
             # in this round touched its servers (dirt_before > solve
             # version), or it was rejected, keep the solve-time stamp so the
             # pair is re-solved against the fresh state.
-            if accepted and dirt_before <= solve_version:
+            if accepted and dirt_before <= snapshot_version:
                 self._pair_stamp[(i, j)] = self._version
             else:
-                self._pair_stamp[(i, j)] = solve_version
+                self._pair_stamp[(i, j)] = snapshot_version
             out.append((True, accepted))
         return out
+
+    # ---------------------------------------------------- block round solve
+    def _solve_round_blocks(
+        self, dirty: Sequence[Tuple[int, int]]
+    ) -> List[Optional[Tuple[np.ndarray, np.ndarray]]]:
+        """Batch-assemble the auxiliary graphs of the round's dirty pairs
+        and solve them as one block-diagonal flow problem.
+
+        Returns, per dirty pair (in order), ``None`` (no members) or
+        ``(members, proposed_servers)`` exactly as :meth:`solve_pair` —
+        does NOT mutate the state.
+
+        Vertex-disjoint server pairs => disjoint member sets, so one
+        vertex->block classification covers the whole round and a single
+        ragged CSR gather yields every block's incident links at once."""
+        cm, assign = self.cm, self.state.assign
+        B = len(dirty)
+        srv_i = np.fromiter((p[0] for p in dirty), np.int64, count=B)
+        srv_j = np.fromiter((p[1] for p in dirty), np.int64, count=B)
+        lookup = np.full(cm.net.m, -1, dtype=np.int64)
+        lookup[srv_i] = np.arange(B)
+        lookup[srv_j] = np.arange(B)
+        vblk = lookup[assign]                       # vertex -> block (or -1)
+        if self._active is not None:
+            vblk = np.where(self._active, vblk, -1)
+        sel = np.flatnonzero(vblk >= 0)
+        if len(sel) == 0:
+            return [None] * B
+        vb = vblk[sel]
+        order = np.argsort(vb, kind="stable")       # block-grouped, ascending
+        members_all = sel[order]                    # within each block
+        sizes = np.bincount(vb, minlength=B)
+        bptr = np.zeros(B + 1, dtype=np.int64)
+        np.cumsum(sizes, out=bptr[1:])
+        N = len(members_all)
+
+        rep_i = np.repeat(srv_i, sizes)             # per-member block servers
+        rep_j = np.repeat(srv_j, sizes)
+        mrow_blk = np.repeat(np.arange(B), sizes)
+        theta_i = cm.unary[members_all, rep_i].astype(np.float64)
+        theta_j = cm.unary[members_all, rep_j].astype(np.float64)
+        loc = self._loc                             # global -> member row
+        loc[members_all] = np.arange(N)
+
+        flat, rep = csr_multirange(self._indptr, members_all)
+        if len(flat):
+            nbr = self._indices[flat]
+            rowb = mrow_blk[rep]
+            # A neighbor is internal iff it is a member of the SAME block;
+            # members of other blocks are frozen third-server vertices for
+            # this pair (their commits land only in the apply phase).
+            internal = vblk[nbr] == rowb
+            bnd = ~internal
+            if bnd.any():
+                ins = rep[bnd]
+                outs = assign[nbr[bnd]]
+                bi = rowb[bnd]
+                ti = self._tau[srv_i[bi], outs]
+                tj = self._tau[srv_j[bi], outs]
+                if not self._unit_w:
+                    bw = self._w[self._eids[flat[bnd]]]
+                    ti = ti * bw
+                    tj = tj * bw
+                theta_i += np.bincount(ins, weights=ti, minlength=N)
+                theta_j += np.bincount(ins, weights=tj, minlength=N)
+            int_rows = rep[internal]
+            int_cols = loc[nbr[internal]]
+            int_w = self._tau[srv_i, srv_j][rowb[internal]]  # per-block tau_ij
+            if not self._unit_w:
+                int_w = int_w * self._w[self._eids[flat[internal]]]
+        else:
+            int_rows = int_cols = np.zeros(0, dtype=np.int64)
+            int_w = np.zeros(0, dtype=np.float64)
+
+        # Singleton reduction across ALL blocks at once (tie -> sink side,
+        # matching the per-pair path); only the connected cores reach flow.
+        new_assign = np.where(theta_i < theta_j, rep_i, rep_j)
+        has_int = np.zeros(N, dtype=bool)
+        has_int[int_rows] = True
+        core = np.flatnonzero(has_int)              # stays block-grouped
+        if len(core):
+            cloc = np.empty(N, dtype=np.int64)
+            cloc[core] = np.arange(len(core))
+            core_ptr = np.zeros(B + 1, dtype=np.int64)
+            np.cumsum(np.bincount(mrow_blk[core], minlength=B),
+                      out=core_ptr[1:])
+            side = min_st_cut_csr_blocks(
+                core_ptr, cloc[int_rows], cloc[int_cols], int_w,
+                theta_i[core], theta_j[core], arena=self._arena,
+                backend="scipy" if self._use_csr else self._backend,
+                workers=self._workers, worker_mode=self._worker_mode,
+                presorted=True)
+            new_assign[core] = np.where(side, rep_i[core], rep_j[core])
+
+        loc[members_all] = -1                       # reset scratch
+        return [
+            (members_all[lo:hi], new_assign[lo:hi]) if hi > lo else None
+            for lo, hi in zip(bptr[:-1], bptr[1:])
+        ]
 
     def try_apply(
         self, members: np.ndarray, proposed: np.ndarray, tol: float = 1e-9

@@ -42,10 +42,14 @@ def glad_e(
     R: Optional[int] = None,
     seed: int = 0,
     backend: str = "auto",
+    sweep: str = "batched",
 ) -> GladResult:
     """Args:
       cm_new: cost model bound to the *evolved* graph G(t).
       old_graph / assign_old: G(t-1) and its layout pi(t-1).
+      sweep: GLAD-S sweep discipline — incremental relayout defaults to the
+        batched disjoint-pair rounds (block-diagonal round solver), since
+        the changed-vertex filter wants wall time, not the Alg.-1 order.
     """
     new_graph = cm_new.graph
     active = changed_vertices(old_graph, new_graph, assign_old)
@@ -67,5 +71,6 @@ def glad_e(
     if R is None:
         R = max(3, cm_new.net.m)
     return glad_s(
-        cm_new, R=R, init=assign, active=active, seed=seed, backend=backend
+        cm_new, R=R, init=assign, active=active, seed=seed, backend=backend,
+        sweep=sweep,
     )

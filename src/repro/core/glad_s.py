@@ -30,7 +30,12 @@ Two sweep disciplines (incremental engine only):
   * ``sweep='batched'`` — a round-robin matching of disjoint server pairs
     per round; disjoint pairs host disjoint member sets so their cuts are
     solved from one snapshot and composed, each acceptance guarded by an
-    exact live delta.
+    exact live delta.  ``round_solver`` picks how a round's cuts are
+    solved: ``'block'`` (the ``'auto'`` default) batch-assembles every
+    dirty pair into one block-diagonal flow problem solved by a single
+    scipy pass (pure-python fallback: per-block Dinic over ``workers``
+    threads/processes); ``'pairwise'`` keeps PR 1's one-solve-per-pair
+    path (benchmark baseline).
 """
 from __future__ import annotations
 
@@ -164,6 +169,9 @@ def glad_s(
     on_iteration: Optional[Callable[[int, float], None]] = None,
     sweep: str = "single",
     engine: str = "incremental",
+    round_solver: str = "auto",
+    workers: int = 0,
+    worker_mode: str = "thread",
 ) -> GladResult:
     """Paper Algorithm 1.
 
@@ -178,6 +186,10 @@ def glad_s(
       sweep: 'single' (Alg. 1 verbatim) or 'batched' (disjoint-pair rounds).
       engine: 'incremental' (delta-cost engine) or 'reference' (seed Alg. 1
         transcription — oracle/benchmark baseline).
+      round_solver: batched-sweep round solver — 'auto'/'block' (one
+        block-diagonal flow per round) or 'pairwise' (PR-1 per-pair solves).
+      workers: pure-python-backend only — fan a round's blocks out over
+        this many threads/processes ('worker_mode') when scipy is absent.
     """
     rng = np.random.default_rng(seed)
     net, graph = cm.net, cm.graph
@@ -197,14 +209,16 @@ def glad_s(
     if engine != "incremental":
         raise ValueError(f"unknown engine {engine!r}")
 
-    eng = PairCutEngine(cm, assign, active=active, backend=backend)
+    eng = PairCutEngine(cm, assign, active=active, backend=backend,
+                        workers=workers, worker_mode=worker_mode)
     history = [eng.state.total]
     if sweep == "single":
         iters, accepted = _sweep_single(
             eng, pairs, R, rng, max_iterations, on_iteration, history)
     elif sweep == "batched":
         iters, accepted = _sweep_batched(
-            eng, net, R, max_iterations, on_iteration, history)
+            eng, net, R, max_iterations, on_iteration, history,
+            round_solver)
     else:
         raise ValueError(f"unknown sweep {sweep!r}")
 
@@ -240,9 +254,11 @@ def _sweep_single(eng, pairs, R, rng, max_iterations, on_iteration, history):
     return iters, accepted
 
 
-def _sweep_batched(eng, net, R, max_iterations, on_iteration, history):
+def _sweep_batched(eng, net, R, max_iterations, on_iteration, history,
+                   round_solver="auto"):
     """Disjoint-pair rounds: each round solves a matching of server pairs
-    from one snapshot, then applies the cuts with exact live deltas."""
+    from one snapshot (one block-diagonal flow per round by default), then
+    applies the cuts with exact live deltas."""
     connected = {(int(i), int(j)) for i, j in net.pairs}
     rounds = [
         [p for p in rnd if p in connected]
@@ -254,7 +270,7 @@ def _sweep_batched(eng, net, R, max_iterations, on_iteration, history):
     r = iters = accepted = 0
     while r <= R and iters < max_iterations:
         for rnd in rounds:
-            for _solved, ok in eng.sweep_round(rnd):
+            for _solved, ok in eng.sweep_round(rnd, solver=round_solver):
                 iters += 1
                 if ok:
                     accepted += 1

@@ -12,11 +12,23 @@ GLAD-S settles each server pair by a min s-t cut on an auxiliary graph
 
 Both return the source-side membership mask, from which GLAD's Eq. (15)
 mapping derives the layout.
+
+Round-level solving: a round-robin round of GLAD's batched sweep yields a
+set of vertex-disjoint auxiliary graphs (one per disjoint server pair).
+:func:`min_st_cut_csr_blocks` solves them all in ONE flow pass by gluing
+the blocks at a shared source/sink — the union network decomposes into
+per-block flows (every s-t path stays inside one block), so the residual
+reachability from the shared source restricted to block b is exactly
+block b's minimal min cut.  The scipy BFS/DFS therefore never crosses a
+block boundary, and no super-arc capacity bounds (which would cost integer
+resolution) are needed.  Without scipy the blocks fall back to independent
+pure-python Dinic solves, optionally fanned out over a thread/process pool
+(:func:`min_st_cut_many`).
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -31,6 +43,10 @@ except Exception:  # pragma: no cover
 _SCALE = 10 ** 7  # float -> int64 capacity resolution for the scipy backend
 
 
+def _pow2_at_least(size: int) -> int:
+    return 1 << int(np.ceil(np.log2(max(size, 1))))
+
+
 class CutArena:
     """Reusable scratch buffers for repeated min-cut solves.
 
@@ -38,16 +54,26 @@ class CutArena:
     per-call assembly of the merged directed edge list is served from one
     geometrically-grown arena instead of four fresh allocations per call.
     Pass the same instance to every :func:`min_st_cut` of a sweep.
+
+    Capacity growth is MONOTONE: a request smaller than an earlier one
+    returns views of the existing buffers, and a regrowth never allocates
+    below the current capacity — rounds of differing dirty-pair counts
+    (large round, small round, large round again) reuse one allocation.
     """
 
     def __init__(self):
         self._cap = 0
         self._u = self._v = self._c = self._ci = None
+        # Flow-CSR scratch (block-diagonal round assembly): row pointers +
+        # column/capacity arrays, grown independently of the edge buffers.
+        self._rows_cap = 0
+        self._nnz_cap = 0
+        self._indptr = self._cols = self._caps = None
 
     def edge_buffers(self, size: int):
         """(u, v, c, ci) views of length ``size`` (int64/int64/f64/int64)."""
         if self._u is None or size > self._cap:
-            cap = max(256, 1 << int(np.ceil(np.log2(max(size, 1)))))
+            cap = max(256, self._cap, _pow2_at_least(size))
             self._u = np.empty(cap, dtype=np.int64)
             self._v = np.empty(cap, dtype=np.int64)
             self._c = np.empty(cap, dtype=np.float64)
@@ -55,6 +81,19 @@ class CutArena:
             self._cap = cap
         return (self._u[:size], self._v[:size], self._c[:size],
                 self._ci[:size])
+
+    def flow_csr_buffers(self, n_rows: int, nnz: int):
+        """(indptr, cols, caps) views for a flow CSR with ``n_rows`` row
+        pointers and ``nnz`` entries (int32/int32/f64).  Contents are
+        uninitialized; ``caps`` may be clobbered by the solver."""
+        if self._indptr is None or n_rows > self._rows_cap:
+            self._rows_cap = max(256, self._rows_cap, _pow2_at_least(n_rows))
+            self._indptr = np.empty(self._rows_cap, dtype=np.int32)
+        if self._cols is None or nnz > self._nnz_cap:
+            self._nnz_cap = max(1024, self._nnz_cap, _pow2_at_least(nnz))
+            self._cols = np.empty(self._nnz_cap, dtype=np.int32)
+            self._caps = np.empty(self._nnz_cap, dtype=np.float64)
+        return (self._indptr[:n_rows], self._cols[:nnz], self._caps[:nnz])
 
 
 class Dinic:
@@ -205,6 +244,245 @@ def min_st_cut_csr(
     else:  # pragma: no cover - asymmetric structure / scipy internals drift
         side = _residual_source_side(mat, flow, n, s)
     return res.flow_value / scale, side
+
+
+def assemble_symmetric_flow_csr(
+    k: int,
+    int_a: np.ndarray,
+    int_b: np.ndarray,
+    int_w: np.ndarray,
+    theta_i: np.ndarray,
+    theta_j: np.ndarray,
+    arena: "CutArena | None" = None,
+    presorted: bool = False,
+):
+    """Build the symmetric-structure flow CSR of a GLAD auxiliary network.
+
+    Nodes 0..k-1 are the (core) members, S=k, T=k+1.  ``int_a/int_b/int_w``
+    hold the internal arcs with BOTH directions present (the CSR member
+    gather emits each undirected link twice).  T-links: cap(S->v)=theta_j[v]
+    (cut => v lands on the sink server), cap(v->T)=theta_i[v]; the reverse
+    arcs (v->S, T->v) are materialized with zero capacity so every arc's
+    transpose slot exists — scipy's flow matrix then shares this sparsity
+    exactly and :func:`min_st_cut_csr`'s residual is a plain array
+    difference.  The structure must also be CANONICAL (sorted column
+    indices, no duplicates): internal arcs are lexsorted by (row, col), and
+    each member row ends with ->S(=k), ->T(=k+1), which exceed every member
+    column.  Works identically for a block-diagonal union of disjoint
+    auxiliary graphs glued at the shared S/T: rows of different blocks never
+    reference each other's columns, so per-block sorted order is global
+    sorted order.
+
+    ``presorted=True`` skips the canonicalizing lexsort: the layout engine
+    guarantees it by construction (DataGraph rows are (src, dst)-sorted and
+    member-local ids are rank-monotone, so gathered arcs arrive row-grouped
+    with ascending columns).
+
+    Returns ``(n, s, t, indptr, cols, caps)`` ready for
+    :func:`min_st_cut_csr`.  With ``arena``, the output arrays are views of
+    reused scratch (``caps`` is clobbered by the solve).
+    """
+    n_int = len(int_a)
+    if n_int and not presorted:
+        order = np.lexsort((int_b, int_a))
+        int_a = int_a[order]
+        int_b = int_b[order]
+        int_w = np.asarray(int_w)[order]
+    int_counts = np.bincount(int_a, minlength=k)
+    nnz = n_int + 4 * k
+    if arena is not None:
+        aux_indptr, cols, caps = arena.flow_csr_buffers(k + 3, nnz)
+    else:
+        aux_indptr = np.empty(k + 3, dtype=np.int32)
+        cols = np.empty(nnz, dtype=np.int32)
+        caps = np.empty(nnz, dtype=np.float64)
+    aux_indptr[0] = 0
+    np.cumsum(int_counts + 2, out=aux_indptr[1:k + 1])
+    aux_indptr[k + 1] = aux_indptr[k] + k        # S row
+    aux_indptr[k + 2] = aux_indptr[k + 1] + k    # T row
+    S, T = k, k + 1
+    ar = np.arange(k)
+    row_start = aux_indptr[:k].astype(np.int64)  # of member rows
+    if n_int:
+        # Within-row offsets of the (already grouped) internal arcs.
+        excl = np.cumsum(int_counts) - int_counts
+        pos = np.arange(n_int) - np.repeat(excl, int_counts) \
+            + row_start[int_a]
+        cols[pos] = int_b
+        caps[pos] = int_w
+    t_pos = row_start + int_counts
+    cols[t_pos] = S
+    caps[t_pos] = 0.0
+    cols[t_pos + 1] = T
+    caps[t_pos + 1] = theta_i
+    cols[n_int + 2 * k:n_int + 3 * k] = ar
+    caps[n_int + 2 * k:n_int + 3 * k] = theta_j
+    cols[n_int + 3 * k:] = ar
+    caps[n_int + 3 * k:] = 0.0
+    return k + 2, S, T, aux_indptr, cols, caps
+
+
+def concat_flow_blocks(blocks: Sequence[tuple]):
+    """Concatenate per-block auxiliary problems into one block-diagonal one.
+
+    ``blocks``: sequence of ``(k, int_a, int_b, int_w, theta_i, theta_j)``
+    with block-local node ids (internal arcs both directions).  Returns
+    ``(block_ptr, int_a, int_b, int_w, theta_i, theta_j)`` with GLOBAL node
+    ids, where block b's nodes occupy ``block_ptr[b]:block_ptr[b+1]`` —
+    the input format of :func:`min_st_cut_csr_blocks`.
+    """
+    sizes = np.array([b[0] for b in blocks], dtype=np.int64)
+    block_ptr = np.zeros(len(blocks) + 1, dtype=np.int64)
+    np.cumsum(sizes, out=block_ptr[1:])
+    int_a = [np.asarray(b[1], np.int64) + off
+             for b, off in zip(blocks, block_ptr[:-1])]
+    int_b = [np.asarray(b[2], np.int64) + off
+             for b, off in zip(blocks, block_ptr[:-1])]
+    cat = lambda xs, dt: (np.concatenate(xs) if xs else np.zeros(0, dt))  # noqa: E731
+    return (
+        block_ptr,
+        cat(int_a, np.int64),
+        cat(int_b, np.int64),
+        np.concatenate([np.broadcast_to(np.asarray(b[3], np.float64),
+                                        (len(b[1]),)) for b in blocks])
+        if blocks else np.zeros(0, np.float64),
+        cat([np.asarray(b[4], np.float64) for b in blocks], np.float64),
+        cat([np.asarray(b[5], np.float64) for b in blocks], np.float64),
+    )
+
+
+def min_st_cut_csr_blocks(
+    block_ptr: np.ndarray,
+    int_a: np.ndarray,
+    int_b: np.ndarray,
+    int_w: np.ndarray,
+    theta_i: np.ndarray,
+    theta_j: np.ndarray,
+    arena: "CutArena | None" = None,
+    backend: str = "auto",
+    workers: int = 0,
+    worker_mode: str = "thread",
+    presorted: bool = False,
+) -> np.ndarray:
+    """Solve all blocks of a block-diagonal auxiliary flow problem at once.
+
+    Block b's nodes are the global ids ``block_ptr[b]:block_ptr[b+1]``;
+    ``int_a/int_b/int_w`` are its internal arcs in global ids (both
+    directions present), ``theta_i/theta_j`` the t-link capacities per node.
+    Blocks share no arcs (vertex-disjoint server pairs), so the union glued
+    at one shared source/sink decomposes exactly: one scipy max-flow pass
+    solves every block, and the residual BFS from the shared source never
+    crosses a block boundary.  Returns the concatenated source-side mask
+    over all ``block_ptr[-1]`` nodes (True = source server of the node's
+    own block).
+
+    Without scipy (or ``backend='dinic'``) the blocks are solved
+    independently by the pure-python Dinic, fanned out over ``workers``
+    threads/processes when ``workers > 1`` (:func:`min_st_cut_many`).
+    """
+    nc = int(block_ptr[-1])
+    if nc == 0:
+        return np.zeros(0, dtype=bool)
+    if backend == "auto":
+        backend = "scipy" if _HAVE_SCIPY else "dinic"
+    if backend == "scipy":
+        nb = len(block_ptr) - 1
+        if nb > 1:
+            # Normalize every block to its own capacity maximum before the
+            # shared integer scaling: blocks are arc-disjoint, so a
+            # per-block constant factor cannot change a block's cut
+            # partition, but it keeps each block's full 1/_SCALE relative
+            # resolution when magnitudes differ across the round (a block
+            # 1e6x cheaper than the round's max would otherwise quantize
+            # to noise).  This reproduces the per-pair path's quantization
+            # exactly: caps become round(cap / cmax_block * _SCALE).
+            node_blk = np.repeat(np.arange(nb), np.diff(block_ptr))
+            bmax = np.zeros(nb, dtype=np.float64)
+            np.maximum.at(bmax, node_blk, theta_i)
+            np.maximum.at(bmax, node_blk, theta_j)
+            arc_blk = None
+            if len(int_a):
+                arc_blk = node_blk[int_a]
+                np.maximum.at(bmax, arc_blk, int_w)
+            inv = 1.0 / np.maximum(bmax, 1e-30)
+            theta_i = theta_i * inv[node_blk]
+            theta_j = theta_j * inv[node_blk]
+            if len(int_a):
+                int_w = np.asarray(int_w) * inv[arc_blk]
+        n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+            nc, int_a, int_b, int_w, theta_i, theta_j, arena=arena,
+            presorted=presorted)
+        _, side = min_st_cut_csr(n, s, t, indptr, cols, caps)
+        return side[:nc]
+
+    # Pure-python fallback: split the arcs back per block (arcs sorted by
+    # row are block-grouped — rows of block b lie in [ptr[b], ptr[b+1])).
+    if presorted:
+        ia, ib, iw = int_a, int_b, np.asarray(int_w)
+    else:
+        order = np.argsort(int_a, kind="stable")
+        ia, ib = int_a[order], int_b[order]
+        iw = np.asarray(int_w)[order]
+    bounds = np.searchsorted(ia, block_ptr)
+    problems = []
+    spans = []
+    for b in range(len(block_ptr) - 1):
+        lo, hi = int(block_ptr[b]), int(block_ptr[b + 1])
+        k = hi - lo
+        if k == 0:
+            continue
+        alo, ahi = bounds[b], bounds[b + 1]
+        n_int = ahi - alo
+        S, T = k, k + 1
+        us = np.empty(2 * k + n_int, dtype=np.int64)
+        vs = np.empty(2 * k + n_int, dtype=np.int64)
+        caps_uv = np.empty(2 * k + n_int, dtype=np.float64)
+        caps_vu = np.zeros(2 * k + n_int, dtype=np.float64)
+        us[:k] = S
+        vs[:k] = np.arange(k)
+        caps_uv[:k] = theta_j[lo:hi]
+        us[k:2 * k] = np.arange(k)
+        vs[k:2 * k] = T
+        caps_uv[k:2 * k] = theta_i[lo:hi]
+        us[2 * k:] = ia[alo:ahi] - lo
+        vs[2 * k:] = ib[alo:ahi] - lo
+        caps_uv[2 * k:] = iw[alo:ahi]
+        problems.append((k + 2, S, T, us, vs, caps_uv, caps_vu))
+        spans.append((lo, hi, k))
+    results = min_st_cut_many(problems, backend="dinic", workers=workers,
+                              worker_mode=worker_mode)
+    side = np.zeros(nc, dtype=bool)
+    for (lo, hi, k), (_, blk_side) in zip(spans, results):
+        side[lo:hi] = blk_side[:k]
+    return side
+
+
+def _solve_one_cut(problem: tuple, backend: str = "dinic"):
+    """Top-level (picklable) worker for :func:`min_st_cut_many`."""
+    n, s, t, us, vs, caps_uv, caps_vu = problem
+    return min_st_cut(n, s, t, us, vs, caps_uv, caps_vu, backend=backend)
+
+
+def min_st_cut_many(
+    problems: Sequence[tuple],
+    backend: str = "dinic",
+    workers: int = 0,
+    worker_mode: str = "thread",
+) -> List[Tuple[float, np.ndarray]]:
+    """Solve independent cut problems ``(n, s, t, us, vs, caps_uv,
+    caps_vu)``, optionally in a pool of ``workers`` threads or processes
+    (``worker_mode``) — the pure-python-backend fallback for a round's
+    disjoint blocks when no single-pass C solver is available.  Results are
+    returned in input order."""
+    if workers and workers > 1 and len(problems) > 1:
+        import concurrent.futures as cf
+        import functools
+        pool_cls = (cf.ProcessPoolExecutor if worker_mode == "process"
+                    else cf.ThreadPoolExecutor)
+        with pool_cls(max_workers=int(workers)) as pool:
+            return list(pool.map(
+                functools.partial(_solve_one_cut, backend=backend), problems))
+    return [_solve_one_cut(p, backend=backend) for p in problems]
 
 
 def min_st_cut(

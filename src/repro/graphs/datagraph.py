@@ -86,7 +86,11 @@ class DataGraph:
         src = np.concatenate([self.edges[:, 0], self.edges[:, 1]])
         dst = np.concatenate([self.edges[:, 1], self.edges[:, 0]])
         eid = np.concatenate([np.arange(E), np.arange(E)])
-        order = np.argsort(src, kind="stable")
+        # Sort by (src, dst) — not just src — so every row's neighbor list
+        # is ascending.  The layout engine relies on this: auxiliary-graph
+        # arcs gathered row-by-row are then already in canonical (row, col)
+        # order and the flow-CSR assembly skips its per-solve lexsort.
+        order = np.lexsort((dst, src))
         src, dst, eid = src[order], dst[order], eid[order]
         self._indptr = np.zeros(self.n + 1, dtype=np.int64)
         np.add.at(self._indptr, src + 1, 1)

@@ -116,7 +116,7 @@ class ElasticCoordinator:
         alive = [i for i in range(net.m) if i not in dead]
         rng = np.random.default_rng(seed)
         assign[orphan] = rng.choice(alive, size=int(orphan.sum()))
-        res = glad_s(cm, init=assign, R=net.m, seed=seed)
+        res = glad_s(cm, init=assign, R=net.m, seed=seed, sweep="batched")
         new_part = partition_from_assign(self.graph, res.assign,
                                          self.part.num_parts, res.factors)
         migrated = int((res.assign != self.part.assign).sum())
@@ -136,7 +136,8 @@ class ElasticCoordinator:
             net = net.degrade(s, slow_factor)
         cm = CostModel(net, self.graph, self.gnn)
         old_cost = cm.total(self.part.assign)
-        res = glad_s(cm, init=self.part.assign, R=net.m, seed=seed)
+        res = glad_s(cm, init=self.part.assign, R=net.m, seed=seed,
+                     sweep="batched")
         new_part = partition_from_assign(self.graph, res.assign,
                                          self.part.num_parts, res.factors)
         migrated = int((res.assign != self.part.assign).sum())

@@ -1,8 +1,41 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
-real (single) device; only dryrun sets the 512-device flag, and the
-multi-device integration tests spawn subprocesses."""
+"""Shared fixtures + marker config.  NOTE: no XLA_FLAGS here — smoke tests
+must see the real (single) device; only dryrun sets the 512-device flag, and
+the multi-device integration tests spawn subprocesses.
+
+Markers: ``slow`` (long property/fuzz runs) and ``bench`` (wall-clock
+comparisons).  Tier-1 runs with an implicit ``-m "not slow"``-style default:
+when no ``-m`` expression is given, slow/bench tests are deselected so the
+default suite stays fast; run them on demand with e.g. ``-m slow``,
+``-m bench`` or ``-m "slow or not slow"`` (everything)."""
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running property/fuzz tests "
+        "(deselected unless an -m expression is given)")
+    config.addinivalue_line(
+        "markers", "bench: wall-clock benchmark tests "
+        "(deselected unless an -m expression is given)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("-m"):
+        return                     # an explicit -m expression takes over
+    # A test named by node id on the command line was asked for explicitly —
+    # run it even without -m (pytest convention: selection beats markers).
+    explicit = [a.split("::", 1)[1].split("[", 1)[0]
+                for a in config.args if "::" in a]
+    skip = pytest.mark.skip(
+        reason="slow/bench: deselected by default, pass -m to opt in")
+    for item in items:
+        if "slow" not in item.keywords and "bench" not in item.keywords:
+            continue
+        name = item.nodeid.split("::", 1)[-1].split("[", 1)[0]
+        if name in explicit:
+            continue
+        item.add_marker(skip)
 
 try:  # pragma: no cover - exercised only where hypothesis is installed
     import hypothesis  # noqa: F401

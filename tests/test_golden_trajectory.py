@@ -1,0 +1,62 @@
+"""Golden-trajectory regression: a committed GLAD-S run on a small
+deterministic instance.
+
+The sequential sweep must reproduce the fixture's full iteration history
+and final assignment BIT-FOR-BIT (the incremental engine's trajectory
+guarantee); the batched sweeps — per-pair and block-diagonal — must reach
+the same final cost.  Regenerate the fixture only for a deliberate
+trajectory-semantics change (see the inline recipe below).
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.glad_s import glad_s
+from repro.graphs.datagraph import synthetic_siot
+from repro.graphs.edgenet import build_edge_network
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "golden_glad_s.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        fix = json.load(f)
+    p = fix["params"]
+    g = synthetic_siot(n=p["n"], target_links=p["target_links"],
+                       seed=p["graph_seed"])
+    net = build_edge_network(g, p["m"], seed=p["net_seed"])
+    cm = CostModel(net, g, workload_for(p["gnn_model"], p["in_dim"]))
+    return fix, cm, p["glad_seed"]
+
+
+def test_sequential_sweep_reproduces_golden_bit_for_bit(golden):
+    fix, cm, seed = golden
+    res = glad_s(cm, seed=seed, sweep="single")
+    assert res.iterations == fix["iterations"]
+    assert res.accepted == fix["accepted"]
+    got_hex = [np.float64(h).hex() for h in res.history]
+    assert got_hex == fix["history_hex"]
+    assert np.float64(res.cost).hex() == fix["final_cost_hex"]
+    np.testing.assert_array_equal(res.assign, np.array(fix["assign"]))
+
+
+@pytest.mark.parametrize("round_solver", ["pairwise", "block"])
+def test_batched_sweeps_reach_golden_final_cost(golden, round_solver):
+    fix, cm, seed = golden
+    res = glad_s(cm, seed=seed, sweep="batched", round_solver=round_solver)
+    assert res.cost == pytest.approx(fix["final_cost"], rel=1e-12)
+
+
+def test_golden_fixture_is_self_consistent(golden):
+    """The committed assignment really evaluates to the committed cost, and
+    the history is monotone non-increasing (accepts only improve)."""
+    fix, cm, _ = golden
+    assert cm.total(np.array(fix["assign"])) == pytest.approx(
+        fix["final_cost"], rel=1e-12)
+    h = np.array(fix["history"])
+    assert (np.diff(h) <= 1e-9).all()
+    assert h[-1] == pytest.approx(fix["final_cost"], rel=1e-12)

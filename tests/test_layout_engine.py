@@ -152,6 +152,92 @@ def test_batched_respects_active_mask(cm_small):
     assert (res.assign[10:] == init[10:]).all()
 
 
+# ------------------------------------------------ block-diagonal round solver
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 5000))
+def test_block_sweep_not_worse_than_sequential(seed):
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng)
+    seq = glad_s(cm, seed=seed, sweep="single")
+    blk = glad_s(cm, seed=seed, sweep="batched", round_solver="block")
+    assert blk.cost <= seq.cost + 1e-9
+    h = np.array(blk.history)
+    assert (np.diff(h) <= 1e-9).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 5000))
+def test_block_sweep_terminates_pairwise_optimal(seed):
+    """After a block-solver run converges, no server pair admits an
+    improving cut — the batch assembly + shared-source solve must not mask
+    any improving re-solve behind a stale stamp or a wrong scatter."""
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng)
+    res = glad_s(cm, seed=seed, sweep="batched", round_solver="block")
+    eng = PairCutEngine(cm, res.assign)
+    for i, j in net.pairs:
+        _, accepted = eng.try_pair(int(i), int(j))
+        assert not accepted, (seed, i, j)
+
+
+def test_block_sweep_matches_pairwise_small_yelp(cm_small):
+    for seed in (0, 1, 2):
+        pw = glad_s(cm_small, seed=seed, sweep="batched",
+                    round_solver="pairwise")
+        blk = glad_s(cm_small, seed=seed, sweep="batched",
+                     round_solver="block")
+        assert blk.cost == pytest.approx(pw.cost, rel=1e-12)
+
+
+def test_block_sweep_respects_active_mask(cm_small):
+    rng = np.random.default_rng(3)
+    init = rng.integers(0, cm_small.net.m, size=cm_small.graph.n)
+    active = np.zeros(cm_small.graph.n, bool)
+    active[:10] = True
+    res = glad_s(cm_small, init=init, active=active, seed=3, sweep="batched",
+                 round_solver="block")
+    assert (res.assign[10:] == init[10:]).all()
+
+
+def test_unknown_round_solver_raises(cm_small):
+    with pytest.raises(ValueError):
+        glad_s(cm_small, seed=0, sweep="batched", round_solver="nope")
+
+
+def test_block_sweep_round_handles_overlapping_pairs():
+    """Blocks are only defined for a matching; a round whose pairs share a
+    server must fall back to per-pair solves (same results as pairwise),
+    not silently misclassify the shared server's members."""
+    from tests.conftest import random_graph
+    rng = np.random.default_rng(7)
+    g = random_graph(rng, 30, 20)
+    net = build_edge_network(g, 4, seed=0)
+    cm = CostModel(net, g, workload_for("gcn", 4))
+    init = rng.integers(0, 4, 30)
+    overlap = [(0, 1), (1, 2)]
+    e1 = PairCutEngine(cm, init.copy())
+    r1 = e1.sweep_round(overlap, solver="block")
+    e2 = PairCutEngine(cm, init.copy())
+    r2 = e2.sweep_round(overlap, solver="pairwise")
+    assert r1 == r2
+    assert e1.state.total == pytest.approx(e2.state.total, rel=1e-12)
+    np.testing.assert_array_equal(e1.state.assign, e2.state.assign)
+
+
+@pytest.mark.bench
+def test_block_sweep_cost_parity_midsize():
+    """Benchmark-shaped instance (n=2000, m=16): block-diagonal and
+    per-pair batched sweeps converge to the same final cost (the
+    acceptance-criterion invariant, CI-sized)."""
+    from repro.graphs.datagraph import synthetic_siot
+    g = synthetic_siot(n=2000, target_links=8400, seed=0)
+    net = build_edge_network(g, 16, seed=0)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+    pw = glad_s(cm, seed=0, sweep="batched", round_solver="pairwise")
+    blk = glad_s(cm, seed=0, sweep="batched", round_solver="block")
+    assert blk.cost == pytest.approx(pw.cost, rel=1e-12)
+
+
 # ------------------------------------------------------- engine result shape
 def test_glad_result_fields_preserved(cm_small):
     res = glad_s(cm_small, seed=0)

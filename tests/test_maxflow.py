@@ -1,9 +1,13 @@
-"""Max-flow/min-cut: scipy backend vs pure-python Dinic oracle."""
+"""Max-flow/min-cut: scipy backend vs pure-python Dinic oracle, the
+symmetric-CSR fast path, the block-diagonal round solver, and CutArena."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.maxflow import Dinic, min_st_cut
+from repro.core.maxflow import (CutArena, Dinic, assemble_symmetric_flow_csr,
+                                concat_flow_blocks, min_st_cut,
+                                min_st_cut_csr, min_st_cut_csr_blocks,
+                                min_st_cut_many)
 
 
 def _random_network(rng, n, m):
@@ -66,3 +70,209 @@ def test_cut_value_equals_crossing_capacity(seed):
     crossing = sum(c for u, v, c in zip(us, vs, caps)
                    if side[u] and not side[v])
     assert val == pytest.approx(crossing, rel=1e-6, abs=1e-6)
+
+
+# ------------------------------------------- symmetric-CSR path vs Dinic
+def _random_aux_block(rng, k_max=12):
+    """Random GLAD-shaped auxiliary block: k member nodes, canonical
+    (deduplicated) undirected internal links emitted as both directed arcs,
+    nonnegative t-link caps — the structural contract of the engine's
+    CSR member gather."""
+    k = int(rng.integers(1, k_max))
+    n_links = int(rng.integers(0, 3 * k))
+    a = rng.integers(0, k, size=n_links)
+    b = rng.integers(0, k, size=n_links)
+    keep = a != b
+    a, b = a[keep], b[keep]
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    key, inv = np.unique(lo * k + hi, return_inverse=True)
+    w = np.bincount(inv, weights=rng.uniform(0.05, 4.0, size=len(a)),
+                    minlength=len(key))             # merge parallel links
+    lo, hi = key // k, key % k
+    int_a = np.concatenate([lo, hi])
+    int_b = np.concatenate([hi, lo])
+    int_w = np.concatenate([w, w])
+    theta_i = rng.uniform(0.0, 5.0, size=k).round(4)
+    theta_j = rng.uniform(0.0, 5.0, size=k).round(4)
+    return k, int_a, int_b, int_w, theta_i, theta_j
+
+
+def _dinic_block_value(k, int_a, int_b, int_w, theta_i, theta_j):
+    """Pure-python oracle for one auxiliary block; returns (value, side)."""
+    d = Dinic(k + 2)
+    S, T = k, k + 1
+    for v in range(k):
+        d.add_edge(S, v, float(theta_j[v]))
+        d.add_edge(v, T, float(theta_i[v]))
+    for a, b, w in zip(int_a, int_b, int_w):
+        if a < b:              # arcs come in both directions; add each once
+            d.add_edge(int(a), int(b), float(w), float(w))
+    val = d.max_flow(S, T)
+    return val, d.min_cut_side(S)
+
+
+def _crossing_capacity(side, k, int_a, int_b, int_w, theta_i, theta_j):
+    """Capacity of the s-t cut induced by a member-side mask."""
+    cross = float(theta_j[~side[:k]].sum()) + float(theta_i[side[:k]].sum())
+    cut_arcs = side[int_a] & ~side[int_b]
+    return cross + float(np.asarray(int_w)[cut_arcs].sum())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_min_st_cut_csr_matches_dinic_oracle(seed):
+    """The symmetric-CSR scipy fast path (direct assembly, int scaling,
+    array-difference residual) finds a minimum cut: its induced crossing
+    capacity equals the pure-python Dinic optimum."""
+    rng = np.random.default_rng(seed)
+    k, int_a, int_b, int_w, theta_i, theta_j = _random_aux_block(rng)
+    n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+        k, int_a, int_b, int_w, theta_i, theta_j)
+    caps_orig = caps.copy()          # the solver clobbers caps
+    val, side = min_st_cut_csr(n, s, t, indptr, cols, caps)
+    ref_val, _ = _dinic_block_value(k, int_a, int_b, int_w, theta_i, theta_j)
+    assert side[s] and not side[t]
+    assert val == pytest.approx(ref_val, rel=1e-5, abs=1e-5)
+    # The returned partition must itself be an optimal cut.
+    crossing = _crossing_capacity(side, k, int_a, int_b, int_w,
+                                  theta_i, theta_j)
+    assert crossing == pytest.approx(ref_val, rel=1e-5, abs=1e-5)
+    # Sanity: assembly left capacities untouched until the solve.
+    assert (caps_orig >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_block_diagonal_cuts_match_dinic_oracle(seed):
+    """One shared-source/sink flow pass over a block-diagonal union solves
+    every block to its own Dinic optimum (tentpole correctness)."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 6))
+    blocks = [_random_aux_block(rng) for _ in range(B)]
+    block_ptr, int_a, int_b, int_w, th_i, th_j = concat_flow_blocks(blocks)
+    side = min_st_cut_csr_blocks(block_ptr, int_a, int_b, int_w, th_i, th_j,
+                                 backend="scipy")
+    assert side.shape == (int(block_ptr[-1]),)
+    for b, (k, ia, ib, iw, ti, tj) in enumerate(blocks):
+        lo, hi = int(block_ptr[b]), int(block_ptr[b + 1])
+        ref_val, _ = _dinic_block_value(k, ia, ib, iw, ti, tj)
+        blk_side = np.concatenate([side[lo:hi], [True, False]])
+        crossing = _crossing_capacity(blk_side, k, ia, ib, iw, ti, tj)
+        assert crossing == pytest.approx(ref_val, rel=1e-5, abs=1e-5), b
+
+
+def test_block_solver_keeps_resolution_across_magnitudes():
+    """Regression: blocks are scaled to their own capacity maximum before
+    the shared integer quantization, so a block 1e9x cheaper than the
+    round's largest block still gets its exact min cut (previously its
+    capacities quantized to noise under the single global scale)."""
+    rng = np.random.default_rng(42)
+    for _ in range(10):
+        blocks = []
+        for scale in (1e9, 1.0, 1e-6):
+            k, ia, ib, iw, ti, tj = _random_aux_block(rng)
+            blocks.append((k, ia, ib, iw * scale, ti * scale, tj * scale))
+        block_ptr, ia, ib, iw, ti, tj = concat_flow_blocks(blocks)
+        side = min_st_cut_csr_blocks(block_ptr, ia, ib, iw, ti, tj,
+                                     backend="scipy")
+        for b, (k, ba, bb, bw, bi, bj) in enumerate(blocks):
+            lo, hi = int(block_ptr[b]), int(block_ptr[b + 1])
+            ref_val, _ = _dinic_block_value(k, ba, bb, bw, bi, bj)
+            blk = np.concatenate([side[lo:hi], [True, False]])
+            crossing = _crossing_capacity(blk, k, ba, bb, bw, bi, bj)
+            assert crossing == pytest.approx(ref_val, rel=1e-5), b
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_block_solver_backends_agree(seed):
+    """scipy single-pass vs per-block Dinic (serial and worker-pool) induce
+    cuts of equal capacity on every block."""
+    rng = np.random.default_rng(seed)
+    blocks = [_random_aux_block(rng) for _ in range(int(rng.integers(1, 5)))]
+    block_ptr, int_a, int_b, int_w, th_i, th_j = concat_flow_blocks(blocks)
+    args = (block_ptr, int_a, int_b, int_w, th_i, th_j)
+    s_scipy = min_st_cut_csr_blocks(*args, backend="scipy")
+    s_dinic = min_st_cut_csr_blocks(*args, backend="dinic")
+    s_pool = min_st_cut_csr_blocks(*args, backend="dinic", workers=2)
+    np.testing.assert_array_equal(s_dinic, s_pool)
+    for b, (k, ia, ib, iw, ti, tj) in enumerate(blocks):
+        lo, hi = int(block_ptr[b]), int(block_ptr[b + 1])
+        for s in (s_scipy, s_dinic):
+            blk = np.concatenate([s[lo:hi], [True, False]])
+            c = _crossing_capacity(blk, k, ia, ib, iw, ti, tj)
+            ref_val, _ = _dinic_block_value(k, ia, ib, iw, ti, tj)
+            assert c == pytest.approx(ref_val, rel=1e-5, abs=1e-5), b
+
+
+@pytest.mark.slow
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 100_000))
+def test_block_diagonal_cuts_match_dinic_oracle_fuzz(seed):
+    """Heavier on-demand fuzz of the block-diagonal solver (-m slow)."""
+    rng = np.random.default_rng(seed + 1)
+    B = int(rng.integers(1, 10))
+    blocks = [_random_aux_block(rng, k_max=25) for _ in range(B)]
+    block_ptr, int_a, int_b, int_w, th_i, th_j = concat_flow_blocks(blocks)
+    side = min_st_cut_csr_blocks(block_ptr, int_a, int_b, int_w, th_i, th_j,
+                                 backend="scipy")
+    for b, (k, ia, ib, iw, ti, tj) in enumerate(blocks):
+        lo, hi = int(block_ptr[b]), int(block_ptr[b + 1])
+        ref_val, _ = _dinic_block_value(k, ia, ib, iw, ti, tj)
+        blk_side = np.concatenate([side[lo:hi], [True, False]])
+        crossing = _crossing_capacity(blk_side, k, ia, ib, iw, ti, tj)
+        assert crossing == pytest.approx(ref_val, rel=1e-5, abs=1e-4), b
+
+
+def test_min_st_cut_many_orders_and_workers():
+    """min_st_cut_many returns results in input order, identical across
+    serial / thread-pool / process-pool execution."""
+    rng = np.random.default_rng(7)
+    problems = []
+    for _ in range(6):
+        n = int(rng.integers(4, 9))
+        us, vs, caps = _random_network(rng, n, 3 * n)
+        problems.append((n, 0, n - 1, us, vs, caps, np.zeros(len(us))))
+    serial = min_st_cut_many(problems, backend="dinic")
+    threads = min_st_cut_many(problems, backend="dinic", workers=3)
+    for (v1, s1), (v2, s2) in zip(serial, threads):
+        assert v1 == pytest.approx(v2, rel=1e-9)
+        np.testing.assert_array_equal(s1, s2)
+
+
+# ------------------------------------------------------------------ CutArena
+def test_cut_arena_growth_is_monotone():
+    """A smaller request after a larger one must reuse the same backing
+    buffers (no downward reallocation mid-sweep), and capacity only grows."""
+    arena = CutArena()
+    u1, _, _, _ = arena.edge_buffers(5000)
+    big = arena._u
+    cap_after_big = arena._cap
+    assert cap_after_big >= 5000
+    u2, _, _, _ = arena.edge_buffers(37)            # shrinking round
+    assert arena._u is big and arena._cap == cap_after_big
+    assert len(u2) == 37
+    u3, _, _, _ = arena.edge_buffers(4096)          # big again: still no realloc
+    assert arena._u is big and arena._cap == cap_after_big
+    assert len(u3) == 4096
+    arena.edge_buffers(3 * cap_after_big)           # genuine growth
+    assert arena._cap >= max(3 * cap_after_big, cap_after_big)
+    assert arena._cap >= cap_after_big              # monotone
+
+
+def test_cut_arena_flow_csr_buffers_monotone_and_sized():
+    arena = CutArena()
+    indptr, cols, caps = arena.flow_csr_buffers(100, 9000)
+    assert len(indptr) == 100 and len(cols) == 9000 and len(caps) == 9000
+    rows_cap, nnz_cap = arena._rows_cap, arena._nnz_cap
+    base_cols = arena._cols
+    indptr2, cols2, caps2 = arena.flow_csr_buffers(10, 50)   # smaller round
+    assert arena._cols is base_cols
+    assert arena._rows_cap == rows_cap and arena._nnz_cap == nnz_cap
+    assert len(indptr2) == 10 and len(cols2) == 50
+    arena.flow_csr_buffers(10, 4 * nnz_cap)                  # grow nnz only
+    assert arena._nnz_cap >= 4 * nnz_cap
+    assert arena._rows_cap == rows_cap
+    # dtypes stay solver-compatible
+    assert indptr.dtype == np.int32 and cols.dtype == np.int32
+    assert caps.dtype == np.float64

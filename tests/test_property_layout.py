@@ -1,0 +1,142 @@
+"""Property-based correctness harness for the layout engine.
+
+Two invariant families (hypothesis; offline the `_hypothesis_fallback`
+shim supplies a deterministic replacement):
+
+  * the delta-accept path — ``LayoutState``'s cached total after any random
+    sequence of delta/propose/commit/discard operations equals a fresh
+    ``CostModel.total()`` recompute (the engine never drifts from the true
+    objective);
+  * the block-diagonal round solver — one batch-assembled
+    ``_solve_round_blocks`` call over a round of disjoint server pairs
+    induces, per pair, a proposal whose objective equals the per-pair
+    ``solve_pair`` solve (ties may flip members; cost may not).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.engine import PairCutEngine, round_robin_rounds
+from repro.graphs.edgenet import build_edge_network
+from tests.conftest import random_graph
+
+
+def _instance(rng, weighted=False):
+    n = int(rng.integers(8, 40))
+    m = int(rng.integers(2, 7))
+    g = random_graph(rng, n, int(rng.integers(4, 30)))
+    if weighted:
+        g.edge_weights = rng.uniform(0.2, 3.0, size=len(g.edges))
+    net = build_edge_network(g, m, seed=int(rng.integers(0, 1000)))
+    return CostModel(net, g, workload_for("gcn", 8)), g, net
+
+
+# --------------------------------------------------- delta == full recompute
+def _random_move_sequence(seed, n_ops):
+    """Drive a LayoutState through a random op sequence, checking the cached
+    total against a from-scratch CostModel.total() after every mutation."""
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng, weighted=bool(seed % 2))
+    state = cm.layout_state(rng.integers(0, net.m, size=g.n))
+    assert state.total == pytest.approx(cm.total(state.assign), rel=1e-12)
+    for _ in range(n_ops):
+        k = int(rng.integers(1, max(2, g.n // 2)))
+        moved = rng.choice(g.n, size=k, replace=False)
+        new = rng.integers(0, net.m, size=k)
+        prop = state.assign.copy()
+        prop[moved] = new
+        expect_delta = cm.total(prop) - cm.total(state.assign)
+        op = int(rng.integers(0, 4))
+        if op == 0:                                    # read-only delta
+            assert state.delta(moved, new) == pytest.approx(
+                expect_delta, abs=1e-8)
+        elif op == 1:                                  # direct commit
+            state.commit(moved, new)
+            np.testing.assert_array_equal(state.assign, prop)
+        elif op == 2:                                  # propose -> accept
+            d = state.propose(moved, new)
+            assert d == pytest.approx(expect_delta, abs=1e-8)
+            state.commit_pending()
+            np.testing.assert_array_equal(state.assign, prop)
+        else:                                          # propose -> reject
+            state.propose(moved, new)
+            state.discard_pending()
+            with pytest.raises(RuntimeError):
+                state.commit_pending()
+        assert state.total == pytest.approx(cm.total(state.assign), abs=1e-7)
+    # Closing invariant: cached components still reconcile exactly.
+    assert state.total == pytest.approx(
+        state.unary_pick.sum() + state.edge_ct.sum() + cm.constant, abs=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 50_000))
+def test_delta_accept_equals_recompute_over_move_sequences(seed):
+    _random_move_sequence(seed, n_ops=12)
+
+
+@pytest.mark.slow
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 1_000_000))
+def test_delta_accept_equals_recompute_fuzz(seed):
+    """Heavier on-demand version (-m slow): longer sequences, more seeds."""
+    _random_move_sequence(seed, n_ops=40)
+
+
+# ----------------------------------------- block round solve == pair solves
+def _check_round_blocks_match_pair_solves(seed):
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng, weighted=bool(seed % 3 == 0))
+    assign = rng.integers(0, net.m, size=g.n)
+    rounds = round_robin_rounds(net.m)
+    rnd = rounds[int(rng.integers(0, len(rounds)))]
+    if not rnd:
+        return
+    eng = PairCutEngine(cm, assign)
+    batch = eng._solve_round_blocks(rnd)
+    assert len(batch) == len(rnd)
+    for (i, j), sol in zip(rnd, batch):
+        ref = eng.solve_pair(int(i), int(j))
+        assert (ref is None) == (sol is None)
+        if sol is None:
+            continue
+        members, proposed = sol
+        ref_members, ref_proposed = ref
+        np.testing.assert_array_equal(members, ref_members)
+        # Cuts may tie differently (block-global integer scaling); the
+        # induced objective must agree exactly.
+        a1, a2 = assign.copy(), assign.copy()
+        a1[members] = proposed
+        a2[ref_members] = ref_proposed
+        assert cm.total(a1) == pytest.approx(cm.total(a2), rel=1e-9), (i, j)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 50_000))
+def test_block_round_solve_matches_pair_solves(seed):
+    _check_round_blocks_match_pair_solves(seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 1_000_000))
+def test_block_round_solve_matches_pair_solves_fuzz(seed):
+    _check_round_blocks_match_pair_solves(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50_000))
+def test_block_round_respects_active_mask(seed):
+    """Frozen vertices never appear in any block's member set."""
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng)
+    assign = rng.integers(0, net.m, size=g.n)
+    active = rng.uniform(size=g.n) < 0.5
+    eng = PairCutEngine(cm, assign, active=active)
+    rnd = round_robin_rounds(net.m)[0]
+    for sol in eng._solve_round_blocks(rnd):
+        if sol is None:
+            continue
+        members, _ = sol
+        assert active[members].all()
