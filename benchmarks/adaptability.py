@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cost_model, dataset, emit, fleet
+from benchmarks.common import dataset, emit, fleet
 from repro.core import CostModel, workload_for
 from repro.core.baselines import greedy_layout
 from repro.core.evolution import apply_delta, evolution_trace
@@ -25,7 +25,6 @@ def run(full: bool = False, slots: int = 40, servers: int = 10,
     norm = init.cost
 
     sched = GladA(net, gnn, g0, theta=theta, R=3, seed=0)
-    g_na = g_gr = g_ge = g0
     assign_na = init.assign.copy()
     assign_ge = init.assign.copy()
     prev_ge_graph = g0

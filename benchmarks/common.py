@@ -6,9 +6,8 @@ own default); fleet is the Table-II A/B/C mix in equal proportion.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Callable, Dict
+from typing import Callable
 
 import numpy as np
 

@@ -2,7 +2,6 @@
 with a varying number of edge servers, normalized to Random@10's C_U."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import cost_model, dataset, emit, fleet
 from repro.core.baselines import greedy_layout, random_layout

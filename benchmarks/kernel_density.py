@@ -16,7 +16,6 @@ import numpy as np
 from benchmarks.common import dataset, emit
 from repro.core import data_partition, workload_for
 from repro.gnn.models import directed_edges
-from repro.kernels.gnn_aggregate import build_bsr
 
 
 def _relabel(edges: np.ndarray, order: np.ndarray) -> np.ndarray:
@@ -47,7 +46,6 @@ def run(full: bool = False, parts: int = 8, bm: int = 8, bk: int = 128):
         jb = e2[:, 0] // bk
         keys = np.unique(ib.astype(np.int64) * (g.n // bk + 2) + jb)
         nonempty = len(keys)
-        per_row = np.bincount(ib, minlength=(g.n + bm - 1) // bm)
         blocks_per_row = np.bincount(
             np.unique(np.stack([ib, jb], 1), axis=0)[:, 0],
             minlength=(g.n + bm - 1) // bm)

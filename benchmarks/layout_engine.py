@@ -21,13 +21,20 @@ round-robin pass from a fixed random init at n in {5k, 20k, 50k} and m in
 
   * ``pairwise``    — PR 1's batched sweep semantics (one cut solve per
                       dirty pair) on the current engine.
-  * ``block``       — the block-diagonal round solver (one glued flow pass
-                      per round).
-  * ``pr1``         — PR 1 as shipped (commit 5827408), i.e. WITHOUT this
-                      PR's sorted-CSR datagraph / canonical-by-construction
-                      assembly: measured with the same driver + methodology
-                      on the same box and recorded as reference constants
-                      below (the old code is not importable from this tree).
+  * ``block``       — the block-diagonal round solver (glued flow passes,
+                      member-budget grouping, persistency peel).
+  * ``auto``        — the shipping default: scale-dependent solver choice
+                      plus the 'auto' AssemblyCache policy.
+  * ``cached``      — the block solver with the AssemblyCache forced on.
+  * ``pr1``/``pr2`` — earlier PRs as shipped (commits 5827408 / 3c2dd42),
+                      measured with the same driver + methodology and
+                      recorded as reference constants below (the old code
+                      is not importable from this tree).
+
+Section 3 (``convergence_cells``) — per-round wall clock of full
+convergence runs (repeated passes until none accepts): the steady-state
+mix of assembly, churny mid-game solves and clean-skip tails, with final
+costs checked against the recorded PR-2 trajectories.
 
 Full-run cost parity (sequential vs batched-pairwise vs batched-block,
 exhaustive R) is recorded for n <= 20k; the 50k full runs are skipped by
@@ -184,11 +191,12 @@ def seed_glad_s(cm, R=None, seed=0, max_iterations=100_000):
 
 
 # --------------------------------------------------------------------------
-# PR 1 (commit 5827408) per-round reference, measured 2026-07-29 with the
-# same first-pass/fresh-engine/interleaved-best-of-5 driver on the same box
-# as the current numbers.  PR 1 predates the sorted-CSR datagraph and the
-# canonical-by-construction flow assembly, so its per-pair sweep pays a
-# lexsort per cut solve on top of the per-pair scipy fixed costs.
+# PR 1 (commit 5827408) per-round reference, measured with the same
+# first-pass/fresh-engine/interleaved-best-of-reps driver on the PR-2 box.
+# PR 1 predates the sorted-CSR datagraph and the canonical-by-construction
+# flow assembly, so its per-pair sweep pays a lexsort per cut solve on top
+# of the per-pair scipy fixed costs.  LEGACY: measured on the PR-2 box, not
+# directly comparable to the PR-3 constants below.
 PR1_PER_ROUND_MS = {
     (5000, 16): 20.72,
     (5000, 32): 16.49,
@@ -198,9 +206,115 @@ PR1_PER_ROUND_MS = {
     (50000, 32): 145.78,
 }
 
+# PR 2 (commit 3c2dd42) block-solver reference, measured 2026-07-29 on the
+# PR-3 box by running the PR-2 tree from a git worktree with the same
+# drivers used for the current numbers, reps alternated between the two
+# trees so shared-box noise hits both alike (per-tree MIN over 3 reps):
+#   * first-pass per-round — one full round-robin pass from the fixed
+#     random init, fresh engine per rep;
+#   * convergence per-round — repeated full passes until a pass accepts
+#     nothing, total wall / rounds executed (the steady-state mix of dirty
+#     solves and clean skips).
+PR2_PER_ROUND_MS = {
+    (5000, 16): 11.29,
+    (5000, 32): 10.42,
+    (20000, 16): 37.28,
+    (20000, 32): 28.87,
+    (50000, 16): 93.44,
+    (50000, 32): 77.05,
+}
+PR2_CONV_PER_ROUND_MS = {
+    (5000, 16): 6.59,
+    (5000, 32): 5.72,
+    (20000, 16): 31.24,
+    (20000, 32): 26.92,
+    (50000, 16): 62.07,
+    (50000, 32): 103.93,
+}
+# Final costs of the PR-2 convergence runs above — the current engine must
+# reproduce them exactly (cache on or off), so every conv cell doubles as a
+# cross-PR trajectory-parity check.
+PR2_CONV_COST = {
+    (5000, 16): 1938.91304508,
+    (5000, 32): 1965.0499305,
+    (20000, 16): 6995.80104532,
+    (20000, 32): 7379.30227955,
+    (50000, 16): 19053.5295312,
+    (50000, 32): 17019.6993675,
+}
+
+
+# Self-contained driver for measuring a REFERENCE git tree (e.g. a PR-2
+# worktree) with the exact same methodology, launched as a subprocess right
+# next to the local measurements so shared-box noise hits both in the same
+# window — cross-window ratios against vendored constants are ±30% noise.
+_REF_DRIVER = r"""
+import sys, time
+import numpy as np
+tree, mode, n, m, reps = (sys.argv[1], sys.argv[2], int(sys.argv[3]),
+                          int(sys.argv[4]), int(sys.argv[5]))
+sys.path.insert(0, tree + "/src")
+from repro.core.cost import CostModel, workload_for
+from repro.core.engine import PairCutEngine, round_robin_rounds
+from repro.graphs.datagraph import synthetic_siot
+from repro.graphs.edgenet import build_edge_network
+g = synthetic_siot(n=n, target_links=int(n * 4.2), seed=0)
+net = build_edge_network(g, m, seed=0)
+cm = CostModel(net, g, workload_for("gcn", 52))
+cm.unary
+rng = np.random.default_rng(0)
+init = rng.integers(0, m, size=n).astype(np.int64)
+connected = {(int(i), int(j)) for i, j in net.pairs}
+rounds = [[p for p in rnd if p in connected]
+          for rnd in round_robin_rounds(m)]
+rounds = [r for r in rounds if r]
+def first_run():
+    eng = PairCutEngine(cm, init)
+    t0 = time.perf_counter()
+    for rnd in rounds:
+        eng.sweep_round(rnd)
+    return time.perf_counter() - t0, len(rounds), eng.state.total
+def conv_run():
+    eng = PairCutEngine(cm, init)
+    t0 = time.perf_counter()
+    nr = 0
+    while True:
+        acc = 0
+        for rnd in rounds:
+            nr += 1
+            acc += sum(1 for _, ok in eng.sweep_round(rnd) if ok)
+        if acc == 0:
+            break
+    return time.perf_counter() - t0, nr, eng.state.total
+run = first_run if mode == "first" else conv_run
+run()
+best = float("inf")
+nr = cost = None
+for _ in range(reps):
+    dt, nr, cost = run()
+    best = min(best, dt)
+print(best / nr * 1000, cost)
+"""
+
+
+def _measure_ref_tree(tree: str, mode: str, n: int, m: int, reps: int):
+    """Per-round ms + final cost of the reference tree for one cell, or
+    None if the subprocess fails (missing worktree, import drift)."""
+    import subprocess
+    try:
+        res = subprocess.run(
+            [sys.executable, "-c", _REF_DRIVER, tree, mode,
+             str(n), str(m), str(reps)],
+            capture_output=True, text=True, timeout=1800, check=True)
+        ms, cost = res.stdout.split()
+        return float(ms), float(cost)
+    except Exception as exc:                    # pragma: no cover
+        print(f"  (reference tree measurement failed: {exc})")
+        return None
+
 
 def run_round_cell(n: int, m: int, seed: int = 0, reps: int = 3,
-                   full_runs: bool = True, R=None):
+                   full_runs: bool = True, R=None, ref_tree=None):
     """Per-round wall clock of pairwise vs block round solving.
 
     One full pass over the round-robin schedule from a fixed random init,
@@ -221,38 +335,60 @@ def run_round_cell(n: int, m: int, seed: int = 0, reps: int = 3,
               for rnd in round_robin_rounds(m)]
     rounds = [r for r in rounds if r]
 
-    def first_pass(solver):
-        eng = PairCutEngine(cm, init)
+    def first_pass(solver, **engine_kw):
+        eng = PairCutEngine(cm, init, **engine_kw)
         t0 = time.perf_counter()
         for rnd in rounds:
             eng.sweep_round(rnd, solver=solver)
         return time.perf_counter() - t0, eng.state.total
 
-    solvers = ("pairwise", "block")
-    for s in solvers:                                   # warmup
-        first_pass(s)
-    best = {s: float("inf") for s in solvers}
+    # 'auto' is the shipping default (scale-dependent solver + auto cache);
+    # 'cached' forces the AssemblyCache on the block path.
+    configs = {
+        "pairwise": ("pairwise", {}),
+        "block": ("block", {}),
+        "auto": ("auto", {}),
+        "cached": ("block", {"cache": True}),
+    }
+    for s, kw in configs.values():                      # warmup
+        first_pass(s, **kw)
+    best = {name: float("inf") for name in configs}
     pass_cost = {}
     for _ in range(max(1, reps)):
-        for s in solvers:
-            dt, c = first_pass(s)
-            best[s] = min(best[s], dt)
-            pass_cost[s] = c
+        for name, (s, kw) in configs.items():
+            dt, c = first_pass(s, **kw)
+            best[name] = min(best[name], dt)
+            pass_cost[name] = c
 
-    per_round = {s: best[s] / len(rounds) * 1000 for s in solvers}
+    per_round = {name: best[name] / len(rounds) * 1000 for name in configs}
     pr1_ms = PR1_PER_ROUND_MS.get((n, m))
+    pr2_ms = PR2_PER_ROUND_MS.get((n, m))
+    pr2_src = "vendored (cross-window: +-30% box noise)"
+    if ref_tree:
+        ref = _measure_ref_tree(ref_tree, "first", n, m, reps)
+        if ref is not None:
+            pr2_ms = round(ref[0], 2)
+            pr2_src = "same-window subprocess"
+    costs = list(pass_cost.values())
     cell = {
         "n": n, "m": m, "rounds_per_pass": len(rounds),
         "pairwise_per_round_ms": round(per_round["pairwise"], 2),
         "block_per_round_ms": round(per_round["block"], 2),
+        "auto_per_round_ms": round(per_round["auto"], 2),
+        "cached_per_round_ms": round(per_round["cached"], 2),
         "pr1_per_round_ms": pr1_ms,
+        "pr2_per_round_ms": pr2_ms,
+        "pr2_reference": pr2_src,
         "round_speedup_vs_pr1": (
             round(pr1_ms / per_round["block"], 2) if pr1_ms else None),
+        "round_speedup_vs_pr2": (
+            round(pr2_ms / per_round["auto"], 2) if pr2_ms else None),
+        "cached_speedup_vs_pr2": (
+            round(pr2_ms / per_round["cached"], 2) if pr2_ms else None),
         "round_speedup_vs_pairwise": round(
-            per_round["pairwise"] / per_round["block"], 2),
-        "first_pass_rel_cost_err": abs(
-            pass_cost["block"] - pass_cost["pairwise"]
-        ) / max(abs(pass_cost["pairwise"]), 1e-12),
+            per_round["pairwise"] / per_round["auto"], 2),
+        "first_pass_rel_cost_err": (
+            max(costs) - min(costs)) / max(abs(costs[0]), 1e-12),
     }
 
     if full_runs:
@@ -285,6 +421,80 @@ def run_round_cell(n: int, m: int, seed: int = 0, reps: int = 3,
     else:
         cell["full_runs"] = "skipped (n too large for the default budget)"
     return cell
+
+
+def run_conv_cell(n: int, m: int, seed: int = 0, reps: int = 2,
+                  ref_tree=None):
+    """Convergence-run per-round wall clock: repeated full round-robin
+    passes until a pass accepts nothing (the steady-state mix of first-pass
+    assembly, mid-run churn and clean-skip tails), fresh engine per rep.
+    Compares the shipping defaults and the forced-cache configuration
+    against the PR-2 block solver measured with the identical driver, and
+    checks the final cost against the recorded PR-2 trajectory."""
+    from repro.core.engine import PairCutEngine, round_robin_rounds
+
+    target_links = int(n * 4.2)
+    g = synthetic_siot(n=n, target_links=target_links, seed=seed)
+    net = build_edge_network(g, m, seed=seed)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+    rng = np.random.default_rng(seed)
+    init = rng.integers(0, m, size=n).astype(np.int64)
+    connected = {(int(i), int(j)) for i, j in net.pairs}
+    rounds = [[p for p in rnd if p in connected]
+              for rnd in round_robin_rounds(m)]
+    rounds = [r for r in rounds if r]
+
+    def converge(**engine_kw):
+        eng = PairCutEngine(cm, init, **engine_kw)
+        t0 = time.perf_counter()
+        nr = 0
+        while True:
+            accepts = 0
+            for rnd in rounds:
+                nr += 1
+                accepts += sum(
+                    1 for _, ok in eng.sweep_round(rnd) if ok)
+            if accepts == 0:
+                break
+        return time.perf_counter() - t0, nr, eng.state.total
+
+    configs = {"default": {}, "cached": {"cache": True}}
+    for kw in configs.values():                         # warmup
+        converge(**kw)
+    best = {name: float("inf") for name in configs}
+    info = {}
+    for _ in range(max(1, reps)):
+        for name, kw in configs.items():
+            dt, nr, c = converge(**kw)
+            best[name] = min(best[name], dt)
+            info[name] = (nr, c)
+    pr2_ms = PR2_CONV_PER_ROUND_MS.get((n, m))
+    pr2_cost = PR2_CONV_COST.get((n, m))
+    pr2_src = "vendored (cross-window: +-30% box noise)"
+    if ref_tree:
+        ref = _measure_ref_tree(ref_tree, "conv", n, m, reps)
+        if ref is not None:
+            pr2_ms = round(ref[0], 2)
+            pr2_cost = ref[1]
+            pr2_src = "same-window subprocess"
+    per_round = {name: best[name] / info[name][0] * 1000
+                 for name in configs}
+    cost = info["default"][1]
+    return {
+        "n": n, "m": m, "rounds_to_converge": info["default"][0],
+        "pr2_reference": pr2_src,
+        "default_per_round_ms": round(per_round["default"], 2),
+        "cached_per_round_ms": round(per_round["cached"], 2),
+        "pr2_per_round_ms": pr2_ms,
+        "conv_speedup_vs_pr2": (
+            round(pr2_ms / per_round["default"], 2) if pr2_ms else None),
+        "final_cost": cost,
+        "cached_rel_cost_err": abs(info["cached"][1] - cost)
+        / max(abs(cost), 1e-12),
+        "rel_cost_err_vs_pr2": (
+            abs(cost - pr2_cost) / max(abs(pr2_cost), 1e-12)
+            if pr2_cost else None),
+    }
 
 
 def run_cell(n: int, m: int, seed: int = 0, R=None, reps: int = 3):
@@ -349,6 +559,29 @@ def run_cell(n: int, m: int, seed: int = 0, R=None, reps: int = 3):
     }
 
 
+def _verify_cost_parity(out: dict, tol: float = 1e-9):
+    """Every cell's engine paths must agree on the final cost.  Returns a
+    list of human-readable violations (empty = pass)."""
+    bad = []
+    for cell in out.get("cells", []):
+        for key in ("rel_cost_err_incremental", "rel_cost_err_batched"):
+            if cell.get(key, 0.0) > tol:
+                bad.append(f"cells n={cell['n']} m={cell['m']}: "
+                           f"{key}={cell[key]:.3e} > {tol:g}")
+    for cell in out.get("round_solver_cells", []):
+        for key in ("first_pass_rel_cost_err",
+                    "rel_cost_err_block_vs_pairwise"):
+            if cell.get(key, 0.0) > tol:
+                bad.append(f"round n={cell['n']} m={cell['m']}: "
+                           f"{key}={cell[key]:.3e} > {tol:g}")
+    for cell in out.get("convergence_cells", []):
+        for key in ("cached_rel_cost_err", "rel_cost_err_vs_pr2"):
+            if (cell.get(key) or 0.0) > tol:
+                bad.append(f"conv n={cell['n']} m={cell['m']}: "
+                           f"{key}={cell[key]:.3e} > {tol:g}")
+    return bad
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -357,6 +590,14 @@ def main(argv=None):
                     help="repetitions per path; min wall time is reported")
     ap.add_argument("--skip-seed-cells", action="store_true",
                     help="only the round-solver section (fast iteration)")
+    ap.add_argument("--fail-on-mismatch", action="store_true",
+                    help="exit nonzero if any cell's engine paths disagree "
+                         "on the final cost (the CI smoke gate)")
+    ap.add_argument("--pr2-tree", default=None,
+                    help="path to a checkout/worktree of commit 3c2dd42: "
+                         "re-measures the PR-2 reference per cell in the "
+                         "same noise window instead of using the vendored "
+                         "constants")
     ap.add_argument("--out", default="BENCH_layout.json")
     args = ap.parse_args(argv)
 
@@ -383,14 +624,31 @@ def main(argv=None):
         if not full:
             print(f"n={n:>6} m={m:>2}: skipping full-convergence runs "
                   f"(per-round first-pass measurement only)")
-        cell = run_round_cell(n, m, reps=args.reps, full_runs=full)
+        cell = run_round_cell(n, m, reps=args.reps, full_runs=full,
+                              ref_tree=args.pr2_tree)
         round_cells.append(cell)
         print(f"n={n:>6} m={m:>2}: per-round pairwise "
               f"{cell['pairwise_per_round_ms']}ms block "
-              f"{cell['block_per_round_ms']}ms pr1 "
-              f"{cell['pr1_per_round_ms']}ms -> block vs pr1 "
-              f"{cell['round_speedup_vs_pr1']}x, vs pairwise "
+              f"{cell['block_per_round_ms']}ms auto "
+              f"{cell['auto_per_round_ms']}ms cached "
+              f"{cell['cached_per_round_ms']}ms pr2 "
+              f"{cell['pr2_per_round_ms']}ms -> auto vs pr2 "
+              f"{cell['round_speedup_vs_pr2']}x, vs pairwise "
               f"{cell['round_speedup_vs_pairwise']}x")
+
+    conv_cells = []
+    if not args.quick:
+        for n, m in round_grid:
+            cell = run_conv_cell(n, m, reps=min(args.reps, 2),
+                                 ref_tree=args.pr2_tree)
+            conv_cells.append(cell)
+            print(f"n={n:>6} m={m:>2}: convergence per-round default "
+                  f"{cell['default_per_round_ms']}ms cached "
+                  f"{cell['cached_per_round_ms']}ms pr2 "
+                  f"{cell['pr2_per_round_ms']}ms -> vs pr2 "
+                  f"{cell['conv_speedup_vs_pr2']}x "
+                  f"(cost parity vs pr2: "
+                  f"{cell['rel_cost_err_vs_pr2']:.1e})")
 
     out = {
         "benchmark": "layout_engine",
@@ -399,24 +657,92 @@ def main(argv=None):
         "R": "exhaustive |D|(|D|-1)/2",
         "methodology": "interleaved best-of-reps; round cells time one "
                        "full round-robin pass from a fixed random init "
-                       "with a fresh engine per rep; pr1 reference "
-                       "measured at commit 5827408 with the same driver",
-        "pr1_reference_warning": "pr1_per_round_ms / round_speedup_vs_pr1 "
-                                 "use vendored same-box constants "
-                                 "(PR1_PER_ROUND_MS); rerunning on "
-                                 "different hardware makes those ratios "
-                                 "cross-machine — re-measure PR 1 at "
-                                 "commit 5827408 before citing them",
+                       "with a fresh engine per rep; convergence cells "
+                       "repeat passes until none accepts; pr2 reference "
+                       "measured at commit 3c2dd42 on THIS box with the "
+                       "same drivers (reps alternated between trees), "
+                       "pr1 at commit 5827408 on the PR-2 box",
+        "reference_warning": "pr1/pr2 per-round constants are vendored "
+                             "same-box measurements (PR1_PER_ROUND_MS / "
+                             "PR2_PER_ROUND_MS / PR2_CONV_PER_ROUND_MS); "
+                             "rerunning on different hardware makes those "
+                             "ratios cross-machine — re-measure the "
+                             "reference commits before citing them",
         "cells": cells,
         "round_solver_cells": round_cells,
+        "convergence_cells": conv_cells,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+
+    if args.fail_on_mismatch:
+        bad = _verify_cost_parity(out)
+        if bad:
+            print("COST PARITY FAILURES:")
+            for b in bad:
+                print("  " + b)
+            return 1
+        print("cost parity: all engine paths agree")
     return 0
 
 
-def run(full: bool = False, smoke: bool = False) -> None:
+def check_parity(ref_path: str = "BENCH_layout.json",
+                 rtol: float = 1e-12) -> int:
+    """Re-run the quick grid and compare every final cost against the
+    committed ``BENCH_layout.json`` — nonzero exit on divergence, so CI
+    catches silent cost regressions, not just crashes.
+
+    The grid is deterministic (fixed seeds, exhaustive R), so on the same
+    software stack the costs must match to float precision; ``rtol`` leaves
+    headroom for BLAS-level reduction-order differences across machines."""
+    import tempfile
+
+    with open(ref_path) as f:
+        ref = json.load(f)
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+        tmp_path = tmp.name
+    main(["--quick", "--reps", "1", "--out", tmp_path])
+    with open(tmp_path) as f:
+        got = json.load(f)
+    import os
+    os.unlink(tmp_path)
+
+    def index(doc, section, keys):
+        return {(c["n"], c["m"]): {k: c[k] for k in keys if k in c}
+                for c in doc.get(section, [])}
+
+    checks = [
+        ("cells", ("seed_cost", "incremental_cost", "batched_cost")),
+        ("round_solver_cells",
+         ("sequential_cost", "batched_pairwise_cost", "batched_block_cost")),
+    ]
+    bad = []
+    for section, keys in checks:
+        ref_idx = index(ref, section, keys)
+        for cell_key, vals in index(got, section, keys).items():
+            if cell_key not in ref_idx:
+                continue                    # quick grid ⊂ committed grid
+            for k, v in vals.items():
+                r = ref_idx[cell_key].get(k)
+                if r is None:
+                    continue
+                err = abs(v - r) / max(abs(r), 1e-12)
+                if err > rtol:
+                    bad.append(f"{section} n={cell_key[0]} m={cell_key[1]} "
+                               f"{k}: {v!r} vs committed {r!r} "
+                               f"(rel {err:.3e} > {rtol:g})")
+    if bad:
+        print("PARITY CHECK FAILED against", ref_path)
+        for b in bad:
+            print("  " + b)
+        return 1
+    print(f"parity check OK: quick-grid costs match {ref_path} "
+          f"within {rtol:g}")
+    return 0
+
+
+def run(full: bool = False, smoke: bool = False) -> int:
     """benchmarks.run entry point.
 
     The committed full-grid BENCH_layout.json is only (re)written by a
@@ -427,10 +753,11 @@ def run(full: bool = False, smoke: bool = False) -> None:
     if smoke or not full:
         argv.append("--quick")
     if smoke:
-        argv += ["--reps", "1", "--out", "BENCH_layout.smoke.json"]
+        argv += ["--reps", "1", "--out", "BENCH_layout.smoke.json",
+                 "--fail-on-mismatch"]
     elif not full:
         argv += ["--out", "BENCH_layout.quick.json"]
-    main(argv)
+    return main(argv)
 
 
 if __name__ == "__main__":

@@ -2,9 +2,8 @@
 insertion percentages (SIoT and Yelp).  GLAD-E should be ~an order cheaper."""
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import cost_model, dataset, emit, fleet, timed
+from benchmarks.common import dataset, emit, fleet, timed
 from repro.core import CostModel, workload_for
 from repro.core.evolution import sample_delta, apply_delta
 from repro.core.glad_e import glad_e

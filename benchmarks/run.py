@@ -1,14 +1,21 @@
 """Benchmark driver: one section per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
+                                          [--check-parity]
 
 ``--smoke`` runs a single CI-sized sanity pass (the layout-engine benchmark
 at quick sizes, one repetition, written to BENCH_layout.smoke.json) so the
-harness can be exercised cheaply without touching the committed numbers.
+harness can be exercised cheaply without touching the committed numbers;
+it exits nonzero if the engine paths disagree on any final cost.
+
+``--check-parity`` re-runs the quick grid and exits nonzero if any cell's
+final cost diverges from the committed BENCH_layout.json beyond 1e-12
+relative — the CI gate against silent cost regressions.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 from benchmarks import (adaptability, convergence, cost_comparison,
@@ -35,14 +42,19 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized sanity pass (layout_engine quick, 1 rep, "
-                         "separate output file)")
+                         "separate output file; fails on cost mismatch)")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="re-run the quick grid and fail if any final cost "
+                         "diverges from the committed BENCH_layout.json")
     args = ap.parse_args()
+    if args.check_parity:
+        sys.exit(layout_engine.check_parity())
     if args.smoke:
         print("\n===== smoke: layout_engine (quick, 1 rep) =====")
         t0 = time.perf_counter()
-        layout_engine.run(smoke=True)
+        rc = layout_engine.run(smoke=True)
         print(f"# smoke wall time: {time.perf_counter() - t0:.1f}s")
-        return
+        sys.exit(rc or 0)
     for name, fn in SECTIONS:
         if args.only and args.only not in name:
             continue

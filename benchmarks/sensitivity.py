@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import cost_model, dataset, emit, fleet
-from repro.core import CostModel, workload_for
+from repro.core import workload_for
 from repro.core.evolution import apply_delta, evolution_trace
 from repro.core.glad_a import GladA
 from repro.core.glad_s import glad_s

@@ -5,9 +5,8 @@ between incremental (GLAD-E) and global (GLAD-S) re-layout under an SLA.
 """
 import argparse
 
-import numpy as np
 
-from repro.core import CostModel, GladA, workload_for
+from repro.core import GladA, workload_for
 from repro.core.evolution import apply_delta, evolution_trace
 from repro.graphs import build_edge_network, synthetic_yelp
 

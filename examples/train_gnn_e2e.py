@@ -9,11 +9,10 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import CostModel, data_partition, workload_for
+from repro.core import data_partition, workload_for
 from repro.gnn import GNNConfig, directed_edges, init_params
-from repro.gnn.training import accuracy, fit, train_step
+from repro.gnn.training import accuracy, train_step
 from repro.graphs import build_edge_network, synthetic_siot
 from repro.runtime import ElasticCoordinator, FailureDetector
 from repro.train import CheckpointManager
@@ -56,7 +55,7 @@ def main(steps: int = 300):
         fd.heartbeat(d, now=float(half + 6))
     dead = fd.sweep(now=float(half + 6))
     print(f"failure detected on servers {dead}")
-    newp = coord.on_failure(dead)
+    coord.on_failure(dead)
     ev = coord.events[-1]
     print(f"elastic re-layout: migrated={ev.migrated} vertices, "
           f"cost {ev.old_cost:.1f} -> {ev.new_cost:.1f}, "

@@ -96,9 +96,15 @@ class CostModel:
                 new_mu = d * (net.mu.mean() / max(d.mean(), 1e-9))
             else:
                 new_mu = np.tile(net.mu.mean(0, keepdims=True), (extra, 1))
-            net = dataclasses.replace(
-                net, mu=np.concatenate([net.mu, new_mu], axis=0))
-        self.net = net
+            mu = np.concatenate([net.mu, new_mu], axis=0)
+        else:
+            # Own a copy regardless: the layout engine's caches (LayoutState
+            # unary picks, AssemblyCache theta vectors) embed mu-derived
+            # values, so a caller mutating its mu array after construction
+            # must not be able to desynchronize them.
+            mu = np.array(net.mu, dtype=np.float64)
+        mu.setflags(write=False)
+        self.net = dataclasses.replace(net, mu=mu)
         self.graph = graph
         self.gnn = gnn
         self._unary = None
@@ -117,9 +123,12 @@ class CostModel:
 
     @property
     def unary(self) -> np.ndarray:
-        """C1 coefficients (Thm 2): unary[v,i] = mu + C_P(v,i) + rho_i."""
+        """C1 coefficients (Thm 2): unary[v,i] = mu + C_P(v,i) + rho_i.
+        Frozen: every cached delta in the engine is derived from it, so
+        in-place edits would silently corrupt them — copy to modify."""
         if self._unary is None:
             self._unary = self.net.mu + self.cp_matrix + self.net.rho[None, :]
+            self._unary.setflags(write=False)
         return self._unary
 
     @property

@@ -8,7 +8,7 @@ vertex insertions/deletions.  Changes are restricted to a small extent [75].
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

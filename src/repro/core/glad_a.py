@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.cost import CostModel, GNNWorkload
 from repro.core.glad_e import glad_e, seed_new_vertices
-from repro.core.glad_s import GladResult, glad_s
+from repro.core.glad_s import glad_s
 from repro.graphs.datagraph import DataGraph
 from repro.graphs.edgenet import EdgeNetwork
 

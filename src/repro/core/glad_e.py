@@ -43,6 +43,9 @@ def glad_e(
     seed: int = 0,
     backend: str = "auto",
     sweep: str = "batched",
+    workers: int = 0,
+    cache: "bool | str" = "auto",
+    chunk_nodes: "int | str" = "auto",
 ) -> GladResult:
     """Args:
       cm_new: cost model bound to the *evolved* graph G(t).
@@ -50,6 +53,8 @@ def glad_e(
       sweep: GLAD-S sweep discipline — incremental relayout defaults to the
         batched disjoint-pair rounds (block-diagonal round solver), since
         the changed-vertex filter wants wall time, not the Alg.-1 order.
+      workers / cache / chunk_nodes: engine knobs, passed through to
+        :func:`glad_s` (assembly caching + chunked/parallel block solves).
     """
     new_graph = cm_new.graph
     active = changed_vertices(old_graph, new_graph, assign_old)
@@ -72,5 +77,5 @@ def glad_e(
         R = max(3, cm_new.net.m)
     return glad_s(
         cm_new, R=R, init=assign, active=active, seed=seed, backend=backend,
-        sweep=sweep,
+        sweep=sweep, workers=workers, cache=cache, chunk_nodes=chunk_nodes,
     )

@@ -133,8 +133,10 @@ def solve_pair(
     if internal.any():
         tij = float(net.tau[i, j])
         for a, b, w in zip(eu[internal], ev[internal], weights[internal]):
-            us.append(aux_id[int(a)]); vs.append(aux_id[int(b)])
-            caps_uv.append(tij * w); caps_vu.append(tij * w)
+            us.append(aux_id[int(a)])
+            vs.append(aux_id[int(b)])
+            caps_uv.append(tij * w)
+            caps_vu.append(tij * w)
     _, side = min_st_cut(
         n_aux, S, T, np.array(us), np.array(vs),
         np.array(caps_uv), np.array(caps_vu), backend=backend,
@@ -172,6 +174,9 @@ def glad_s(
     round_solver: str = "auto",
     workers: int = 0,
     worker_mode: str = "thread",
+    cache: "bool | str" = "auto",
+    cache_bytes: int = 256 << 20,
+    chunk_nodes: "int | str" = "auto",
 ) -> GladResult:
     """Paper Algorithm 1.
 
@@ -188,8 +193,21 @@ def glad_s(
         transcription — oracle/benchmark baseline).
       round_solver: batched-sweep round solver — 'auto'/'block' (one
         block-diagonal flow per round) or 'pairwise' (PR-1 per-pair solves).
-      workers: pure-python-backend only — fan a round's blocks out over
-        this many threads/processes ('worker_mode') when scipy is absent.
+      workers: fan a round's block/chunk solves out over this many
+        threads/processes ('worker_mode'); scipy holds the GIL, so thread
+        mode mainly helps the pure-python fallback — measure first.
+      cache: cross-round AssemblyCache — persist each pair's assembled
+        t-link vectors / arc lists / core classification and patch theta
+        or membership deltas in O(touched) between visits.  'auto' enables
+        it exactly when an ``active`` mask is present (incremental
+        GLAD-E-style relayouts, where touched sets stay small); cold full
+        sweeps — warm-started ones without a mask included — churn pair
+        memberships too fast for per-pair reuse to beat the fused batch
+        assembly, so they only cache when explicitly asked (cache=True).
+        Trajectories are bit-identical with the cache on or off.
+      cache_bytes: LRU budget for the AssemblyCache.
+      chunk_nodes: bound on one glued block-diagonal flow union ('auto' =
+        engine default; 0 = single glued pass per round).
     """
     rng = np.random.default_rng(seed)
     net, graph = cm.net, cm.graph
@@ -210,7 +228,9 @@ def glad_s(
         raise ValueError(f"unknown engine {engine!r}")
 
     eng = PairCutEngine(cm, assign, active=active, backend=backend,
-                        workers=workers, worker_mode=worker_mode)
+                        workers=workers, worker_mode=worker_mode,
+                        cache=cache, cache_bytes=cache_bytes,
+                        chunk_nodes=chunk_nodes)
     history = [eng.state.total]
     if sweep == "single":
         iters, accepted = _sweep_single(

@@ -106,8 +106,12 @@ class Dinic:
         self.head: list[list[int]] = [[] for _ in range(n)]
 
     def add_edge(self, u: int, v: int, cap_uv: float, cap_vu: float = 0.0):
-        self.head[u].append(len(self.to)); self.to.append(v); self.cap.append(cap_uv)
-        self.head[v].append(len(self.to)); self.to.append(u); self.cap.append(cap_vu)
+        self.head[u].append(len(self.to))
+        self.to.append(v)
+        self.cap.append(cap_uv)
+        self.head[v].append(len(self.to))
+        self.to.append(u)
+        self.cap.append(cap_vu)
 
     def _bfs(self, s: int, t: int) -> bool:
         self.level = [-1] * self.n
@@ -203,6 +207,7 @@ def min_st_cut_csr(
     indptr: np.ndarray,
     indices: np.ndarray,
     caps: np.ndarray,
+    prescaled: bool = False,
 ) -> Tuple[float, np.ndarray]:
     """Min s-t cut on a caller-built CSR capacity structure (scipy backend).
 
@@ -217,13 +222,18 @@ def min_st_cut_csr(
 
     ``caps`` is float64; capacities are scaled to int32 with relative
     resolution 1/_SCALE exactly like the generic path.  ``caps`` is
-    clobbered (scaled in place) — pass a scratch array.
+    clobbered (scaled in place) — pass a scratch array.  With
+    ``prescaled=True`` the caps already hold exact integer values (the
+    persistency-peel path quantizes before reducing) and are used verbatim.
     """
-    cmax = float(caps.max()) if len(caps) else 1.0
-    scale = _SCALE / max(cmax, 1e-30)
-    np.multiply(caps, scale, out=caps)
-    np.rint(caps, out=caps)
-    np.maximum(caps, 0, out=caps)
+    if prescaled:
+        scale = 1.0
+    else:
+        cmax = float(caps.max()) if len(caps) else 1.0
+        scale = _SCALE / max(cmax, 1e-30)
+        np.multiply(caps, scale, out=caps)
+        np.rint(caps, out=caps)
+        np.maximum(caps, 0, out=caps)
     data = caps.astype(np.int32)
     try:
         # The engine guarantees well-formed arrays; skip csr validation
@@ -351,6 +361,111 @@ def concat_flow_blocks(blocks: Sequence[tuple]):
     )
 
 
+def peel_forced(
+    k: int,
+    int_a: np.ndarray,
+    int_b: np.ndarray,
+    w_int: np.ndarray,
+    th_i: np.ndarray,
+    th_j: np.ndarray,
+    max_rounds: int = 100_000,
+):
+    """Persistency reduction of a (quantized) auxiliary cut problem.
+
+    A node whose t-link gap strictly exceeds the total capacity of its live
+    internal arcs takes its cheaper side in EVERY min cut (flipping it to
+    the expensive side changes any cut by ``gap - capsum > 0``), so it can
+    be settled before the flow solve and its arcs absorbed into the
+    neighbors' t-links (an arc to a node fixed on the source side is paid
+    exactly when the neighbor lands on the sink side, and vice versa) —
+    the same argument iterated until a fixed point.  This is the
+    singleton reduction's generalization (``capsum = 0``) and the standard
+    roof-duality/QPBO persistency for s-t cuts; on GLAD auxiliary graphs
+    (t-links carry unary + boundary mass, n-links only tau_ij) it retires
+    the large majority of the connected core, which is what keeps the
+    scipy input — and its O(nnz) per-call conversions — small.
+
+    All arithmetic is integer (int64 via exact float64 bincounts), applied
+    AFTER the 1/_SCALE quantization, so the surviving problem's min cuts
+    are exactly the full quantized problem's min cuts restricted to the
+    survivors; the minimal source side (what the residual BFS returns) is
+    the reduced one union the nodes forced to the source.  Stopping early
+    (``max_rounds``) only peels less — every prefix of the cascade is
+    exact, because each forcing step's justification is invariant under
+    the later ones (monotone closure: absorbing mass only ever grows
+    t-link gaps relative to live capacity).  Mutates ``th_i/th_j`` in
+    place.  ``int_a`` must be sorted (arcs row-grouped by tail — the
+    canonical presorted order the callers already guarantee).
+
+    Returns ``(alive, src)``: the survivor mask and the forced-to-source
+    mask (disjoint; forced-to-sink is ``~alive & ~src``).
+    """
+    from repro.graphs.datagraph import csr_multirange
+
+    alive = np.ones(k, dtype=bool)
+    src = np.zeros(k, dtype=bool)
+    # Arcs arrive row-grouped by tail (the canonical presorted order), so a
+    # bincount + cumsum gives per-node arc slices; capsum is maintained
+    # incrementally — the whole peel is O(k + arcs) total, frontier rounds
+    # only touch the neighbors of freshly forced nodes.
+    counts = np.bincount(int_a, minlength=k)
+    aptr = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(counts, out=aptr[1:])
+    capsum = np.bincount(int_a, weights=w_int, minlength=k).astype(np.int64)
+    gap = th_j - th_i
+    f_src = gap > capsum
+    f_snk = -gap > capsum
+    forced = np.flatnonzero(f_src | f_snk)
+    src[forced] = f_src[forced]
+    for _ in range(max_rounds):
+        if len(forced) == 0:
+            break
+        alive[forced] = False
+        # Absorb each dying node's arcs into its still-live neighbors: the
+        # arc is cut exactly when the neighbor lands opposite the fixed
+        # side.  Each undirected link has both directed copies, but only
+        # the copy whose tail is the forced node is gathered here (the
+        # reverse copy's tail is live), so it counts once.
+        flat, _ = csr_multirange(aptr, forced)
+        if len(flat) == 0:
+            break
+        head = int_b[flat]
+        live = alive[head]
+        if not live.any():
+            break
+        head = head[live]
+        w = w_int[flat[live]]
+        tail_src = src[int_a[flat[live]]]
+        np.add.at(th_j, head[tail_src], w[tail_src])
+        np.add.at(th_i, head[~tail_src], w[~tail_src])
+        np.subtract.at(capsum, head, w)
+        cand = np.unique(head)
+        gap = th_j[cand] - th_i[cand]
+        cs = capsum[cand]
+        newly_src = gap > cs
+        newly = newly_src | (-gap > cs)
+        forced = cand[newly]
+        src[forced] = newly_src[newly]
+    return alive, src
+
+
+def _chunk_block_spans(block_ptr: np.ndarray, chunk_nodes: int):
+    """Greedily group consecutive blocks into chunks of <= ``chunk_nodes``
+    nodes (a single block larger than the budget gets its own chunk).
+    Returns a list of (block_lo, block_hi) index pairs into ``block_ptr``."""
+    spans = []
+    nb = len(block_ptr) - 1
+    lo = 0
+    while lo < nb:
+        hi = lo + 1
+        while (hi < nb
+               and block_ptr[hi + 1] - block_ptr[lo] <= chunk_nodes):
+            hi += 1
+        spans.append((lo, hi))
+        lo = hi
+    return spans
+
+
 def min_st_cut_csr_blocks(
     block_ptr: np.ndarray,
     int_a: np.ndarray,
@@ -363,6 +478,7 @@ def min_st_cut_csr_blocks(
     workers: int = 0,
     worker_mode: str = "thread",
     presorted: bool = False,
+    chunk_nodes: int = 0,
 ) -> np.ndarray:
     """Solve all blocks of a block-diagonal auxiliary flow problem at once.
 
@@ -375,6 +491,17 @@ def min_st_cut_csr_blocks(
     crosses a block boundary.  Returns the concatenated source-side mask
     over all ``block_ptr[-1]`` nodes (True = source server of the node's
     own block).
+
+    ``chunk_nodes > 0`` bounds the glued-union working set: consecutive
+    blocks are grouped into chunks of at most that many nodes and each chunk
+    is glued + solved separately (per-block integer quantization is
+    unchanged, so the cut masks are bit-identical to the single glued
+    pass).  This is what keeps large rounds cache-resident — one 50k-node
+    union outgrows L2 and loses to per-pair solving, bounded chunks do not.
+    With ``workers > 1`` the chunk solves are fanned out over a
+    thread/process pool (:func:`min_st_cut_csr_many`); note scipy's
+    ``maximum_flow`` holds the GIL, so thread mode only overlaps the numpy
+    assembly work and process mode pays pickling — measure before enabling.
 
     Without scipy (or ``backend='dinic'``) the blocks are solved
     independently by the pure-python Dinic, fanned out over ``workers``
@@ -409,11 +536,119 @@ def min_st_cut_csr_blocks(
             theta_j = theta_j * inv[node_blk]
             if len(int_a):
                 int_w = np.asarray(int_w) * inv[arc_blk]
-        n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
-            nc, int_a, int_b, int_w, theta_i, theta_j, arena=arena,
-            presorted=presorted)
-        _, side = min_st_cut_csr(n, s, t, indptr, cols, caps)
-        return side[:nc]
+        int_w = np.asarray(int_w, dtype=np.float64)
+        if not presorted and len(int_a):
+            order = np.lexsort((int_b, int_a))
+            int_a, int_b = int_a[order], int_b[order]
+            int_w = int_w[order]
+
+        # Adaptive persistency gate: one cheap float capsum pass estimates
+        # how much of the union the peel would retire.  Near convergence
+        # almost everything survives (boundary mass shrinks relative to
+        # internal arcs) and the peel's quantize/compact passes are pure
+        # overhead — take the direct float path, which solves the exact
+        # same integer problem.  Early rounds force the large majority and
+        # the peel pays for itself many times over.
+        frac = 0.0
+        if nc:
+            capf = np.bincount(int_a, weights=int_w, minlength=nc)
+            gapf = np.abs(theta_j - theta_i)
+            frac = float(np.count_nonzero(gapf > capf)) / nc
+        if frac < 0.25:
+            n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+                nc, int_a, int_b, int_w, theta_i, theta_j, arena=arena,
+                presorted=True)
+            _, side = min_st_cut_csr(n, s, t, indptr, cols, caps)
+            return side[:nc]
+
+        # Quantize to the shared integer resolution exactly as
+        # min_st_cut_csr would (same multiply/rint/clip op order), then run
+        # the persistency peel in the integer domain: the surviving
+        # problem's min cuts are the full quantized problem's min cuts
+        # conditioned on the forced nodes, so the composed mask is
+        # bit-identical to the unpeeled solve.
+        cmax = max(float(theta_i.max()), float(theta_j.max()))
+        if len(int_w):
+            cmax = max(cmax, float(int_w.max()))
+        scale = _SCALE / max(cmax, 1e-30)
+        ti = np.maximum(np.rint(theta_i * scale), 0).astype(np.int64)
+        tj = np.maximum(np.rint(theta_j * scale), 0).astype(np.int64)
+        iw = np.maximum(np.rint(int_w * scale), 0).astype(np.int64)
+        alive, src = peel_forced(nc, int_a, int_b, iw, ti, tj)
+        na = int(alive.sum())
+        if na == 0:                            # peel settled every node
+            return src
+
+        peak = max(int(ti[alive].max()), int(tj[alive].max()))
+        if peak >= np.iinfo(np.int32).max:     # pragma: no cover
+            # Absorbed t-links outgrew int32: solve the full quantized
+            # problem instead (its caps are all <= _SCALE by construction).
+            fti = np.maximum(np.rint(theta_i * scale), 0)
+            ftj = np.maximum(np.rint(theta_j * scale), 0)
+            fiw = np.maximum(np.rint(int_w * scale), 0)
+            n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+                nc, int_a, int_b, fiw, fti, ftj, arena=arena,
+                presorted=True)
+            _, side = min_st_cut_csr(n, s, t, indptr, cols, caps,
+                                     prescaled=True)
+            return side[:nc]
+
+        # Compact the survivors (order-preserving, so the canonical arc
+        # ordering carries over) and solve — chunked when the reduced union
+        # still exceeds the working-set budget.
+        new_id = np.cumsum(alive, dtype=np.int64) - 1
+        keep = alive[int_a] & alive[int_b]
+        ria = new_id[int_a[keep]]
+        rib = new_id[int_b[keep]]
+        riw = iw[keep].astype(np.float64)
+        rti = ti[alive].astype(np.float64)
+        rtj = tj[alive].astype(np.float64)
+        if nb > 1:
+            counts = np.bincount(node_blk[alive], minlength=nb)
+            rptr = np.zeros(nb + 1, dtype=np.int64)
+            np.cumsum(counts, out=rptr[1:])
+        else:
+            rptr = np.array([0, na], dtype=np.int64)
+        rside = np.empty(na, dtype=bool)
+        if chunk_nodes and nb > 1 and na > chunk_nodes:
+            spans = _chunk_block_spans(rptr, int(chunk_nodes))
+            arc_bounds = np.searchsorted(ria, rptr)
+            if workers and workers > 1 and len(spans) > 1:
+                problems = []
+                for blo, bhi in spans:
+                    lo, hi = int(rptr[blo]), int(rptr[bhi])
+                    alo, ahi = arc_bounds[blo], arc_bounds[bhi]
+                    problems.append(assemble_symmetric_flow_csr(
+                        hi - lo, ria[alo:ahi] - lo, rib[alo:ahi] - lo,
+                        riw[alo:ahi], rti[lo:hi], rtj[lo:hi],
+                        presorted=True) + (True,))
+                results = min_st_cut_csr_many(
+                    problems, workers=workers, worker_mode=worker_mode)
+                for (blo, bhi), (_, cside) in zip(spans, results):
+                    lo, hi = int(rptr[blo]), int(rptr[bhi])
+                    rside[lo:hi] = cside[:hi - lo]
+            else:
+                for blo, bhi in spans:
+                    lo, hi = int(rptr[blo]), int(rptr[bhi])
+                    alo, ahi = arc_bounds[blo], arc_bounds[bhi]
+                    n, s, t, indptr, cols, caps = \
+                        assemble_symmetric_flow_csr(
+                            hi - lo, ria[alo:ahi] - lo,
+                            rib[alo:ahi] - lo, riw[alo:ahi],
+                            rti[lo:hi], rtj[lo:hi], arena=arena,
+                            presorted=True)
+                    _, cside = min_st_cut_csr(n, s, t, indptr, cols, caps,
+                                              prescaled=True)
+                    rside[lo:hi] = cside[:hi - lo]
+        else:
+            n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+                na, ria, rib, riw, rti, rtj, arena=arena, presorted=True)
+            _, full_side = min_st_cut_csr(n, s, t, indptr, cols, caps,
+                                          prescaled=True)
+            rside = full_side[:na]
+        side = src.copy()
+        side[alive] = rside
+        return side
 
     # Pure-python fallback: split the arcs back per block (arcs sorted by
     # row are block-grouped — rows of block b lie in [ptr[b], ptr[b+1])).
@@ -463,6 +698,37 @@ def _solve_one_cut(problem: tuple, backend: str = "dinic"):
     return min_st_cut(n, s, t, us, vs, caps_uv, caps_vu, backend=backend)
 
 
+def _solve_one_cut_csr(problem: tuple):
+    """Top-level (picklable) worker for :func:`min_st_cut_csr_many`."""
+    n, s, t, indptr, cols, caps = problem[:6]
+    prescaled = bool(problem[6]) if len(problem) > 6 else False
+    return min_st_cut_csr(n, s, t, indptr, cols, caps, prescaled=prescaled)
+
+
+def _pool_map(fn, problems: Sequence[tuple], workers: int,
+              worker_mode: str) -> list:
+    import concurrent.futures as cf
+    pool_cls = (cf.ProcessPoolExecutor if worker_mode == "process"
+                else cf.ThreadPoolExecutor)
+    with pool_cls(max_workers=int(workers)) as pool:
+        return list(pool.map(fn, problems))
+
+
+def min_st_cut_csr_many(
+    problems: Sequence[tuple],
+    workers: int = 0,
+    worker_mode: str = "thread",
+) -> List[Tuple[float, np.ndarray]]:
+    """Solve independent pre-assembled CSR cut problems ``(n, s, t, indptr,
+    cols, caps)`` (the scipy fast path), optionally over a ``workers``
+    thread/process pool — the CSR counterpart of :func:`min_st_cut_many`,
+    used by the chunked block solver's fan-out.  ``caps`` arrays are
+    clobbered; results are returned in input order."""
+    if workers and workers > 1 and len(problems) > 1:
+        return _pool_map(_solve_one_cut_csr, problems, workers, worker_mode)
+    return [_solve_one_cut_csr(p) for p in problems]
+
+
 def min_st_cut_many(
     problems: Sequence[tuple],
     backend: str = "dinic",
@@ -471,17 +737,13 @@ def min_st_cut_many(
 ) -> List[Tuple[float, np.ndarray]]:
     """Solve independent cut problems ``(n, s, t, us, vs, caps_uv,
     caps_vu)``, optionally in a pool of ``workers`` threads or processes
-    (``worker_mode``) — the pure-python-backend fallback for a round's
-    disjoint blocks when no single-pass C solver is available.  Results are
-    returned in input order."""
+    (``worker_mode``) — the fan-out primitive behind a round's disjoint
+    blocks.  ``backend`` may be ``'dinic'`` (pure python, the no-scipy
+    fallback) or ``'scipy'``.  Results are returned in input order."""
     if workers and workers > 1 and len(problems) > 1:
-        import concurrent.futures as cf
         import functools
-        pool_cls = (cf.ProcessPoolExecutor if worker_mode == "process"
-                    else cf.ThreadPoolExecutor)
-        with pool_cls(max_workers=int(workers)) as pool:
-            return list(pool.map(
-                functools.partial(_solve_one_cut, backend=backend), problems))
+        return _pool_map(functools.partial(_solve_one_cut, backend=backend),
+                         problems, workers, worker_mode)
     return [_solve_one_cut(p, backend=backend) for p in problems]
 
 

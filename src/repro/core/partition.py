@@ -96,15 +96,21 @@ def data_partition(
     R: Optional[int] = None,
     seed: int = 0,
     init: Optional[np.ndarray] = None,
+    workers: int = 0,
+    cache: "bool | str" = "auto",
+    chunk_nodes: "int | str" = "auto",
 ) -> DevicePartition:
     """GLAD-S over a pod-shaped EdgeNetwork -> shard_map-ready partition.
 
     Uses the batched disjoint-pair sweep — the placement bridge wants wall
-    time, not the paper's exact Alg.-1 trajectory."""
+    time, not the paper's exact Alg.-1 trajectory.  ``workers`` /
+    ``cache`` / ``chunk_nodes`` tune the engine's block fan-out and
+    cross-round assembly caching (see :func:`repro.core.glad_s.glad_s`)."""
     if net is None:
         net = pod_edge_network(num_parts, graph.n, pods=pods, seed=seed)
     cm = CostModel(net, graph, gnn)
-    res = glad_s(cm, R=R, seed=seed, init=init, sweep="batched")
+    res = glad_s(cm, R=R, seed=seed, init=init, sweep="batched",
+                 workers=workers, cache=cache, chunk_nodes=chunk_nodes)
     return partition_from_assign(graph, res.assign, num_parts, res.factors)
 
 
@@ -216,10 +222,14 @@ def rebalance(
     straggler: int,
     slow_factor: float,
     seed: int = 0,
+    workers: int = 0,
+    cache: "bool | str" = "auto",
+    chunk_nodes: "int | str" = "auto",
 ) -> DevicePartition:
     """Straggler mitigation: degrade the slow server's compute coefficients
     and run an incremental re-layout warm-started from the current one."""
     net2 = net.degrade(straggler, slow_factor)
     cm = CostModel(net2, graph, gnn)
-    res = glad_s(cm, init=part.assign, R=net2.m, seed=seed, sweep="batched")
+    res = glad_s(cm, init=part.assign, R=net2.m, seed=seed, sweep="batched",
+                 workers=workers, cache=cache, chunk_nodes=chunk_nodes)
     return partition_from_assign(graph, res.assign, part.num_parts, res.factors)

@@ -23,17 +23,16 @@ arrays are rectangular so the jitted program never sees dynamic shapes.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import jaxcompat
 from repro.core.partition import DevicePartition
-from repro.gnn.models import GNNConfig, _LAYERS, segment_sum
+from repro.gnn.models import GNNConfig, segment_sum
 from repro.graphs.datagraph import DataGraph
 
 

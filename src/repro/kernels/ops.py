@@ -8,7 +8,6 @@ execution path never touches model code.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

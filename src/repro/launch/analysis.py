@@ -23,9 +23,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
-import jax
 
-from repro.models.common import LMConfig, SHAPES, ShapeCfg
+from repro.models.common import LMConfig, ShapeCfg
 
 
 def probe_plan(cfg: LMConfig, shape: ShapeCfg) -> List[Tuple[LMConfig, float]]:

@@ -148,7 +148,6 @@ def model_flops_for(cfg, shape) -> float:
     """6*N*D accounting (N = params, active params for MoE; D = tokens)."""
     n = cfg.params_count()
     if cfg.n_experts:
-        inactive_frac = 0.0
         per_exp = 3 * cfg.d_model * cfg.expert_d_ff
         moe_layers = cfg.n_layers - cfg.first_dense_layers
         routed_total = moe_layers * cfg.n_experts * per_exp

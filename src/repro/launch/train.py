@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro import models as zoo
 from repro.configs import get_config, get_smoke_config
-from repro.models.common import SHAPES, ShapeCfg
+from repro.models.common import ShapeCfg
 from repro.models.transformer import Dist
 from repro.train import (CheckpointManager, batch_at_step, init_opt_state,
                          make_train_step, optim)

@@ -13,9 +13,8 @@ flash_attention kernel takes over (same math, kernels/flash_attention.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ static cross-attn KV (computed once from the encoder output).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -20,15 +20,13 @@ plain GSPMD land.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import jaxcompat
-from repro.models.common import LMConfig, wsc
+from repro.models.common import LMConfig
 
 
 def router_topk(x, w_router, k: int):
@@ -123,7 +121,6 @@ def moe_ffn(
     B, L, d = x.shape
     k = cfg.top_k
     msize = mesh.shape[model_axis]
-    dsize = mesh.shape[data_axis]
     E_local = cfg.n_experts // msize
     # Per-device token count (batch is sharded over batch_axes).
     bshard = 1

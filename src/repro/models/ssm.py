@@ -14,19 +14,13 @@ invocation site.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.models.common import (
-    LMConfig, apply_rope, attention_any, dense_init, full_attention, rms_norm,
-    rope_tables, scan_layers, sharded_ce_loss,
-)
+from repro.models.common import (LMConfig, dense_init, rms_norm, rope_tables,
+                                 scan_layers, sharded_ce_loss)
 from repro.models.transformer import (
     Dist, _attn, _ffn_dense, _embed, _unembed, vocab_padded,
 )
@@ -329,7 +323,6 @@ def decode_step(cfg: LMConfig, params, tokens, cache, dist: Dist = Dist()):
     # segments (they carry distinct KV caches, so they stay unrolled).
     x = x0
     outs_S, outs_tail, ks, vs = [], [], [], []
-    seg_start = 0
     sh_i = 0
     layer_ids = list(range(cfg.n_layers))
     boundaries = [i for i in layer_ids

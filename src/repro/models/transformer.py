@@ -14,19 +14,16 @@ stack.  Sharding: batch over ('pod','data'), TP over 'model', FSDP over
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import moe as moe_lib
-from repro.models.common import (
-    LMConfig, ShapeCfg, apply_rope, attention_any, dense_init, full_attention,
-    rms_norm, rope_tables, scan_layers, sharded_ce_loss,
-)
+from repro.models.common import (LMConfig, apply_rope, attention_any,
+                                 dense_init, full_attention, rms_norm,
+                                 rope_tables, scan_layers, sharded_ce_loss)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -407,7 +404,6 @@ def prefill(cfg: LMConfig, params, batch: Dict, max_len: int,
 
 def decode_step(cfg: LMConfig, params, tokens, cache, dist: Dist = Dist()):
     """One token per sequence: tokens (B, 1) -> (logits (B,1,V), cache')."""
-    B = tokens.shape[0]
     x = _embed(cfg, params, tokens, dist)
     cur = cache["len"]                         # per-row offsets (ragged slots)
     pos = cache["len"][:, None]

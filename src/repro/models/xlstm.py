@@ -27,7 +27,6 @@ import jax.numpy as jnp
 
 from repro.models.common import (LMConfig, dense_init, rms_norm,
     scan_layers, sharded_ce_loss)
-from repro.models.ssm import _ssd_chunked
 from repro.models.transformer import Dist, _embed, _unembed, vocab_padded
 
 ICLAMP = 8.0
@@ -356,8 +355,10 @@ def _run_segments(cfg, params, x, dist, cache):
                 return out, s1
             x, s1 = scan_layers(cfg.analysis_unroll, body, x,
                                 (sl,) + st, cnt)
-            sh.append(s1[0]); sc.append(s1[1])
-            sn.append(s1[2]); sm.append(s1[3])
+            sh.append(s1[0])
+            sc.append(s1[1])
+            sn.append(s1[2])
+            sm.append(s1[3])
     new["mC"] = jnp.concatenate(mC, axis=0)
     new["mn"] = jnp.concatenate(mn, axis=0)
     if sh:

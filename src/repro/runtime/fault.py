@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -93,12 +93,18 @@ class ElasticCoordinator:
     """
 
     def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload,
-                 part: DevicePartition):
+                 part: DevicePartition, workers: int = 0,
+                 cache: "bool | str" = "auto",
+                 chunk_nodes: "int | str" = "auto"):
         self.net = net
         self.graph = graph
         self.gnn = gnn
         self.part = part
         self.events: List[RelayoutEvent] = []
+        # Engine knobs for the GLAD re-layouts (assembly caching + chunked
+        # block fan-out) — relayout latency is the control plane's budget.
+        self._glad_opts = dict(workers=workers, cache=cache,
+                               chunk_nodes=chunk_nodes)
 
     def on_failure(self, dead: List[int], seed: int = 0) -> DevicePartition:
         """Node loss: disconnect dead servers, re-layout incrementally
@@ -116,7 +122,8 @@ class ElasticCoordinator:
         alive = [i for i in range(net.m) if i not in dead]
         rng = np.random.default_rng(seed)
         assign[orphan] = rng.choice(alive, size=int(orphan.sum()))
-        res = glad_s(cm, init=assign, R=net.m, seed=seed, sweep="batched")
+        res = glad_s(cm, init=assign, R=net.m, seed=seed, sweep="batched",
+                     **self._glad_opts)
         new_part = partition_from_assign(self.graph, res.assign,
                                          self.part.num_parts, res.factors)
         migrated = int((res.assign != self.part.assign).sum())
@@ -137,7 +144,7 @@ class ElasticCoordinator:
         cm = CostModel(net, self.graph, self.gnn)
         old_cost = cm.total(self.part.assign)
         res = glad_s(cm, init=self.part.assign, R=net.m, seed=seed,
-                     sweep="batched")
+                     sweep="batched", **self._glad_opts)
         new_part = partition_from_assign(self.graph, res.assign,
                                          self.part.num_parts, res.factors)
         migrated = int((res.assign != self.part.assign).sum())

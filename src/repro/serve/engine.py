@@ -12,9 +12,8 @@ needs no recompilation.  This is the paper's "resident service" pattern
 from __future__ import annotations
 
 import dataclasses
-import functools
 from collections import deque
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

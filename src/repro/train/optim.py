@@ -8,7 +8,7 @@ selects it so total state stays inside the 512-chip HBM budget.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

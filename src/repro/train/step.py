@@ -17,8 +17,7 @@ compressed cross-pod all-reduce; the wire format itself is XLA's concern
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -119,7 +118,6 @@ def jit_train_step(cfg, dist, param_spec_tree, opt_cfg=None, microbatches=1,
     ns = lambda spec: NamedSharding(mesh, spec)
     p_shard = jax.tree.map(ns, param_spec_tree)
     o_shard = jax.tree.map(ns, optim.opt_state_specs(opt_cfg, param_spec_tree))
-    ef_shard = p_shard if compress_grads else None
     b_shard = jax.tree.map(ns, batch_specs) if batch_specs is not None else None
     in_shardings = (p_shard, o_shard, p_shard, b_shard)
     out_shardings = (p_shard, o_shard, p_shard,

@@ -75,6 +75,34 @@ def test_submodularity_marginal_fp(seed):
     assert cm.marginal_fp(X, v) >= cm.marginal_fp(Y, v) - 1e-9
 
 
+def test_mutating_caller_arrays_cannot_corrupt_cached_deltas():
+    """CostModel copies/freezes mu at construction and freezes the cached
+    unary matrix: mutating the caller's arrays afterwards must not change
+    any cached evaluation, and in-place writes to cm.unary must fail."""
+    rng = np.random.default_rng(0)
+    g = random_graph(rng, 30, 25)
+    net = build_edge_network(g, 3, seed=0)
+    caller_mu = net.mu                       # the caller-owned array
+    cm = CostModel(net, g, workload_for("gcn", 8))
+    assign = rng.integers(0, 3, size=g.n)
+    before = cm.total(assign)
+    state = cm.layout_state(assign)
+    moved = np.array([0, 1])
+    new = np.array([2, 2])
+    delta_before = state.delta(moved, new)
+
+    caller_mu += 1e6                         # sabotage after construction
+    assert cm.total(assign) == pytest.approx(before, rel=1e-12)
+    assert state.delta(moved, new) == pytest.approx(delta_before, rel=1e-9)
+    state.commit(moved, new)
+    assert state.total == pytest.approx(cm.total(state.assign), rel=1e-9)
+
+    with pytest.raises(ValueError):
+        cm.unary[0, 0] = 1.0                 # frozen
+    with pytest.raises(ValueError):
+        cm.net.mu[0, 0] = 1.0                # the model's copy is frozen too
+
+
 def test_traffic_bytes_counts_cut_links(cm_small):
     g = cm_small.graph
     assign = np.arange(g.n) % cm_small.net.m

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.gnn.models import (GNNConfig, directed_edges, forward, init_params,
-                              loss_fn)
+from repro.gnn.models import GNNConfig, directed_edges, forward, init_params
 from repro.gnn.training import accuracy, fit
 
 

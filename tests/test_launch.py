@@ -1,13 +1,12 @@
 """Launch-layer units: HLO collective parser, roofline math, registry,
 sharding-spec divisibility for every (arch x shape)."""
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import (ARCHS, all_cells, applicable_shapes, get_config,
-                           input_specs, skip_reason)
-from repro.launch.hlo import (Roofline, _shape_bytes, model_flops_for,
+                           input_specs)
+from repro.launch.hlo import (_shape_bytes, model_flops_for,
                               parse_collectives, _wire_bytes)
 from repro.models.common import SHAPES
 

@@ -238,6 +238,113 @@ def test_block_sweep_cost_parity_midsize():
     assert blk.cost == pytest.approx(pw.cost, rel=1e-12)
 
 
+# ------------------------------------------------------ assembly cache (PR 3)
+def test_cache_on_off_bit_identical_trajectories(cm_small):
+    """Every sweep discipline produces the exact same iteration history and
+    final assignment with the AssemblyCache on or off — patched arrays are
+    bit-identical to fresh gathers."""
+    for sweep, rs in (("single", "auto"), ("batched", "pairwise"),
+                      ("batched", "block")):
+        on = glad_s(cm_small, seed=1, sweep=sweep, round_solver=rs,
+                    cache=True)
+        off = glad_s(cm_small, seed=1, sweep=sweep, round_solver=rs,
+                     cache=False)
+        assert ([np.float64(a).hex() for a in on.history]
+                == [np.float64(b).hex() for b in off.history]), (sweep, rs)
+        np.testing.assert_array_equal(on.assign, off.assign)
+
+
+def test_cache_theta_patch_after_disjoint_commit(cm_small):
+    """A commit touching other servers leaves the pair's membership intact:
+    the next solve must be served by an O(touched) theta patch (or verbatim
+    reuse) and still match a cache-free engine exactly."""
+    rng = np.random.default_rng(5)
+    m = cm_small.net.m
+    init = rng.integers(0, m, size=cm_small.graph.n).astype(np.int64)
+    eng = PairCutEngine(cm_small, init.copy(), cache=True)
+    assert eng.solve_pair(2, 3) is not None
+    movers = np.flatnonzero(eng.state.assign == 0)[:3]
+    old = eng.state.assign[movers].copy()
+    eng.state.commit(movers, np.full(len(movers), 1))   # unconditional move
+    eng._mark_dirty(movers, old)
+    sol = eng.solve_pair(2, 3)
+    assert eng.cache_stats()["patched"] + eng.cache_stats()["hits"] >= 1
+    ref = PairCutEngine(cm_small, eng.state.assign.copy(),
+                        cache=False).solve_pair(2, 3)
+    np.testing.assert_array_equal(sol[0], ref[0])
+    np.testing.assert_array_equal(sol[1], ref[1])
+
+
+def test_cache_membership_patch_after_cross_commit(cm_small):
+    """Moving a few members OUT of the pair triggers the incremental
+    membership patch; the refreshed assembly must equal a from-scratch
+    one bit for bit."""
+    rng = np.random.default_rng(6)
+    m = cm_small.net.m
+    init = rng.integers(0, 2, size=cm_small.graph.n).astype(np.int64)
+    eng = PairCutEngine(cm_small, init.copy(), cache=True)
+    assert eng.solve_pair(0, 1) is not None
+    movers = np.flatnonzero(eng.state.assign == 0)[:2]
+    old = eng.state.assign[movers].copy()
+    eng.state.commit(movers, np.full(len(movers), 3))   # leave the pair
+    eng._mark_dirty(movers, old)
+    sol = eng.solve_pair(0, 1)
+    assert eng.cache_stats()["patched"] >= 1
+    e = eng._cache[(0, 1)]
+    fresh = eng._assemble_full(0, 1)
+    np.testing.assert_array_equal(e.members, fresh.members)
+    np.testing.assert_array_equal(e.theta_i, fresh.theta_i)
+    np.testing.assert_array_equal(e.theta_j, fresh.theta_j)
+    np.testing.assert_array_equal(e.int_a, fresh.int_a)
+    np.testing.assert_array_equal(e.int_b, fresh.int_b)
+    np.testing.assert_array_equal(e.int_w, fresh.int_w)
+    ref = PairCutEngine(cm_small, eng.state.assign.copy(),
+                        cache=False).solve_pair(0, 1)
+    np.testing.assert_array_equal(sol[1], ref[1])
+
+
+def test_cache_lru_eviction_under_tiny_budget(cm_small):
+    """A starved byte budget forces evictions but never wrong results."""
+    eng = PairCutEngine(cm_small, np.zeros(cm_small.graph.n, np.int64),
+                        cache=True, cache_bytes=1)
+    res = glad_s(cm_small, seed=2, sweep="batched", cache=True,
+                 cache_bytes=1)
+    ref = glad_s(cm_small, seed=2, sweep="batched", cache=False)
+    assert res.cost == pytest.approx(ref.cost, rel=1e-12)
+    np.testing.assert_array_equal(res.assign, ref.assign)
+    assert eng.cache_stats()["bytes"] >= 0
+
+
+def test_cache_auto_policy_follows_active_mask(cm_small):
+    """'auto' enables the cache exactly for incremental (active-mask)
+    workloads."""
+    init = np.zeros(cm_small.graph.n, np.int64)
+    cold = PairCutEngine(cm_small, init)
+    assert not cold._cache_on
+    act = np.zeros(cm_small.graph.n, bool)
+    act[:20] = True
+    warm = PairCutEngine(cm_small, init, active=act)
+    assert warm._cache_on
+    forced = PairCutEngine(cm_small, init, cache=False, active=act)
+    assert not forced._cache_on
+
+
+def test_auto_round_solver_matches_explicit(cm_small):
+    """solver='auto' must produce the same sweep results as whichever
+    concrete solver it resolves to (both produce identical proposals)."""
+    rng = np.random.default_rng(9)
+    init = rng.integers(0, cm_small.net.m, cm_small.graph.n).astype(np.int64)
+    rounds = round_robin_rounds(cm_small.net.m)
+    outs = {}
+    for chunk in (0, 1):      # 1 forces the 'pairwise' side of the policy
+        eng = PairCutEngine(cm_small, init.copy(), chunk_nodes=chunk)
+        for rnd in rounds:
+            eng.sweep_round(rnd, solver="auto")
+        outs[chunk] = (eng.state.total, eng.state.assign.copy())
+    assert outs[0][0] == pytest.approx(outs[1][0], rel=1e-12)
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+
+
 # ------------------------------------------------------- engine result shape
 def test_glad_result_fields_preserved(cm_small):
     res = glad_s(cm_small, seed=0)

@@ -4,10 +4,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.maxflow import (CutArena, Dinic, assemble_symmetric_flow_csr,
+from repro.core.maxflow import (_SCALE, CutArena, Dinic,
+                                assemble_symmetric_flow_csr,
                                 concat_flow_blocks, min_st_cut,
                                 min_st_cut_csr, min_st_cut_csr_blocks,
-                                min_st_cut_many)
+                                min_st_cut_csr_many, min_st_cut_many,
+                                peel_forced)
 
 
 def _random_network(rng, n, m):
@@ -222,6 +224,131 @@ def test_block_diagonal_cuts_match_dinic_oracle_fuzz(seed):
         blk_side = np.concatenate([side[lo:hi], [True, False]])
         crossing = _crossing_capacity(blk_side, k, ia, ib, iw, ti, tj)
         assert crossing == pytest.approx(ref_val, rel=1e-5, abs=1e-4), b
+
+
+# ------------------------------------------------- persistency peel + chunks
+def _sorted_arcs(int_a, int_b, int_w):
+    order = np.lexsort((int_b, int_a))
+    return int_a[order], int_b[order], np.asarray(int_w)[order]
+
+
+def test_peel_forced_settles_known_cascade():
+    """Chain a - b - c with huge t-link gaps at the ends: the peel must fix
+    a to the source, c to the sink, absorb both arcs into b, and settle b
+    too — no flow solve left."""
+    int_a = np.array([0, 1, 1, 2])
+    int_b = np.array([1, 0, 2, 1])
+    int_w = np.array([10, 10, 10, 10], dtype=np.int64)
+    th_i = np.array([0, 30, 100], dtype=np.int64)    # cap(v->t)
+    th_j = np.array([100, 0, 0], dtype=np.int64)     # cap(s->v)
+    alive, src = peel_forced(3, int_a, int_b, int_w.astype(np.float64),
+                             th_i, th_j)
+    assert not alive.any()
+    # a: th_j - th_i = 100 > capsum 10 -> source; c: gap -100 -> sink;
+    # b inherits a's arc into th_j (0+10) and c's into th_i (30+10):
+    # gap 10 - 40 = -30 > remaining capsum 0 -> sink.
+    np.testing.assert_array_equal(src, [True, False, False])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_peeled_blocks_mask_identical_to_unpeeled(seed):
+    """The peel path (quantize -> force -> compact -> prescaled solve) must
+    return the exact minimal-source-side mask of the unpeeled quantized
+    solve — bit for bit, not just cost-equal.  Thetas are inflated so the
+    adaptive gate engages on one copy and not the other."""
+    rng = np.random.default_rng(seed)
+    blocks = [_random_aux_block(rng) for _ in range(int(rng.integers(1, 4)))]
+    block_ptr, ia, ib, iw, ti, tj = concat_flow_blocks(blocks)
+    ia, ib, iw = _sorted_arcs(ia, ib, iw)
+    boost = rng.uniform(5.0, 50.0, size=len(ti))     # most nodes forceable
+    ti2, tj2 = ti * boost, tj * boost
+    peeled = min_st_cut_csr_blocks(block_ptr, ia, ib, iw, ti2, tj2,
+                                   backend="scipy", presorted=True)
+    # Reference: the pre-peel float path on the same (normalized) caps.
+    nb = len(block_ptr) - 1
+    t_i, t_j, w = ti2.copy(), tj2.copy(), iw.copy()
+    if nb > 1:
+        node_blk = np.repeat(np.arange(nb), np.diff(block_ptr))
+        bmax = np.zeros(nb)
+        np.maximum.at(bmax, node_blk, t_i)
+        np.maximum.at(bmax, node_blk, t_j)
+        if len(ia):
+            np.maximum.at(bmax, node_blk[ia], w)
+        inv = 1.0 / np.maximum(bmax, 1e-30)
+        t_i, t_j = t_i * inv[node_blk], t_j * inv[node_blk]
+        if len(ia):
+            w = w * inv[node_blk[ia]]
+    nc = int(block_ptr[-1])
+    n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+        nc, ia, ib, w, t_i, t_j, presorted=True)
+    _, ref = min_st_cut_csr(n, s, t, indptr, cols, caps)
+    np.testing.assert_array_equal(peeled, ref[:nc])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_chunked_block_solve_mask_identical(seed):
+    """Chunking the glued union (any chunk size, with or without a worker
+    pool) must not change a single mask bit: per-block quantization is
+    composition-invariant."""
+    rng = np.random.default_rng(seed)
+    blocks = [_random_aux_block(rng) for _ in range(int(rng.integers(2, 7)))]
+    block_ptr, ia, ib, iw, ti, tj = concat_flow_blocks(blocks)
+    ia, ib, iw = _sorted_arcs(ia, ib, iw)
+    args = (block_ptr, ia, ib, iw, ti, tj)
+    whole = min_st_cut_csr_blocks(*args, backend="scipy", presorted=True)
+    for chunk in (1, 5, 16):
+        chunked = min_st_cut_csr_blocks(
+            *args, backend="scipy", presorted=True, chunk_nodes=chunk)
+        np.testing.assert_array_equal(whole, chunked, err_msg=str(chunk))
+    pooled = min_st_cut_csr_blocks(*args, backend="scipy", presorted=True,
+                                   chunk_nodes=5, workers=2)
+    np.testing.assert_array_equal(whole, pooled)
+
+
+def test_min_st_cut_csr_many_matches_serial():
+    """The CSR worker pool (thread and process) returns the same cuts in
+    input order as serial execution; prescaled problems round-trip too."""
+    rng = np.random.default_rng(11)
+    problems = []
+    for _ in range(5):
+        k, ia, ib, iw, ti, tj = _random_aux_block(rng)
+        ia, ib, iw = _sorted_arcs(ia, ib, iw)
+        problems.append(assemble_symmetric_flow_csr(
+            k, ia, ib, iw, ti, tj, presorted=True))
+    serial = min_st_cut_csr_many([
+        (n, s, t, ip, co, ca.copy()) for n, s, t, ip, co, ca in problems])
+    threads = min_st_cut_csr_many([
+        (n, s, t, ip, co, ca.copy()) for n, s, t, ip, co, ca in problems],
+        workers=2)
+    procs = min_st_cut_csr_many([
+        (n, s, t, ip, co, ca.copy()) for n, s, t, ip, co, ca in problems],
+        workers=2, worker_mode="process")
+    for (v1, s1), (v2, s2), (v3, s3) in zip(serial, threads, procs):
+        assert v1 == pytest.approx(v2, rel=1e-9)
+        assert v1 == pytest.approx(v3, rel=1e-9)
+        np.testing.assert_array_equal(s1, s2)
+        np.testing.assert_array_equal(s1, s3)
+
+
+def test_min_st_cut_csr_prescaled_uses_caps_verbatim():
+    """prescaled=True must treat integer-valued caps as final: a problem
+    whose caps already carry the 1/_SCALE resolution solves to the same
+    partition whether quantized by the solver or by the caller."""
+    rng = np.random.default_rng(3)
+    k, ia, ib, iw, ti, tj = _random_aux_block(rng)
+    ia, ib, iw = _sorted_arcs(ia, ib, iw)
+    cmax = max(ti.max(), tj.max(), iw.max() if len(iw) else 0.0)
+    scale = _SCALE / max(cmax, 1e-30)
+    q = lambda x: np.maximum(np.rint(x * scale), 0)  # noqa: E731
+    n, s, t, ip, co, ca = assemble_symmetric_flow_csr(
+        k, ia, ib, q(iw), q(ti), q(tj), presorted=True)
+    _, side_pre = min_st_cut_csr(n, s, t, ip, co, ca, prescaled=True)
+    n, s, t, ip, co, ca = assemble_symmetric_flow_csr(
+        k, ia, ib, iw, ti, tj, presorted=True)
+    _, side_auto = min_st_cut_csr(n, s, t, ip, co, ca)
+    np.testing.assert_array_equal(side_pre, side_auto)
 
 
 def test_min_st_cut_many_orders_and_workers():

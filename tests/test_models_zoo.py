@@ -10,7 +10,6 @@ import pytest
 
 from repro import models as zoo
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.models.common import ShapeCfg
 from repro.models.transformer import Dist, vocab_padded
 from repro.train import OptConfig, init_opt_state, make_train_step
 

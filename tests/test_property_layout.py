@@ -18,6 +18,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.cost import CostModel, workload_for
 from repro.core.engine import PairCutEngine, round_robin_rounds
+from repro.core.glad_s import glad_s
 from repro.graphs.edgenet import build_edge_network
 from tests.conftest import random_graph
 
@@ -123,6 +124,54 @@ def test_block_round_solve_matches_pair_solves(seed):
 @given(st.integers(0, 1_000_000))
 def test_block_round_solve_matches_pair_solves_fuzz(seed):
     _check_round_blocks_match_pair_solves(seed)
+
+
+# ------------------------------------- cache invalidation across mutations
+def _hex_history(res):
+    return [np.float64(h).hex() for h in res.history]
+
+
+def _check_cache_invariant_under_evolution(seed):
+    """Interleaved GLAD rounds with the AssemblyCache enabled/disabled must
+    produce IDENTICAL accepted-move sequences (bit-for-bit histories and
+    final assignments), before and after random ``evolution.sample_delta``
+    mutations — i.e. epochs/patching never serve a stale assembly."""
+    from repro.core.evolution import apply_delta, sample_delta
+    from repro.core.glad_e import glad_e
+
+    rng = np.random.default_rng(seed)
+    cm, g, net = _instance(rng, weighted=bool(seed % 2))
+    sweep = ("single", "batched")[seed % 2]
+    rs = ("pairwise", "block")[(seed // 2) % 2]
+    on = glad_s(cm, seed=seed, sweep=sweep, round_solver=rs, cache=True)
+    off = glad_s(cm, seed=seed, sweep=sweep, round_solver=rs, cache=False)
+    assert _hex_history(on) == _hex_history(off)
+    np.testing.assert_array_equal(on.assign, off.assign)
+
+    # Evolve the graph and re-layout incrementally (the active-mask path —
+    # what cache='auto' enables): still identical with cache forced on/off.
+    delta = sample_delta(g, pct_links=0.15, pct_vertices=0.05,
+                         seed=seed + 17)
+    g2 = apply_delta(g, delta)
+    cm2 = CostModel(net, g2, cm.gnn)
+    e_on = glad_e(cm2, g, on.assign, seed=seed, cache=True)
+    e_off = glad_e(cm2, g, on.assign, seed=seed, cache=False)
+    assert _hex_history(e_on) == _hex_history(e_off)
+    np.testing.assert_array_equal(e_on.assign, e_off.assign)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 50_000))
+def test_cache_identical_accept_sequences_under_evolution(seed):
+    _check_cache_invariant_under_evolution(seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=120, deadline=None)
+@given(st.integers(0, 1_000_000))
+def test_cache_identical_accept_sequences_under_evolution_fuzz(seed):
+    """Heavier on-demand version (-m slow)."""
+    _check_cache_invariant_under_evolution(seed)
 
 
 @settings(max_examples=10, deadline=None)

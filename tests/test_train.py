@@ -13,10 +13,10 @@ from repro import models as zoo
 from repro.configs import get_smoke_config
 from repro.models.common import ShapeCfg
 from repro.models.transformer import Dist
-from repro.train import (CheckpointManager, DataConfig, OptConfig,
-                         batch_at_step, init_error_feedback, init_opt_state,
-                         make_train_step, opt_state_specs)
-from repro.train.optim import apply_updates, clip_by_global_norm
+from repro.train import (CheckpointManager, OptConfig, batch_at_step,
+                         init_error_feedback, init_opt_state,
+                         make_train_step)
+from repro.train.optim import clip_by_global_norm
 
 
 @pytest.fixture(scope="module")
