@@ -217,10 +217,19 @@ class LayoutState:
     Invariant: ``total == unary_pick.sum() + edge_ct.sum() + cm.constant``
     (Thm 2's C1 + C2 + C0), kept exact by routing every mutation through
     :meth:`commit`.
+
+    ``on_commit`` (optional): callback ``(moved, old_servers)`` invoked
+    after EVERY applied mutation, with the movers and the servers they
+    left.  The layout engine registers its dirty/epoch bookkeeping here so
+    that commits arriving through this API directly (fault-runtime warm
+    restarts, externally-imposed churn) keep its assembly cache and
+    warm-start residual state coherent — not just commits routed through
+    the engine's own accept path.
     """
 
     def __init__(self, cm: CostModel, assign: np.ndarray):
         self.cm = cm
+        self.on_commit = None
         self.assign = np.array(assign, dtype=np.int64)      # owned copy
         g = cm.graph
         if self.assign.shape != (g.n,):
@@ -304,12 +313,15 @@ class LayoutState:
         # contributions were computed against the pre-commit layout).
         self._pending = None
         d, eids, new_ct = parts
+        old_servers = self.assign[moved].copy()
         self.assign[moved] = new_servers
         self._overlay[moved] = new_servers
         self.unary_pick[moved] = self.cm.unary[moved, new_servers]
         if len(eids):
             self.edge_ct[eids] = new_ct
         self.total += d
+        if self.on_commit is not None:
+            self.on_commit(moved, old_servers)
         return d
 
     def factors(self) -> Dict[str, float]:

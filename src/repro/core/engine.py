@@ -78,8 +78,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cost import CostModel
-from repro.core.maxflow import (_HAVE_SCIPY, CutArena, _chunk_block_spans,
-                                min_st_cut, min_st_cut_csr_blocks)
+from repro.core.maxflow import (_HAVE_SCIPY, PEEL_GATE_FRAC, CutArena,
+                                ResidualCut, _chunk_block_spans, min_st_cut,
+                                min_st_cut_csr_blocks, peel_gate_fraction)
 from repro.graphs.datagraph import csr_multirange
 
 #: Default node budget for one glued block-diagonal flow union
@@ -98,12 +99,16 @@ class _PairAssembly:
     the presorted canonical order), and, built lazily on first use:
     the singleton/core classification and the symmetric flow-CSR structure
     with a capacity template (int_w filled in, theta slots zero).
+    ``residual`` optionally holds the pair's warm-start flow state
+    (:class:`repro.core.maxflow.ResidualCut`) — valid across theta patches
+    (the flow structure is membership-determined), dropped on membership
+    patches and rebuilds, and counted against the LRU byte budget.
     ``stamp`` is the engine dirty-version the arrays are valid for.
     """
 
     __slots__ = ("members", "theta_i", "theta_j", "int_a", "int_b", "int_w",
                  "stamp", "has_int", "core", "core_int_a", "core_int_b",
-                 "nbytes")
+                 "residual", "nbytes")
 
     def __init__(self, members, theta_i, theta_j, int_a, int_b, int_w,
                  stamp):
@@ -118,6 +123,7 @@ class _PairAssembly:
         self.core = None
         self.core_int_a = None
         self.core_int_b = None
+        self.residual = None
         self.nbytes = (members.nbytes + theta_i.nbytes + theta_j.nbytes
                        + int_a.nbytes + int_b.nbytes + int_w.nbytes)
 
@@ -164,11 +170,18 @@ class PairCutEngine:
         cache: "bool | str" = "auto",
         cache_bytes: int = 256 << 20,
         chunk_nodes: "int | str" = "auto",
+        warm: "bool | str" = "auto",
     ):
         self.cm = cm
         self._workers = int(workers)
         self._worker_mode = worker_mode
         self.state = cm.layout_state(assign)
+        # Epoch plumbing: EVERY commit that lands on the state — the
+        # engine's own accept path or a caller committing directly through
+        # the LayoutState API (fault-runtime warm restarts, benchmark
+        # perturbations) — must bump the dirty stamps and vertex epochs, or
+        # cached assemblies and warm-start residuals go silently stale.
+        self.state.on_commit = self._mark_dirty
         g = cm.graph
         self._indptr = g.indptr
         self._indices = g.indices
@@ -206,6 +219,26 @@ class PairCutEngine:
             self._cache_on = active is not None
         else:
             self._cache_on = bool(cache)
+        # Warm-start incremental max-flow: per-pair ResidualCut state rides
+        # the cache entries (same per-vertex epoch keying), so warm solving
+        # requires the cache.  'auto' follows the cache policy; warm=True
+        # promotes cache='auto' to ON, but an explicit cache=False is a
+        # contradiction worth surfacing.  Masks are bit-identical warm or
+        # cold (the minimal source side is unique per integer problem), so
+        # the knob only picks a schedule, never a trajectory.
+        if warm == "auto":
+            self._warm_on = self._cache_on
+        else:
+            self._warm_on = bool(warm)
+            if self._warm_on and not self._cache_on:
+                if cache == "auto":
+                    self._cache_on = True
+                else:
+                    raise ValueError(
+                        "warm=True requires the assembly cache "
+                        "(warm state is stored on cache entries); "
+                        "drop cache=False or pass warm=False")
+        self._warm_on = self._warm_on and self._use_csr
         self._cache_bytes = int(cache_bytes)
         self._cache: "OrderedDict[Tuple[int, int], _PairAssembly]" = \
             OrderedDict()
@@ -215,6 +248,9 @@ class PairCutEngine:
         self.cache_patched = 0       # O(touched) theta patch
         self.cache_misses = 0        # full (re-)assembly
         self.cache_evictions = 0
+        self.warm_hits = 0           # integer caps unchanged: mask-only BFS
+        self.warm_repairs = 0        # drain + delta augment
+        self.warm_cold = 0           # primed / gated back to a cold solve
         if chunk_nodes == "auto":
             chunk_nodes = AUTO_CHUNK_NODES
         self._chunk_nodes = int(chunk_nodes or 0)
@@ -228,6 +264,8 @@ class PairCutEngine:
             "hits": self.cache_hits, "patched": self.cache_patched,
             "misses": self.cache_misses, "evictions": self.cache_evictions,
             "entries": len(self._cache), "bytes": self._cache_used,
+            "warm_hits": self.warm_hits, "warm_repairs": self.warm_repairs,
+            "warm_cold": self.warm_cold,
         }
 
     def pair_clean(self, i: int, j: int) -> bool:
@@ -285,12 +323,20 @@ class PairCutEngine:
             self._cache[key] = e
             self._ensure_core(e)           # eager: every entry gets solved
             self._cache_used += e.nbytes   # base + core bytes, while
-            while (self._cache_used > self._cache_bytes   # still resident
-                   and len(self._cache) > 1):
-                _, old = self._cache.popitem(last=False)
-                self._cache_used -= self._entry_bytes(old)
-                self.cache_evictions += 1
+            self._evict_over_budget()      # still resident
         return e
+
+    def _evict_over_budget(self) -> None:
+        """LRU eviction down to the byte budget (never below one entry).
+        Run after ANY ledger growth — fresh assemblies and warm-state
+        primes alike; a converged re-probe sweep primes residuals on
+        verbatim hits without ever taking the assembly-miss path, and
+        those bytes must not silently overrun the budget."""
+        while (self._cache_used > self._cache_bytes
+               and len(self._cache) > 1):
+            _, old = self._cache.popitem(last=False)
+            self._cache_used -= self._entry_bytes(old)
+            self.cache_evictions += 1
 
     @staticmethod
     def _entry_bytes(e: _PairAssembly) -> int:
@@ -420,6 +466,7 @@ class PairCutEngine:
         e.int_w = iw[order]
         e.has_int = None                   # core classification changed
         e.core = e.core_int_a = e.core_int_b = None
+        e.residual = None                  # warm flow keyed to old structure
         e.nbytes = (members.nbytes + theta_i.nbytes + theta_j.nbytes
                     + e.int_a.nbytes + e.int_b.nbytes + e.int_w.nbytes)
         self._cache_used += e.nbytes
@@ -499,10 +546,17 @@ class PairCutEngine:
         e.nbytes += (has_int.nbytes + core.nbytes + e.core_int_a.nbytes
                      + e.core_int_b.nbytes)
 
-    def _solve_entry(self, e: _PairAssembly, i: int, j: int) -> np.ndarray:
+    def _solve_entry(self, e: _PairAssembly, i: int, j: int,
+                     allow_prime: bool = True) -> np.ndarray:
         """Cut the cached pair: singleton argmin + core flow solve over the
         cached core classification (peeled/assembled per solve — theta may
-        have been patched since)."""
+        have been patched since).  With warm starts on, the core solve
+        repairs the entry's retained residual instead of pushing the flow
+        from zero (:meth:`_solve_core_warm`) — bit-identical masks.
+        ``allow_prime=False`` withholds the warm-state investment for
+        freshly (re-)assembled entries: under membership churn or LRU
+        scan-thrash the state would be invalidated/evicted before reuse,
+        so priming is pure overhead (existing state is still repaired)."""
         k = len(e.members)
         self._ensure_core(e)
         new_assign = np.empty(k, dtype=np.int64)
@@ -511,11 +565,74 @@ class PairCutEngine:
             e.theta_i[sing] < e.theta_j[sing], i, j)
         kc = len(e.core)
         if kc:
-            side = self._solve_flow(
-                kc, e.core_int_a, e.core_int_b, e.int_w,
-                e.theta_i[e.core], e.theta_j[e.core])
+            if self._warm_on:
+                side = self._solve_core_warm(e, kc, (i, j), allow_prime)
+            else:
+                side = self._solve_flow(
+                    kc, e.core_int_a, e.core_int_b, e.int_w,
+                    e.theta_i[e.core], e.theta_j[e.core])
             new_assign[e.core] = np.where(side[:kc], i, j)
         return new_assign
+
+    def _drop_residual(self, e: _PairAssembly, key) -> None:
+        """Detach an entry's warm state; the byte budget is only touched
+        while the entry is still RESIDENT (a batched round can solve an
+        entry that a later pair's assembly already evicted — its bytes left
+        the ledger at eviction time)."""
+        if e.residual is not None:
+            nb = e.residual.nbytes
+            e.residual = None
+            e.nbytes -= nb
+            if self._cache.get(key) is e:
+                self._cache_used -= nb
+
+    def _solve_core_warm(self, e: _PairAssembly, kc: int,
+                         key: Tuple[int, int],
+                         allow_prime: bool = True) -> np.ndarray:
+        """Warm-start route for one cached core's flow solve.
+
+        Composition with the persistency peel: the shared adaptive gate
+        (:func:`peel_gate_fraction`) decides peel-vs-direct exactly as the
+        cold block solver would.  When the gate says PEEL (early, churny
+        problems), the cold peeled path runs and any retained warm state is
+        dropped — a peeled solve never materializes full flow arrays, and
+        the regime's membership churn would invalidate them next commit
+        anyway.  When the gate says direct (the converged regime, ~90%
+        survivors), the entry's ResidualCut is primed / repaired.  Either
+        way the mask is bit-identical to the cold path's."""
+        th_i = e.theta_i[e.core]
+        th_j = e.theta_j[e.core]
+        frac = peel_gate_fraction(kc, e.core_int_a, e.int_w, th_i, th_j)
+        if frac >= PEEL_GATE_FRAC:
+            self._drop_residual(e, key)
+            self.warm_cold += 1
+            return self._solve_flow(kc, e.core_int_a, e.core_int_b,
+                                    e.int_w, th_i, th_j, peel_frac=frac)
+        rc = e.residual
+        if rc is not None and rc.k == kc:
+            side, mode = rc.resolve(e.core_int_a, e.core_int_b, e.int_w,
+                                    th_i, th_j)
+            if mode == "hit":
+                self.warm_hits += 1
+            elif mode == "warm":
+                self.warm_repairs += 1
+            else:
+                self.warm_cold += 1
+            return side
+        if not allow_prime:
+            self.warm_cold += 1
+            return self._solve_flow(kc, e.core_int_a, e.core_int_b,
+                                    e.int_w, th_i, th_j, peel_frac=frac)
+        side, rc = ResidualCut.prime(kc, e.core_int_a, e.core_int_b,
+                                     e.int_w, th_i, th_j)
+        self.warm_cold += 1
+        if rc is not None:
+            e.residual = rc
+            e.nbytes += rc.nbytes
+            if self._cache.get(key) is e:
+                self._cache_used += rc.nbytes
+                self._evict_over_budget()
+        return side
 
     # ----------------------------------------------------------- pair solve
     def solve_pair(
@@ -534,14 +651,19 @@ class PairCutEngine:
         cache merely decides whether the assembly is reused/patched or
         built fresh and discarded."""
         if self._cache_on:
+            before = self.cache_misses
             e = self._cache_entry(i, j)
+            refreshed = e is not None and self.cache_misses == before
         else:
             e = self._assemble_full(i, j)
+            refreshed = False
         if e is None:
             return None
-        return e.members, self._solve_entry(e, i, j)
+        return e.members, self._solve_entry(e, i, j,
+                                            allow_prime=refreshed)
 
-    def _solve_flow(self, k, int_a, int_b, int_w, theta_i, theta_j):
+    def _solve_flow(self, k, int_a, int_b, int_w, theta_i, theta_j,
+                    peel_frac=None):
         """Min cut of the (connected-core) auxiliary flow network: nodes
         0..k-1 plus S=k, T=k+1; t-link caps theta_j (s->v) / theta_i (v->t);
         internal arcs already both directions in (int_a, int_b)."""
@@ -558,7 +680,7 @@ class PairCutEngine:
             return min_st_cut_csr_blocks(
                 np.array([0, k], dtype=np.int64), int_a, int_b, int_w,
                 theta_i, theta_j, arena=self._arena, backend="scipy",
-                presorted=True, chunk_nodes=0)
+                presorted=True, chunk_nodes=0, peel_frac=peel_frac)
         us = np.empty(2 * k + n_int, dtype=np.int64)
         vs = np.empty(2 * k + n_int, dtype=np.int64)
         caps_uv = np.empty(2 * k + n_int, dtype=np.float64)
@@ -836,12 +958,35 @@ class PairCutEngine:
         re-assembled), their connected cores are glued into one
         block-diagonal flow union (chunked to ``chunk_nodes``), and the
         per-block mask slices scatter back — value-identical to the fused
-        batch assembly (same theta, arcs, quantization)."""
+        batch assembly (same theta, arcs, quantization).
+
+        With warm starts on, REFRESHED entries (verbatim hits and
+        theta/membership patches — their member set survived since the last
+        visit) are solved per pair so each can repair its retained
+        :class:`ResidualCut` instead of re-pushing its flow inside a glued
+        union; freshly (re-)assembled entries stay on the glued cold path —
+        a fresh assembly means membership churn, which would invalidate
+        warm state before it is ever reused, so priming there is pure
+        overhead.  Masks are identical either way (the block solver's
+        per-block normalization reproduces the per-pair quantization
+        exactly, and warm masks are bit-identical to cold)."""
         B = len(dirty)
-        entries = [self._cache_entry(int(i), int(j)) for i, j in dirty]
+        entries: List[Optional[_PairAssembly]] = []
+        refreshed: List[bool] = []
+        for i, j in dirty:
+            before = self.cache_misses
+            e = self._cache_entry(int(i), int(j))
+            entries.append(e)
+            refreshed.append(e is not None and self.cache_misses == before)
+        warm_assign: Dict[int, np.ndarray] = {}
         core_sizes = np.zeros(B, dtype=np.int64)
         for b, e in enumerate(entries):
-            if e is not None:
+            if e is None:
+                continue
+            if self._warm_on and refreshed[b]:
+                i, j = dirty[b]
+                warm_assign[b] = self._solve_entry(e, int(i), int(j))
+            else:
                 self._ensure_core(e)
                 core_sizes[b] = len(e.core)
         core_ptr = np.zeros(B + 1, dtype=np.int64)
@@ -863,18 +1008,17 @@ class PairCutEngine:
             sub_ptr = np.zeros(len(sub) + 1, dtype=np.int64)
             np.cumsum(sub_sizes, out=sub_ptr[1:])
             offs = sub_ptr[:-1]
+            # Entries with sub_sizes 0 contribute nothing — pairs with no
+            # connected core, and warm-solved entries already settled above.
+            glue = [(b, e) for b, e in enumerate(sub)
+                    if e is not None and sub_sizes[b]]
             g_ia = np.concatenate(
-                [e.core_int_a.astype(np.int64) + offs[b]
-                 for b, e in enumerate(sub) if e is not None])
+                [e.core_int_a.astype(np.int64) + offs[b] for b, e in glue])
             g_ib = np.concatenate(
-                [e.core_int_b.astype(np.int64) + offs[b]
-                 for b, e in enumerate(sub) if e is not None])
-            g_iw = np.concatenate(
-                [e.int_w for e in sub if e is not None])
-            g_ti = np.concatenate(
-                [e.theta_i[e.core] for e in sub if e is not None])
-            g_tj = np.concatenate(
-                [e.theta_j[e.core] for e in sub if e is not None])
+                [e.core_int_b.astype(np.int64) + offs[b] for b, e in glue])
+            g_iw = np.concatenate([e.int_w for _, e in glue])
+            g_ti = np.concatenate([e.theta_i[e.core] for _, e in glue])
+            g_tj = np.concatenate([e.theta_j[e.core] for _, e in glue])
             side = min_st_cut_csr_blocks(
                 sub_ptr, g_ia, g_ib, g_iw, g_ti, g_tj, arena=self._arena,
                 backend="scipy" if self._use_csr else self._backend,
@@ -885,9 +1029,12 @@ class PairCutEngine:
                     lo = sub_ptr[b - blo]
                     block_side[b] = side[lo:lo + core_sizes[b]]
         out: List[Optional[Tuple[np.ndarray, np.ndarray]]] = []
-        for (i, j), e, bs in zip(dirty, entries, block_side):
+        for b, ((i, j), e, bs) in enumerate(zip(dirty, entries, block_side)):
             if e is None:
                 out.append(None)
+                continue
+            if b in warm_assign:
+                out.append((e.members, warm_assign[b]))
                 continue
             new_assign = np.empty(len(e.members), dtype=np.int64)
             sing = ~e.has_int
@@ -910,10 +1057,23 @@ class PairCutEngine:
             return False
         moved = members[changed]
         new_servers = proposed[changed]
-        old_servers = self.state.assign[moved].copy()
         if self.state.propose(moved, new_servers) < -tol:
-            self.state.commit_pending()
-            self._mark_dirty(moved, old_servers)
+            self.state.commit_pending()      # on_commit hook marks dirty
             return True
         self.state.discard_pending()
         return False
+
+    def apply_assignment(self, members: np.ndarray,
+                         new_servers: np.ndarray) -> float:
+        """Commit a re-assignment UNCONDITIONALLY (no improvement guard)
+        and keep every cache coherent via the on_commit epoch hook.  The
+        entry point for externally-imposed moves — fault-runtime orphan
+        reseeding, straggler perturbations, benchmark churn — after which
+        the engine's warm-started re-solves stay exact.  Returns the exact
+        cost delta that was applied."""
+        members = np.asarray(members, dtype=np.int64)
+        new_servers = np.asarray(new_servers, dtype=np.int64)
+        changed = new_servers != self.state.assign[members]
+        if not changed.any():
+            return 0.0
+        return self.state.commit(members[changed], new_servers[changed])

@@ -46,6 +46,7 @@ def glad_e(
     workers: int = 0,
     cache: "bool | str" = "auto",
     chunk_nodes: "int | str" = "auto",
+    warm: "bool | str" = "auto",
 ) -> GladResult:
     """Args:
       cm_new: cost model bound to the *evolved* graph G(t).
@@ -53,8 +54,10 @@ def glad_e(
       sweep: GLAD-S sweep discipline — incremental relayout defaults to the
         batched disjoint-pair rounds (block-diagonal round solver), since
         the changed-vertex filter wants wall time, not the Alg.-1 order.
-      workers / cache / chunk_nodes: engine knobs, passed through to
-        :func:`glad_s` (assembly caching + chunked/parallel block solves).
+      workers / cache / chunk_nodes / warm: engine knobs, passed through to
+        :func:`glad_s` (assembly caching, chunked/parallel block solves,
+        warm-started incremental re-solves).  GLAD-E's active-mask workload
+        is exactly the regime both 'auto' policies enable themselves for.
     """
     new_graph = cm_new.graph
     active = changed_vertices(old_graph, new_graph, assign_old)
@@ -78,4 +81,5 @@ def glad_e(
     return glad_s(
         cm_new, R=R, init=assign, active=active, seed=seed, backend=backend,
         sweep=sweep, workers=workers, cache=cache, chunk_nodes=chunk_nodes,
+        warm=warm,
     )

@@ -177,6 +177,7 @@ def glad_s(
     cache: "bool | str" = "auto",
     cache_bytes: int = 256 << 20,
     chunk_nodes: "int | str" = "auto",
+    warm: "bool | str" = "auto",
 ) -> GladResult:
     """Paper Algorithm 1.
 
@@ -208,6 +209,16 @@ def glad_s(
       cache_bytes: LRU budget for the AssemblyCache.
       chunk_nodes: bound on one glued block-diagonal flow union ('auto' =
         engine default; 0 = single glued pass per round).
+      warm: warm-start incremental max-flow — retain each cached pair's
+        flow/residual arrays (maxflow.ResidualCut, stored on its
+        AssemblyCache entry under the same per-vertex epochs) and repair
+        them on re-solve (drain over-saturated arcs, augment the delta)
+        instead of re-pushing the whole flow.  'auto' follows the cache
+        policy; an adaptive gate falls back to the cold (peeled) path
+        whenever the touched fraction is large, so warm='auto' is never a
+        regression.  Masks are bit-identical warm or cold — the minimal
+        source side is unique per quantized problem — so trajectories are
+        unchanged (differential-fuzz + golden-fixture pinned).
     """
     rng = np.random.default_rng(seed)
     net, graph = cm.net, cm.graph
@@ -230,7 +241,7 @@ def glad_s(
     eng = PairCutEngine(cm, assign, active=active, backend=backend,
                         workers=workers, worker_mode=worker_mode,
                         cache=cache, cache_bytes=cache_bytes,
-                        chunk_nodes=chunk_nodes)
+                        chunk_nodes=chunk_nodes, warm=warm)
     history = [eng.state.total]
     if sweep == "single":
         iters, accepted = _sweep_single(

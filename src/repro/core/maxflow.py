@@ -449,6 +449,290 @@ def peel_forced(
     return alive, src
 
 
+#: Adaptive persistency-gate threshold: skip the peel when the initial
+#: forced fraction of a (sub)problem falls below this — near convergence
+#: almost everything survives and the peel's quantize/compact passes are
+#: pure overhead.  Shared by the block solver and the warm-start router so
+#: both make the same peel-vs-direct decision for the same problem.
+PEEL_GATE_FRAC = 0.25
+
+
+def peel_gate_fraction(k: int, int_a: np.ndarray, int_w: np.ndarray,
+                       theta_i: np.ndarray, theta_j: np.ndarray) -> float:
+    """Fraction of nodes the persistency peel would force IMMEDIATELY (one
+    cheap float capsum pass — the first peel round, no cascade).  This is
+    the adaptive gate's estimate: below :data:`PEEL_GATE_FRAC` the peel is
+    skipped and the problem solved directly.  Scale-invariant per block
+    (gap > capsum is preserved by any positive per-block rescaling)."""
+    if k == 0:
+        return 0.0
+    capf = np.bincount(int_a, weights=int_w, minlength=k)
+    gapf = np.abs(np.asarray(theta_j, np.float64)
+                  - np.asarray(theta_i, np.float64))
+    return float(np.count_nonzero(gapf > capf)) / k
+
+
+class ResidualCut:
+    """Warm-startable min s-t cut state over one fixed symmetric flow CSR.
+
+    Retains the integer capacities and a maximum flow of the LAST solve of
+    one auxiliary problem (fixed structure: same node count, same internal
+    arcs — the engine's membership-intact regime).  A re-solve with
+    perturbed capacities repairs the retained flow instead of pushing the
+    whole flow again from zero:
+
+      1. **re-quantize** the new float capacities exactly like
+         :func:`min_st_cut_csr` (same cmax/scale/rint/clip op order), so the
+         integer problem is the one the cold path would solve;
+      2. **drain** over-saturated arcs: flow above the new capacity is
+         cancelled along its own source->u and v->sink flow-carrying paths
+         (integer arithmetic; the flow stays feasible and conservative, and
+         flow cycles encountered on a walk are cancelled outright);
+      3. **augment**: one scipy max-flow pass over the RESIDUAL network
+         tops the repaired flow back up to maximal.  Near convergence the
+         repaired flow is already maximal and the pass degenerates to a
+         single BFS — this is where the warm start wins over re-pushing
+         the full flow value.
+
+    Exactness: the minimal source side of a min cut is UNIQUE for a given
+    integer capacity vector (it is the residual reachability of ANY maximum
+    flow — the lattice-minimum cut), so the warm mask is bit-identical to
+    the cold path's for every perturbation sequence.  The differential fuzz
+    harness (tests/test_warm_start.py) pins this against both the cold
+    scipy path and the pure-python Dinic oracle.
+    """
+
+    __slots__ = ("k", "n", "s", "t", "indptr", "cols", "cap", "flow")
+
+    #: Warm-repair gate: beyond this touched-entry fraction the drain +
+    #: delta-augment repair stops beating a cold re-push, so ``resolve``
+    #: resets the flow and re-solves from zero (same structure, no
+    #: re-assembly) instead.
+    WARM_GATE_FRAC = 0.25
+
+    def __init__(self, k, n, s, t, indptr, cols, cap):
+        self.k = int(k)
+        self.n = int(n)
+        self.s = int(s)
+        self.t = int(t)
+        self.indptr = np.ascontiguousarray(indptr)
+        self.cols = np.ascontiguousarray(cols)
+        self.cap = cap
+        self.flow = np.zeros(len(cap), dtype=np.int64)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.indptr.nbytes + self.cols.nbytes
+                + self.cap.nbytes + self.flow.nbytes)
+
+    def _row_of(self, e: int) -> int:
+        return int(np.searchsorted(self.indptr, e, side="right")) - 1
+
+    def _rev_of(self, e: int, row_of_e: int) -> int:
+        """Index of entry (v, u) given entry ``e`` = (u, v).  The structure
+        is symmetric and canonical (columns ascending within each row), so
+        the reverse entry is one binary search in row v — O(log deg) per
+        LOOKED-UP arc, instead of an O(nnz log nnz) transpose permutation
+        built eagerly at prime time (the drain only ever touches the
+        handful of arcs on its cancellation paths)."""
+        v = int(self.cols[e])
+        lo, hi = int(self.indptr[v]), int(self.indptr[v + 1])
+        return lo + int(np.searchsorted(self.cols[lo:hi], row_of_e))
+
+    # -------------------------------------------------------------- internals
+    @staticmethod
+    def _quantize(caps: np.ndarray) -> np.ndarray:
+        """Integer capacities with :func:`min_st_cut_csr`'s exact op order
+        (multiply / rint / clip / int32 cast), widened for flow arithmetic.
+        Clobbers ``caps``."""
+        cmax = float(caps.max()) if len(caps) else 1.0
+        scale = _SCALE / max(cmax, 1e-30)
+        np.multiply(caps, scale, out=caps)
+        np.rint(caps, out=caps)
+        np.maximum(caps, 0, out=caps)
+        return caps.astype(np.int32).astype(np.int64)
+
+    @classmethod
+    def prime(cls, k, int_a, int_b, int_w, theta_i, theta_j):
+        """Cold solve that RETAINS its flow: assemble the symmetric CSR,
+        quantize, push the max flow once, and return ``(side, state)``.
+        ``side`` is bit-identical to the cold :func:`min_st_cut_csr` mask.
+        Returns ``(side, None)`` if scipy's flow matrix stops sharing the
+        input sparsity (internals drift) — the caller then stays cold."""
+        n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+            k, int_a, int_b, int_w, theta_i, theta_j, presorted=True)
+        rc = cls(k, n, s, t, indptr.copy(), cols.copy(),
+                 cls._quantize(caps))
+        side = rc._augment_and_mask()
+        if side is None:                       # pragma: no cover - drift
+            n2, s2, t2, ip, co, ca = assemble_symmetric_flow_csr(
+                k, int_a, int_b, int_w, theta_i, theta_j, presorted=True)
+            _, full = min_st_cut_csr(n2, s2, t2, ip, co, ca)
+            return full[:k], None
+        return side, rc
+
+    def resolve(self, int_a, int_b, int_w, theta_i, theta_j):
+        """Warm re-solve with perturbed capacities on the SAME structure.
+
+        Returns ``(side, mode)`` where mode is ``'hit'`` (integer caps
+        unchanged — mask-only), ``'warm'`` (drain + delta augment) or
+        ``'cold'`` (touched fraction beyond :data:`WARM_GATE_FRAC` — flow
+        reset and re-pushed, still without re-building the structure).
+        ``side`` is bit-identical to a cold solve in every mode."""
+        k = len(np.asarray(theta_i))
+        n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+            k, int_a, int_b, int_w, theta_i, theta_j, presorted=True)
+        # Full adjacency comparison, not just sizes: a same-degree member
+        # swap preserves n and nnz but reorders columns, and applying the
+        # new caps against the retained structure would return a silently
+        # wrong mask.  O(nnz) — noise next to the assembly just done.
+        if (n != self.n or len(cols) != len(self.cols)
+                or not np.array_equal(cols, self.cols)
+                or not np.array_equal(indptr, self.indptr)):
+            raise ValueError("ResidualCut.resolve: structure changed — "
+                             "re-prime instead")
+        new_cap = self._quantize(caps)
+        touched = int(np.count_nonzero(new_cap != self.cap))
+        self.cap = new_cap
+        if touched == 0:
+            # The retained flow is still a maximum flow of the identical
+            # integer problem; only the mask BFS is needed.
+            side = _bfs_source_side(self.indptr, self.cols,
+                                    self.cap - self.flow, self.n, self.s)
+            return side[:self.k], "hit"
+        if touched > self.WARM_GATE_FRAC * len(new_cap):
+            self.flow[:] = 0
+            mode = "cold"
+        else:
+            self._drain()
+            mode = "warm"
+        side = self._augment_and_mask()
+        if side is None:                       # pragma: no cover - drift
+            raise RuntimeError("scipy flow sparsity drifted mid-resolve")
+        return side, mode
+
+    def _augment_and_mask(self):
+        """Top the retained (feasible) flow up to maximal via one scipy
+        pass over the residual network, then return the minimal-source-side
+        mask over the first ``k`` nodes.  Residual capacities fit int32 by
+        construction (cap <= _SCALE, |flow| <= _SCALE)."""
+        res_caps = (self.cap - self.flow).astype(np.int32)
+        try:
+            mat = csr_matrix.__new__(csr_matrix)
+            mat.data = res_caps
+            mat.indices = self.cols
+            mat.indptr = self.indptr
+            mat._shape = (self.n, self.n)
+        except Exception:  # pragma: no cover - scipy internals drift
+            mat = csr_matrix((res_caps, self.cols, self.indptr),
+                             shape=(self.n, self.n))
+        res = _scipy_maxflow(mat, self.s, self.t)
+        flow = res.flow
+        if not (np.array_equal(flow.indptr, self.indptr)
+                and np.array_equal(flow.indices, self.cols)):
+            return None                        # pragma: no cover - drift
+        self.flow += flow.data
+        side = _bfs_source_side(self.indptr, self.cols,
+                                self.cap - self.flow, self.n, self.s)
+        return side[:self.k]
+
+    def _drain(self):
+        """Restore feasibility after capacity decreases: for every entry
+        whose retained flow exceeds its new capacity, cancel the excess
+        along the flow's own source->tail and head->sink paths (each
+        reduction keeps the flow conservative and nonnegative; flow cycles
+        met on a walk are cancelled outright, which only removes
+        circulation)."""
+        over = np.flatnonzero(self.flow > self.cap)
+        for e in over:
+            e = int(e)
+            u, v = self._row_of(e), int(self.cols[e])
+            while self.flow[e] > self.cap[e]:
+                # The backward walk may run into v (a flow cycle through e
+                # itself): seed it with v so that case cancels THROUGH e.
+                back = self._flow_walk(u, self.s, incoming=True,
+                                       e_entry=(e, u), cross=({v: 0}, []))
+                if back is None:
+                    continue                   # cancelled a cycle; retry
+                carriers, nodes = back
+                # The forward walk must not touch any backward-path node:
+                # a shared node (hence any shared arc) closes a cycle
+                # through e — cancel it instead of double-reducing the
+                # shared arc below (which would drive its flow negative).
+                fwd = self._flow_walk(v, self.t, incoming=False,
+                                      e_entry=(e, u),
+                                      cross=(nodes, carriers))
+                if fwd is None:
+                    continue
+                fcarriers, _ = fwd
+                # back + e + fwd is now a SIMPLE path (node-disjoint walks,
+                # so every arc appears exactly once) — the uniform
+                # reduction below keeps the flow conservative and >= 0.
+                m = int(self.flow[e] - self.cap[e])
+                for p, _ in carriers:
+                    m = min(m, int(self.flow[p]))
+                for p, _ in fcarriers:
+                    m = min(m, int(self.flow[p]))
+                for p, r in carriers + [(e, u)] + fcarriers:
+                    self.flow[p] -= m
+                    self.flow[self._rev_of(p, r)] += m
+
+    def _cancel_cycle(self, cyc) -> None:
+        """Cancel a directed flow cycle (pure circulation: removing it
+        changes neither feasibility nor the flow value; when the cycle
+        runs through the over-saturated entry it also reduces its
+        excess).  Every cycle arc carries flow >= 1, so each cancellation
+        zeroes at least one entry and retries terminate."""
+        m = min(int(self.flow[p]) for p, _ in cyc)
+        for p, r in cyc:
+            self.flow[p] -= m
+            self.flow[self._rev_of(p, r)] += m
+
+    def _flow_walk(self, start: int, target: int, incoming: bool,
+                   e_entry, cross):
+        """Walk flow-carrying arcs from ``start`` to ``target`` (backward
+        toward the source when ``incoming``, forward toward the sink
+        otherwise).  Returns ``(carriers, nodes)``: the path's
+        flow-carrying forward-direction entries as ``(entry, entry_row)``
+        pairs plus the visited-node -> walk-index map; or None after
+        cancelling a flow cycle found on the way (the caller retries).
+
+        ``cross = (other_nodes, other_carriers)`` is the companion walk's
+        node map and carrier prefix: stepping onto one of its nodes closes
+        a directed cycle THROUGH the over-saturated entry ``e_entry``
+        (other-prefix -> e -> own-path), which is cancelled outright —
+        this is what keeps the final back + e + fwd composition a SIMPLE
+        path in which no arc is reduced twice."""
+        flow, cols, indptr = self.flow, self.cols, self.indptr
+        path: list = []
+        nodes = {start: 0}
+        x = start
+        while x != target:
+            lo, hi = int(indptr[x]), int(indptr[x + 1])
+            seg = flow[lo:hi]
+            cand = np.flatnonzero(seg < 0 if incoming else seg > 0)
+            # Conservation guarantees a flow-carrying arc exists at every
+            # intermediate node of a flow path (start included: it carries
+            # the over-saturated entry's flow).
+            e2 = lo + int(cand[0])
+            nxt = int(cols[e2])
+            # The forward-direction entry actually carrying the flow: for
+            # a backward step it is (nxt -> x), i.e. e2's reverse.
+            carrier = (self._rev_of(e2, x), nxt) if incoming else (e2, x)
+            if nxt in nodes:
+                self._cancel_cycle(path[nodes[nxt]:] + [carrier])
+                return None
+            other_nodes, other_carriers = cross
+            if nxt in other_nodes:
+                self._cancel_cycle(other_carriers[:other_nodes[nxt]]
+                                   + [e_entry] + path + [carrier])
+                return None
+            nodes[nxt] = len(path) + 1
+            path.append(carrier)
+            x = nxt
+        return path, nodes
+
+
 def _chunk_block_spans(block_ptr: np.ndarray, chunk_nodes: int):
     """Greedily group consecutive blocks into chunks of <= ``chunk_nodes``
     nodes (a single block larger than the budget gets its own chunk).
@@ -479,8 +763,14 @@ def min_st_cut_csr_blocks(
     worker_mode: str = "thread",
     presorted: bool = False,
     chunk_nodes: int = 0,
+    peel_frac: "float | None" = None,
 ) -> np.ndarray:
     """Solve all blocks of a block-diagonal auxiliary flow problem at once.
+
+    ``peel_frac``: the caller's precomputed :func:`peel_gate_fraction` for
+    THESE inputs (single-block callers that already ran the gate pass it
+    down so it is not recomputed).  The fraction is scale-invariant per
+    block, so pre-normalization values are valid.
 
     Block b's nodes are the global ids ``block_ptr[b]:block_ptr[b+1]``;
     ``int_a/int_b/int_w`` are its internal arcs in global ids (both
@@ -549,12 +839,9 @@ def min_st_cut_csr_blocks(
         # overhead — take the direct float path, which solves the exact
         # same integer problem.  Early rounds force the large majority and
         # the peel pays for itself many times over.
-        frac = 0.0
-        if nc:
-            capf = np.bincount(int_a, weights=int_w, minlength=nc)
-            gapf = np.abs(theta_j - theta_i)
-            frac = float(np.count_nonzero(gapf > capf)) / nc
-        if frac < 0.25:
+        frac = (peel_frac if peel_frac is not None else
+                peel_gate_fraction(nc, int_a, int_w, theta_i, theta_j))
+        if frac < PEEL_GATE_FRAC:
             n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
                 nc, int_a, int_b, int_w, theta_i, theta_j, arena=arena,
                 presorted=True)
@@ -723,7 +1010,25 @@ def min_st_cut_csr_many(
     cols, caps)`` (the scipy fast path), optionally over a ``workers``
     thread/process pool — the CSR counterpart of :func:`min_st_cut_many`,
     used by the chunked block solver's fan-out.  ``caps`` arrays are
-    clobbered; results are returned in input order."""
+    clobbered; results are returned in input order.
+
+    The problems must be INDEPENDENTLY OWNED: arena-backed assembly views
+    share one scratch buffer, so accumulating several
+    :func:`assemble_symmetric_flow_csr` results built on the same arena
+    silently turns every problem into the last one (and the in-place
+    capacity scaling clobbers across problems).  That aliasing is detected
+    here and raised loudly — in any worker mode, since serial execution
+    corrupts the same way, just one solve later."""
+    caps = [np.asarray(p[5]) for p in problems]
+    for a in range(len(caps)):
+        for b in range(a + 1, len(caps)):
+            # bounds-based check: exact for the contiguous slices the
+            # assembly produces, and cheap enough to run unconditionally
+            if np.may_share_memory(caps[a], caps[b]):
+                raise ValueError(
+                    "min_st_cut_csr_many: problems share capacity memory "
+                    f"(problems {a} and {b}) — assemble each problem into "
+                    "owned arrays (no shared arena) before batching")
     if workers and workers > 1 and len(problems) > 1:
         return _pool_map(_solve_one_cut_csr, problems, workers, worker_mode)
     return [_solve_one_cut_csr(p) for p in problems]

@@ -99,18 +99,21 @@ def data_partition(
     workers: int = 0,
     cache: "bool | str" = "auto",
     chunk_nodes: "int | str" = "auto",
+    warm: "bool | str" = "auto",
 ) -> DevicePartition:
     """GLAD-S over a pod-shaped EdgeNetwork -> shard_map-ready partition.
 
     Uses the batched disjoint-pair sweep — the placement bridge wants wall
     time, not the paper's exact Alg.-1 trajectory.  ``workers`` /
-    ``cache`` / ``chunk_nodes`` tune the engine's block fan-out and
-    cross-round assembly caching (see :func:`repro.core.glad_s.glad_s`)."""
+    ``cache`` / ``chunk_nodes`` / ``warm`` tune the engine's block fan-out,
+    cross-round assembly caching and warm-started incremental re-solves
+    (see :func:`repro.core.glad_s.glad_s`)."""
     if net is None:
         net = pod_edge_network(num_parts, graph.n, pods=pods, seed=seed)
     cm = CostModel(net, graph, gnn)
     res = glad_s(cm, R=R, seed=seed, init=init, sweep="batched",
-                 workers=workers, cache=cache, chunk_nodes=chunk_nodes)
+                 workers=workers, cache=cache, chunk_nodes=chunk_nodes,
+                 warm=warm)
     return partition_from_assign(graph, res.assign, num_parts, res.factors)
 
 
@@ -225,11 +228,13 @@ def rebalance(
     workers: int = 0,
     cache: "bool | str" = "auto",
     chunk_nodes: "int | str" = "auto",
+    warm: "bool | str" = "auto",
 ) -> DevicePartition:
     """Straggler mitigation: degrade the slow server's compute coefficients
     and run an incremental re-layout warm-started from the current one."""
     net2 = net.degrade(straggler, slow_factor)
     cm = CostModel(net2, graph, gnn)
     res = glad_s(cm, init=part.assign, R=net2.m, seed=seed, sweep="batched",
-                 workers=workers, cache=cache, chunk_nodes=chunk_nodes)
+                 workers=workers, cache=cache, chunk_nodes=chunk_nodes,
+                 warm=warm)
     return partition_from_assign(graph, res.assign, part.num_parts, res.factors)

@@ -95,16 +95,21 @@ class ElasticCoordinator:
     def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload,
                  part: DevicePartition, workers: int = 0,
                  cache: "bool | str" = "auto",
-                 chunk_nodes: "int | str" = "auto"):
+                 chunk_nodes: "int | str" = "auto",
+                 warm: "bool | str" = "auto"):
         self.net = net
         self.graph = graph
         self.gnn = gnn
         self.part = part
         self.events: List[RelayoutEvent] = []
-        # Engine knobs for the GLAD re-layouts (assembly caching + chunked
-        # block fan-out) — relayout latency is the control plane's budget.
+        # Engine knobs for the GLAD re-layouts (assembly caching, chunked
+        # block fan-out, warm-started incremental re-solves) — relayout
+        # latency is the control plane's budget.  The warm-started
+        # relayouts carry no active mask, so cache/warm 'auto' resolve OFF
+        # there; pass cache=True, warm=True to retain flow state across a
+        # coordinator's repeated relayouts of the same fleet.
         self._glad_opts = dict(workers=workers, cache=cache,
-                               chunk_nodes=chunk_nodes)
+                               chunk_nodes=chunk_nodes, warm=warm)
 
     def on_failure(self, dead: List[int], seed: int = 0) -> DevicePartition:
         """Node loss: disconnect dead servers, re-layout incrementally

@@ -1,11 +1,16 @@
-"""Golden-trajectory regression: a committed GLAD-S run on a small
-deterministic instance.
+"""Golden-trajectory regression: committed GLAD runs on small
+deterministic instances.
 
-The sequential sweep must reproduce the fixture's full iteration history
-and final assignment BIT-FOR-BIT (the incremental engine's trajectory
-guarantee); the batched sweeps — per-pair and block-diagonal — must reach
-the same final cost.  Regenerate the fixture only for a deliberate
-trajectory-semantics change (see the inline recipe below).
+The sequential sweep must reproduce the GLAD-S fixture's full iteration
+history and final assignment BIT-FOR-BIT (the incremental engine's
+trajectory guarantee); the batched sweeps — per-pair and block-diagonal —
+must reach the same final cost.  The GLAD-E fixture pins a masked
+relayout (evolved graph + drifted carried-over layout + active mask, the
+glad_e inner call) bit-for-bit under EVERY {cache on/off} x {warm on/off}
+regime, so trajectory drift from assembly caching or warm-started
+max-flow re-solves can never land silently.  Regenerate a fixture only
+for a deliberate trajectory-semantics change (see the inline recipes
+below).
 """
 import json
 import pathlib
@@ -14,11 +19,13 @@ import numpy as np
 import pytest
 
 from repro.core.cost import CostModel, workload_for
+from repro.core.evolution import apply_delta, changed_vertices, sample_delta
 from repro.core.glad_s import glad_s
 from repro.graphs.datagraph import synthetic_siot
 from repro.graphs.edgenet import build_edge_network
 
 FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "golden_glad_s.json"
+FIXTURE_E = pathlib.Path(__file__).parent / "fixtures" / "golden_glad_e.json"
 
 
 @pytest.fixture(scope="module")
@@ -49,6 +56,71 @@ def test_batched_sweeps_reach_golden_final_cost(golden, round_solver):
     fix, cm, seed = golden
     res = glad_s(cm, seed=seed, sweep="batched", round_solver=round_solver)
     assert res.cost == pytest.approx(fix["final_cost"], rel=1e-12)
+
+
+# ------------------------------------------------- GLAD-E masked relayout
+@pytest.fixture(scope="module")
+def golden_e():
+    """Rebuild the fixture's scenario.  REGENERATION RECIPE: run this
+    builder, then a masked batched glad_s with (cache=False, warm=False),
+    and dump params/history/history_hex/final_cost(.hex)/iterations/
+    accepted/assign to fixtures/golden_glad_e.json — but only for a
+    DELIBERATE trajectory-semantics change."""
+    with open(FIXTURE_E) as f:
+        fix = json.load(f)
+    p = fix["params"]
+    g0 = synthetic_siot(n=p["n"], target_links=p["target_links"],
+                        seed=p["graph_seed"])
+    net = build_edge_network(g0, p["m"], seed=p["net_seed"])
+    cm0 = CostModel(net, g0, workload_for(p["gnn_model"], p["in_dim"]))
+    base = glad_s(cm0, seed=p["base_seed"], sweep="single")
+    delta = sample_delta(g0, pct_links=p["delta_pct_links"],
+                         pct_vertices=p["delta_pct_vertices"],
+                         seed=p["delta_seed"])
+    g1 = apply_delta(g0, delta)
+    cm1 = CostModel(net, g1, workload_for(p["gnn_model"], p["in_dim"]))
+    # Carried-over layout with drift: pad the inserted vertices, scramble
+    # a slice (the layout served while the graph evolved).
+    rng = np.random.default_rng(p["scramble_seed"])
+    assign = np.zeros(g1.n, dtype=np.int64)
+    assign[:g0.n] = base.assign
+    if g1.n > g0.n:
+        assign[g0.n:] = rng.integers(0, p["m"], size=g1.n - g0.n)
+    scr = rng.uniform(size=g1.n) < p["scramble_frac"]
+    assign[scr] = rng.integers(0, p["m"], size=int(scr.sum()))
+    active = changed_vertices(g0, g1, assign)
+    active |= scr
+    for v in np.flatnonzero(scr):
+        active[g1.indices[g1.indptr[v]:g1.indptr[v + 1]]] = True
+    return fix, cm1, assign, active, p
+
+
+@pytest.mark.parametrize("cache,warm", [(False, False), (True, False),
+                                        (True, True), (True, "auto")])
+def test_glad_e_masked_relayout_reproduces_golden_bit_for_bit(
+        golden_e, cache, warm):
+    """Every cache x warm regime must reproduce the SAME committed masked
+    relayout — full history and final assignment, bit for bit."""
+    fix, cm1, assign, active, p = golden_e
+    res = glad_s(cm1, R=p["m"], init=assign.copy(), active=active,
+                 seed=p["glad_seed"], sweep="batched", cache=cache,
+                 warm=warm)
+    assert res.iterations == fix["iterations"]
+    assert res.accepted == fix["accepted"]
+    got_hex = [np.float64(h).hex() for h in res.history]
+    assert got_hex == fix["history_hex"]
+    assert np.float64(res.cost).hex() == fix["final_cost_hex"]
+    np.testing.assert_array_equal(res.assign, np.array(fix["assign"]))
+
+
+def test_glad_e_golden_fixture_is_self_consistent(golden_e):
+    fix, cm1, _, _, _ = golden_e
+    assert cm1.total(np.array(fix["assign"])) == pytest.approx(
+        fix["final_cost"], rel=1e-12)
+    h = np.array(fix["history"])
+    assert (np.diff(h) <= 1e-9).all()
+    assert h[-1] == pytest.approx(fix["final_cost"], rel=1e-12)
+    assert fix["accepted"] >= 2      # the fixture actually moves vertices
 
 
 def test_golden_fixture_is_self_consistent(golden):

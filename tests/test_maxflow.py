@@ -307,6 +307,100 @@ def test_chunked_block_solve_mask_identical(seed):
     np.testing.assert_array_equal(whole, pooled)
 
 
+def test_peel_zero_capacity_internal_arcs_mask_identical():
+    """Zero-capacity internal arcs (quantization can round small weights to
+    0, and evolution can zero a link) must not confuse the peel: a zero arc
+    adds nothing to capsum, forces across it like any other, and the
+    composed mask stays bit-identical to the unpeeled solve."""
+    rng = np.random.default_rng(17)
+    for trial in range(10):
+        k, ia, ib, iw, ti, tj = _random_aux_block(rng)
+        ia, ib, iw = _sorted_arcs(ia, ib, iw)
+        if len(iw):
+            # zero a subset of undirected links (both directed copies
+            # share the same (lo, hi) weight by construction)
+            lo = np.minimum(ia, ib)
+            hi = np.maximum(ia, ib)
+            keys = lo * k + hi
+            kill = rng.uniform(size=len(iw)) < 0.4
+            iw = np.where(np.isin(keys, keys[kill]), 0.0, iw)
+        boost = rng.uniform(5.0, 50.0, size=k)       # engage the peel gate
+        ti2, tj2 = ti * boost, tj * boost
+        bp = np.array([0, k], dtype=np.int64)
+        peeled = min_st_cut_csr_blocks(bp, ia, ib, iw, ti2, tj2,
+                                       backend="scipy", presorted=True)
+        n, s, t, ip, co, ca = assemble_symmetric_flow_csr(
+            k, ia, ib, iw, ti2.copy(), tj2.copy(), presorted=True)
+        _, ref = min_st_cut_csr(n, s, t, ip, co, ca)
+        np.testing.assert_array_equal(peeled, ref[:k], err_msg=str(trial))
+
+
+def test_peel_fully_forced_core_skips_scipy_entirely():
+    """A cascade that settles EVERY node leaves an empty scipy problem; the
+    block solver must return the forced mask directly and that mask must
+    match the unpeeled reference (the 'empty flow problem' edge case)."""
+    int_a = np.array([0, 1, 1, 2])
+    int_b = np.array([1, 0, 2, 1])
+    int_w = np.array([10.0, 10.0, 10.0, 10.0])
+    th_i = np.array([0.0, 30.0, 100.0])
+    th_j = np.array([100.0, 0.0, 0.0])
+    alive, src = peel_forced(3, int_a, int_b, int_w.copy(),
+                             th_i.astype(np.int64).copy(),
+                             th_j.astype(np.int64).copy())
+    assert not alive.any()                      # peel settled every node
+    bp = np.array([0, 3], dtype=np.int64)
+    side = min_st_cut_csr_blocks(bp, int_a, int_b, int_w, th_i, th_j,
+                                 backend="scipy", presorted=True)
+    n, s, t, ip, co, ca = assemble_symmetric_flow_csr(
+        3, int_a, int_b, int_w, th_i.copy(), th_j.copy(), presorted=True)
+    _, ref = min_st_cut_csr(n, s, t, ip, co, ca)
+    np.testing.assert_array_equal(side, ref[:3])
+    np.testing.assert_array_equal(side, [True, False, False])
+
+
+def test_chunked_block_solve_process_pool_mask_identical():
+    """The chunked fan-out's PROCESS pool (chunk-problem tuples pickled to
+    workers) must reproduce the serial masks bit-for-bit — the dedicated
+    process-path coverage the thread-only test left open."""
+    rng = np.random.default_rng(23)
+    blocks = [_random_aux_block(rng) for _ in range(8)]
+    bp, ia, ib, iw, ti, tj = concat_flow_blocks(blocks)
+    ia, ib, iw = _sorted_arcs(ia, ib, iw)
+    boost = rng.uniform(5.0, 50.0, size=len(ti))    # engage peel + chunks
+    ti, tj = ti * boost, tj * boost
+    args = (bp, ia, ib, iw, ti, tj)
+    serial = min_st_cut_csr_blocks(*args, backend="scipy", presorted=True,
+                                   chunk_nodes=10)
+    pooled = min_st_cut_csr_blocks(*args, backend="scipy", presorted=True,
+                                   chunk_nodes=10, workers=2,
+                                   worker_mode="process")
+    np.testing.assert_array_equal(serial, pooled)
+
+
+def test_min_st_cut_csr_many_rejects_aliased_problems():
+    """Batching arena-backed assembly views is a silent-corruption footgun:
+    every problem aliases the arena's last contents and the in-place cap
+    scaling clobbers across problems.  The batch API must refuse loudly."""
+    rng = np.random.default_rng(29)
+    arena = CutArena()
+    specs, problems = [], []
+    for _ in range(3):
+        k, ia, ib, iw, ti, tj = _random_aux_block(rng)
+        ia, ib, iw = _sorted_arcs(ia, ib, iw)
+        specs.append((k, ia, ib, iw, ti, tj))
+        problems.append(assemble_symmetric_flow_csr(
+            k, ia, ib, iw, ti, tj, arena=arena, presorted=True))
+    with pytest.raises(ValueError, match="share capacity memory"):
+        min_st_cut_csr_many(problems)
+    # The same problems assembled into owned arrays are accepted (and the
+    # tuples survive the process-pool pickling round trip).
+    owned = [assemble_symmetric_flow_csr(*s, presorted=True) for s in specs]
+    results = min_st_cut_csr_many(owned, workers=2, worker_mode="process")
+    assert len(results) == 3
+    for (v, side), (k, *_rest) in zip(results, specs):
+        assert side[k] and not side[k + 1]        # S source-side, T not
+
+
 def test_min_st_cut_csr_many_matches_serial():
     """The CSR worker pool (thread and process) returns the same cuts in
     input order as serial execution; prescaled problems round-trip too."""

@@ -1,0 +1,461 @@
+"""Differential fuzz harness for the warm-start incremental max-flow.
+
+The warm solver's ONLY contract is bit-identity: for any perturbation
+sequence, the warm-started source-side mask equals the cold
+``min_st_cut_csr`` mask AND the pure-python Dinic oracle's mask on the same
+quantized integer problem (the minimal source side of a min cut is unique,
+so every correct solver must return the same bits).  The harness drives
+random capacity / t-link / membership perturbation sequences through one
+retained :class:`ResidualCut` and checks all three solvers on every step;
+heavier sequences run behind the ``slow`` marker.
+
+Engine-level tests pin the same property end to end: GLAD trajectories are
+bit-identical under {cache on/off} x {warm on/off}, warm re-solves after
+external perturbations reproduce cold costs exactly, and the warm state
+obeys the cache's byte ledger.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.engine import PairCutEngine, round_robin_rounds
+from repro.core.glad_s import glad_s
+from repro.core.maxflow import (PEEL_GATE_FRAC, Dinic, ResidualCut,
+                                assemble_symmetric_flow_csr, min_st_cut_csr,
+                                peel_gate_fraction)
+from repro.graphs.datagraph import synthetic_siot
+from repro.graphs.edgenet import build_edge_network
+
+
+# --------------------------------------------------------------- generators
+def _random_universe(rng, k_max=16):
+    """A random GLAD-shaped auxiliary 'universe': canonical undirected
+    internal links (both directed arcs, row-grouped ascending) and
+    nonnegative t-links — the structural contract of the engine's gather."""
+    k = int(rng.integers(2, k_max))
+    n_links = int(rng.integers(1, 3 * k))
+    a = rng.integers(0, k, size=n_links)
+    b = rng.integers(0, k, size=n_links)
+    keep = a != b
+    a, b = a[keep], b[keep]
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    key, inv = np.unique(lo * k + hi, return_inverse=True)
+    w = np.bincount(inv, weights=rng.uniform(0.05, 4.0, size=len(a)),
+                    minlength=len(key))
+    lo, hi = key // k, key % k
+    links = np.stack([lo, hi], axis=1)
+    ti = rng.uniform(0.0, 5.0, size=k).round(4)
+    tj = rng.uniform(0.0, 5.0, size=k).round(4)
+    return k, links, w, ti, tj
+
+
+def _restrict(k, links, w, ti, tj, member_mask):
+    """Restrict the universe to ``member_mask`` (contiguous relabel) and
+    emit canonical both-direction arcs — models a membership change."""
+    sel = np.flatnonzero(member_mask)
+    loc = np.full(k, -1, dtype=np.int64)
+    loc[sel] = np.arange(len(sel))
+    keep = member_mask[links[:, 0]] & member_mask[links[:, 1]]
+    lo = loc[links[keep, 0]]
+    hi = loc[links[keep, 1]]
+    ww = w[keep]
+    ia = np.concatenate([lo, hi])
+    ib = np.concatenate([hi, lo])
+    iw = np.concatenate([ww, ww])
+    order = np.lexsort((ib, ia))
+    return (len(sel), ia[order], ib[order], iw[order],
+            ti[sel].copy(), tj[sel].copy())
+
+
+def _cold_mask(k, ia, ib, iw, ti, tj):
+    """The cold reference: direct symmetric-CSR assembly + scipy solve."""
+    n, s, t, ip, co, ca = assemble_symmetric_flow_csr(
+        k, ia, ib, iw, ti.copy(), tj.copy(), presorted=True)
+    _, side = min_st_cut_csr(n, s, t, ip, co, ca)
+    return side[:k]
+
+
+def _dinic_mask(k, ia, ib, iw, ti, tj):
+    """Pure-python oracle ON THE QUANTIZED PROBLEM: replicate the cold
+    path's integer scaling, then solve with float-capacity Dinic (exact on
+    integers) and return its residual-reachability mask — the same unique
+    minimal source side every correct solver must find."""
+    caps = np.concatenate([ti, tj, iw]).astype(np.float64)
+    cmax = float(caps.max()) if len(caps) else 1.0
+    scale = 10 ** 7 / max(cmax, 1e-30)
+    q = lambda x: np.maximum(np.rint(np.asarray(x, np.float64) * scale), 0)
+    qi, qj, qw = q(ti), q(tj), q(iw)
+    d = Dinic(k + 2)
+    S, T = k, k + 1
+    for v in range(k):
+        d.add_edge(S, v, float(qj[v]))
+        d.add_edge(v, T, float(qi[v]))
+    for a, b, ww in zip(ia, ib, qw):
+        if a < b:                 # both directions arrive; add each once
+            d.add_edge(int(a), int(b), float(ww), float(ww))
+    d.max_flow(S, T)
+    return d.min_cut_side(S)[:k]
+
+
+def _perturb(rng, k, links, w, ti, tj):
+    """One random perturbation: t-link tweaks, undirected-capacity tweaks,
+    or both (values stay nonnegative)."""
+    what = rng.integers(0, 3)
+    if what != 1:
+        wh = rng.integers(0, k, size=int(rng.integers(1, k + 1)))
+        ti = ti.copy()
+        ti[wh] = np.maximum(ti[wh] + rng.normal(0, 2.0, size=len(wh)), 0)
+        wh = rng.integers(0, k, size=int(rng.integers(1, k + 1)))
+        tj = tj.copy()
+        tj[wh] = np.maximum(tj[wh] * rng.uniform(0, 3, size=len(wh)), 0)
+    if what != 0 and len(w):
+        wh = rng.integers(0, len(w), size=int(rng.integers(1, len(w) + 1)))
+        w = w.copy()
+        w[wh] = np.maximum(w[wh] + rng.normal(0, 1.5, size=len(wh)), 0)
+    return links, w, ti, tj
+
+
+def _assert_flow_invariants(rc):
+    """The retained flow must stay a FEASIBLE flow after every repair:
+    antisymmetric, within capacity, and conserved at every non-terminal
+    node.  A drain bug (e.g. reducing a shared arc twice) breaks one of
+    these long before it breaks a mask on a lucky instance."""
+    n = rc.n
+    rows = np.repeat(np.arange(n), np.diff(rc.indptr))
+    assert (rc.flow <= rc.cap).all(), "capacity violated"
+    # antisymmetry: flow[u,v] == -flow[v,u]
+    key = rows * n + rc.cols.astype(np.int64)
+    tkey = rc.cols.astype(np.int64) * n + rows
+    rev = np.searchsorted(key, tkey)
+    np.testing.assert_array_equal(rc.flow, -rc.flow[rev])
+    # conservation at member nodes (net outflow zero)
+    net = np.zeros(n, dtype=np.int64)
+    np.add.at(net, rows, rc.flow)
+    assert (net[:rc.k] == 0).all(), "conservation violated"
+
+
+def _run_differential_sequence(seed, steps, k_max=16):
+    """Drive one perturbation sequence; assert warm == cold == Dinic masks
+    bit-for-bit on every step.  Returns the observed resolve modes."""
+    rng = np.random.default_rng(seed)
+    k, links, w, ti, tj = _random_universe(rng, k_max=k_max)
+    member = np.ones(k, dtype=bool)
+    prob = _restrict(k, links, w, ti, tj, member)
+    side, rc = ResidualCut.prime(*[np.copy(x) if isinstance(x, np.ndarray)
+                                   else x for x in prob])
+    np.testing.assert_array_equal(side, _cold_mask(*prob))
+    np.testing.assert_array_equal(side, _dinic_mask(*prob))
+    modes = []
+    for _ in range(steps):
+        if rng.uniform() < 0.25:
+            # Membership perturbation: structure changes, warm state is
+            # re-primed (exactly what the engine does on membership churn).
+            member = rng.uniform(size=k) < rng.uniform(0.4, 1.0)
+            if member.sum() < 2:
+                member[:2] = True
+            prob = _restrict(k, links, w, ti, tj, member)
+            side, rc = ResidualCut.prime(*prob)
+            modes.append("prime")
+        else:
+            links, w, ti, tj = _perturb(rng, k, links, w, ti, tj)
+            prob = _restrict(k, links, w, ti, tj, member)
+            if rc is None or rc.k != prob[0]:   # pragma: no cover - guard
+                side, rc = ResidualCut.prime(*prob)
+                modes.append("prime")
+            else:
+                side, mode = rc.resolve(*prob[1:])
+                modes.append(mode)
+        if rc is not None:
+            _assert_flow_invariants(rc)
+        np.testing.assert_array_equal(side, _cold_mask(*prob))
+        np.testing.assert_array_equal(side, _dinic_mask(*prob))
+    return modes
+
+
+# ------------------------------------------------------- differential fuzz
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_warm_masks_bit_identical_to_cold_and_dinic(seed):
+    """Tier-1 fuzz: every step of a random capacity/t-link/membership
+    perturbation sequence yields identical masks from the warm solver, the
+    cold scipy path and the Dinic oracle."""
+    _run_differential_sequence(seed, steps=8)
+
+
+def test_warm_exercises_every_resolve_mode():
+    """The harness must actually reach hit/warm/cold modes (otherwise the
+    fuzz only covers the prime path and the bit-identity claim is hollow)."""
+    seen = set()
+    for seed in range(40):
+        seen.update(_run_differential_sequence(seed, steps=6))
+        if {"hit", "warm", "cold"} <= seen:
+            break
+    assert {"hit", "warm", "cold"} <= seen, seen
+
+
+@pytest.mark.slow
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 100_000))
+def test_warm_masks_bit_identical_fuzz_heavy(seed):
+    """Heavy on-demand tier (-m slow): longer sequences, larger blocks."""
+    _run_differential_sequence(seed + 1, steps=25, k_max=28)
+
+
+def test_resolve_rejects_structure_change():
+    """A changed internal-arc structure must be re-primed, not resolved —
+    the engine drops warm state on membership patches; a caller that
+    forgets gets a loud error instead of a silently wrong mask."""
+    rng = np.random.default_rng(3)
+    k, links, w, ti, tj = _random_universe(rng)
+    prob = _restrict(k, links, w, ti, tj, np.ones(k, dtype=bool))
+    _, rc = ResidualCut.prime(*prob)
+    member = np.ones(k, dtype=bool)
+    member[0] = False
+    smaller = _restrict(k, links, w, ti, tj, member)
+    with pytest.raises(ValueError, match="structure changed"):
+        rc.resolve(smaller[1], smaller[2], smaller[3], smaller[4],
+                   smaller[5])
+
+
+def test_drain_handles_saturating_decrease_chain():
+    """Deterministic drain exercise: prime a path network s-a-b-t at full
+    flow, then cut an interior capacity to a fraction — the drain must
+    cancel the excess along the flow's own path and the repaired solve must
+    match cold (covers the backward AND forward walks)."""
+    ia = np.array([0, 1], dtype=np.int64)
+    ib = np.array([1, 0], dtype=np.int64)
+    for new_mid in (0.0, 0.4, 2.0):
+        iw = np.array([5.0, 5.0])
+        ti = np.array([0.0, 4.0])     # a->T 0, b->T 4
+        tj = np.array([4.0, 0.0])     # S->a 4, S->b 0
+        prob = (2, ia, ib, iw, ti, tj)
+        side, rc = ResidualCut.prime(*prob)
+        assert rc.flow.max() > 0      # the prime actually pushed flow
+        iw2 = np.array([new_mid, new_mid])
+        side2, mode = rc.resolve(ia, ib, iw2, ti, tj)
+        np.testing.assert_array_equal(
+            side2, _cold_mask(2, ia, ib, iw2, ti, tj))
+        np.testing.assert_array_equal(
+            side2, _dinic_mask(2, ia, ib, iw2, ti, tj))
+
+
+# ------------------------------------------------ peel <-> warm interaction
+def test_peel_gate_shared_between_block_solver_and_warm_router():
+    """The warm router and the block solver must agree on the peel-vs-direct
+    decision: peel_gate_fraction is the single source of truth."""
+    rng = np.random.default_rng(11)
+    k, links, w, ti, tj = _random_universe(rng)
+    prob = _restrict(k, links, w, ti, tj, np.ones(k, dtype=bool))
+    frac = peel_gate_fraction(prob[0], prob[1], prob[3], prob[4], prob[5])
+    assert 0.0 <= frac <= 1.0
+    assert 0.0 < PEEL_GATE_FRAC < 1.0
+
+
+def test_warm_state_dropped_when_peel_frontier_engages():
+    """Re-solve after the forced set grows past the gate: the engine must
+    route to the cold peeled path and DROP the entry's warm state; when the
+    forced set shrinks again the pair re-primes — masks exact throughout.
+
+    Built on a tiny engine so the full epoch/cache plumbing is exercised,
+    not just the maxflow layer."""
+    g = synthetic_siot(n=160, target_links=600, seed=2)
+    net = build_edge_network(g, 4, seed=2)
+    cm = CostModel(net, g, workload_for("gcn", 24))
+    rng = np.random.default_rng(0)
+    init = rng.integers(0, 4, size=g.n).astype(np.int64)
+    eng = PairCutEngine(cm, init, cache=True, warm=True)
+    cold_eng = PairCutEngine(cm, init.copy(), cache=False, warm=False)
+    connected = {(int(i), int(j)) for i, j in net.pairs}
+    rounds = [[p for p in rnd if p in connected]
+              for rnd in round_robin_rounds(4)]
+    rounds = [r for r in rounds if r]
+    for _ in range(6):
+        for rnd in rounds:
+            # The pairwise route sends EVERY dirty solve through the warm
+            # router (the block route keeps fresh assemblies cold), so the
+            # peel gate's drop-state path is guaranteed to be exercised.
+            got = eng.sweep_round(rnd, solver="pairwise")
+            ref = cold_eng.sweep_round(rnd, solver="pairwise")
+            assert got == ref
+    np.testing.assert_array_equal(eng.state.assign, cold_eng.state.assign)
+    assert eng.state.total == cold_eng.state.total
+    st_ = eng.cache_stats()
+    # Early churny rounds must have hit the cold/peel fallback at least
+    # once — that is the 'frontier engages -> state dropped' path.
+    assert st_["warm_cold"] > 0
+    # And every cached entry that still holds warm state is consistent.
+    for e in eng._cache.values():
+        if e.residual is not None:
+            assert e.residual.k == len(e.core)
+
+
+# ----------------------------------------------------- engine-level identity
+def _tiny_cm(seed=0, n=300, m=6):
+    g = synthetic_siot(n=n, target_links=int(n * 3.5), seed=seed)
+    net = build_edge_network(g, m, seed=seed)
+    return CostModel(net, g, workload_for("gcn", 32))
+
+
+@pytest.mark.parametrize("cache,warm", [(False, False), (True, False),
+                                        (False, "auto"), (True, True)])
+def test_glad_s_trajectory_identical_across_regimes(cache, warm):
+    """Full batched GLAD-S runs are bit-identical under every cache x warm
+    regime (the golden-trajectory guarantee extended to warm starts)."""
+    cm = _tiny_cm()
+    ref = glad_s(cm, seed=0, sweep="batched", cache=False, warm=False)
+    got = glad_s(cm, seed=0, sweep="batched", cache=cache, warm=warm)
+    assert got.history == ref.history
+    np.testing.assert_array_equal(got.assign, ref.assign)
+    assert got.cost == ref.cost
+
+
+def test_warm_true_with_cache_false_raises():
+    cm = _tiny_cm()
+    with pytest.raises(ValueError, match="warm=True requires"):
+        PairCutEngine(cm, np.zeros(cm.graph.n, dtype=np.int64),
+                      cache=False, warm=True)
+
+
+def test_external_commit_keeps_warm_engine_exact():
+    """apply_assignment (the on_commit epoch plumbing) + warm re-solve:
+    after externally-imposed moves, the warm engine's re-converged layout
+    must exactly match a cold engine fed the same sequence — stale epochs
+    would silently diverge here."""
+    cm = _tiny_cm(seed=1)
+    n, m = cm.graph.n, cm.net.m
+    rng = np.random.default_rng(5)
+    init = rng.integers(0, m, size=n).astype(np.int64)
+    connected = {(int(i), int(j)) for i, j in cm.net.pairs}
+    rounds = [[p for p in rnd if p in connected]
+              for rnd in round_robin_rounds(m)]
+    rounds = [r for r in rounds if r]
+
+    def converge(eng):
+        while True:
+            acc = sum(1 for rnd in rounds
+                      for _, ok in eng.sweep_round(rnd) if ok)
+            if acc == 0:
+                return
+
+    warm_eng = PairCutEngine(cm, init, cache=True, warm=True)
+    cold_eng = PairCutEngine(cm, init.copy(), cache=False, warm=False)
+    converge(warm_eng)
+    converge(cold_eng)
+    for step in range(6):
+        prng = np.random.default_rng(100 + step)
+        mv = prng.choice(n, size=3, replace=False)
+        ns = (warm_eng.state.assign[mv]
+              + prng.integers(1, m, size=3)) % m
+        d1 = warm_eng.apply_assignment(mv, ns)
+        d2 = cold_eng.apply_assignment(mv, ns)
+        assert d1 == d2
+        converge(warm_eng)
+        converge(cold_eng)
+        np.testing.assert_array_equal(warm_eng.state.assign,
+                                      cold_eng.state.assign)
+        assert warm_eng.state.total == cold_eng.state.total
+    # The exercise must actually have used the warm machinery.
+    st_ = warm_eng.cache_stats()
+    assert st_["warm_hits"] + st_["warm_repairs"] + st_["warm_cold"] > 0
+
+
+def test_converged_reprobe_is_all_warm_hits():
+    """Force a full re-probe of a converged engine without touching any
+    vertex: every solved pair must come back as a warm hit (mask-only BFS)
+    and propose no move — the converged-regime fast path."""
+    cm = _tiny_cm(seed=2)
+    n, m = cm.graph.n, cm.net.m
+    rng = np.random.default_rng(0)
+    init = rng.integers(0, m, size=n).astype(np.int64)
+    connected = {(int(i), int(j)) for i, j in cm.net.pairs}
+    rounds = [[p for p in rnd if p in connected]
+              for rnd in round_robin_rounds(m)]
+    rounds = [r for r in rounds if r]
+    eng = PairCutEngine(cm, init, cache=True, warm=True)
+    while True:
+        if sum(1 for rnd in rounds
+               for _, ok in eng.sweep_round(rnd) if ok) == 0:
+            break
+    before = dict(eng.cache_stats())
+    total_before = eng.state.total
+    eng._version += 1
+    eng._server_dirty[:] = eng._version       # dirty, epochs untouched
+    for rnd in rounds:
+        for _, ok in eng.sweep_round(rnd):
+            assert not ok                     # converged: all rejects
+    after = eng.cache_stats()
+    assert eng.state.total == total_before
+    assert after["warm_hits"] > before["warm_hits"]
+    assert after["warm_repairs"] == before["warm_repairs"]
+    assert after["misses"] >= before["misses"]   # empty pairs only
+
+
+def test_residual_bytes_counted_in_lru_budget():
+    """Warm state must be charged to the cache's byte ledger: the ledger
+    equals the sum of entry nbytes (which include residuals), and dropping
+    residuals refunds exactly their bytes."""
+    cm = _tiny_cm(seed=3)
+    n, m = cm.graph.n, cm.net.m
+    rng = np.random.default_rng(1)
+    init = rng.integers(0, m, size=n).astype(np.int64)
+    connected = {(int(i), int(j)) for i, j in cm.net.pairs}
+    rounds = [[p for p in rnd if p in connected]
+              for rnd in round_robin_rounds(m)]
+    rounds = [r for r in rounds if r]
+    eng = PairCutEngine(cm, init, cache=True, warm=True)
+    for _ in range(4):
+        for rnd in rounds:
+            eng.sweep_round(rnd)
+    real = sum(e.nbytes for e in eng._cache.values())
+    assert eng._cache_used == real
+    with_rc = [(key, e) for key, e in eng._cache.items()
+               if e.residual is not None]
+    if with_rc:                                # drop one, ledger follows
+        key, e = with_rc[0]
+        rc_bytes = e.residual.nbytes
+        used = eng._cache_used
+        eng._drop_residual(e, key)
+        assert eng._cache_used == used - rc_bytes
+        assert eng._cache_used == sum(x.nbytes
+                                      for x in eng._cache.values())
+
+
+def test_prime_growth_respects_byte_budget():
+    """Priming residuals on verbatim hits (a converged re-probe) grows the
+    ledger WITHOUT an assembly miss — the eviction loop must still run, or
+    the budget silently overruns in exactly the warm start's target
+    regime."""
+    cm = _tiny_cm(seed=6)
+    n, m = cm.graph.n, cm.net.m
+    rng = np.random.default_rng(3)
+    init = rng.integers(0, m, size=n).astype(np.int64)
+    connected = {(int(i), int(j)) for i, j in cm.net.pairs}
+    rounds = [[p for p in rnd if p in connected]
+              for rnd in round_robin_rounds(m)]
+    rounds = [r for r in rounds if r]
+    budget = 96 << 10
+    eng = PairCutEngine(cm, init, cache=True, warm=True,
+                        cache_bytes=budget)
+    for _ in range(3):
+        for rnd in rounds:
+            eng.sweep_round(rnd)
+        eng._version += 1
+        eng._server_dirty[:] = eng._version      # re-probe: prime on hits
+    assert eng._cache_used == sum(e.nbytes for e in eng._cache.values())
+    assert eng._cache_used <= budget or len(eng._cache) == 1
+
+
+def test_warm_respects_tight_byte_budget():
+    """A budget too small for everything still produces exact results —
+    evicted warm state only costs a re-prime."""
+    cm = _tiny_cm(seed=4)
+    n, m = cm.graph.n, cm.net.m
+    rng = np.random.default_rng(2)
+    init = rng.integers(0, m, size=n).astype(np.int64)
+    ref = glad_s(cm, seed=0, init=init.copy(), sweep="batched",
+                 cache=False, warm=False)
+    got = glad_s(cm, seed=0, init=init.copy(), sweep="batched",
+                 cache=True, warm=True, cache_bytes=64 << 10)
+    assert got.history == ref.history
+    np.testing.assert_array_equal(got.assign, ref.assign)
