@@ -3,14 +3,17 @@
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
                                           [--check-parity]
 
-``--smoke`` runs a single CI-sized sanity pass (the layout-engine benchmark
-at quick sizes, one repetition, written to BENCH_layout.smoke.json) so the
-harness can be exercised cheaply without touching the committed numbers;
-it exits nonzero if the engine paths disagree on any final cost.
+``--smoke`` runs CI-sized sanity passes (the layout-engine benchmark at
+quick sizes plus the plan-patch cell, one repetition, written to
+BENCH_layout.smoke.json) so the harness can be exercised cheaply without
+touching the committed numbers; it exits nonzero if the engine paths
+disagree on any final cost, if a patched ShardPlan diverges from a fresh
+compile, or if the 8-device retrace counts are off.
 
-``--check-parity`` re-runs the quick grid and exits nonzero if any cell's
+``--check-parity`` re-runs the quick grids and exits nonzero if any cell's
 final cost diverges from the committed BENCH_layout.json beyond 1e-12
-relative — the CI gate against silent cost regressions.
+relative, or the plan-patch cell's traffic accounting drifts — the CI gate
+against silent cost regressions.
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ import time
 
 from benchmarks import (adaptability, convergence, cost_comparison,
                         cost_factors, kernel_density, layout_engine,
-                        overhead, roofline_table, sensitivity)
+                        overhead, plan_patch, roofline_table, sensitivity)
 
 SECTIONS = [
     ("cost_comparison  (Fig. 8/9)", cost_comparison.run),
@@ -32,6 +35,7 @@ SECTIONS = [
     ("kernel_density   (ablation: layout -> MXU)", kernel_density.run),
     ("roofline_table   (deliverable g)", roofline_table.run),
     ("layout_engine    (engine vs seed, round solvers)", layout_engine.run),
+    ("plan_patch       (incremental ShardPlan pipeline)", plan_patch.run),
 ]
 
 
@@ -48,11 +52,17 @@ def main() -> None:
                          "diverges from the committed BENCH_layout.json")
     args = ap.parse_args()
     if args.check_parity:
-        sys.exit(layout_engine.check_parity())
+        rc = layout_engine.check_parity()
+        rc = plan_patch.check_parity() or rc
+        sys.exit(rc)
     if args.smoke:
         print("\n===== smoke: layout_engine (quick, 1 rep) =====")
         t0 = time.perf_counter()
         rc = layout_engine.run(smoke=True)
+        print(f"# smoke wall time: {time.perf_counter() - t0:.1f}s")
+        print("\n===== smoke: plan_patch (quick, 1 rep) =====")
+        t0 = time.perf_counter()
+        rc = plan_patch.run(smoke=True) or rc
         print(f"# smoke wall time: {time.perf_counter() - t0:.1f}s")
         sys.exit(rc or 0)
     for name, fn in SECTIONS:

@@ -196,6 +196,11 @@ class PairCutEngine:
         # Scratch, allocated once: member mask + global->local translation.
         self._mask = np.zeros(g.n, dtype=bool)
         self._loc = np.full(g.n, -1, dtype=np.int64)
+        # Touched-vertex ledger: every committed mover (the engine's own
+        # accepts AND external apply_assignment commits) is flagged here, so
+        # callers get the run's move delta without an O(n) diff — the same
+        # epoch machinery the caches ride feeds the plan-patch pipeline.
+        self._moved_mask = np.zeros(g.n, dtype=bool)
         # Dirty-pair tracking: the auxiliary graph of (i, j) depends only on
         # its member set and the layout of members' neighbors, so a pair is
         # clean — its solve would reproduce the last (rejected) proposal
@@ -268,6 +273,11 @@ class PairCutEngine:
             "warm_cold": self.warm_cold,
         }
 
+    def touched_vertices(self) -> np.ndarray:
+        """Vertices committed as movers at least once on this engine (a
+        superset of the net movers — a vertex may move and move back)."""
+        return np.flatnonzero(self._moved_mask)
+
     def pair_clean(self, i: int, j: int) -> bool:
         """True iff (i, j)'s auxiliary graph is unchanged since its last
         solve AND that solve did not end in an accept (an accepted solve
@@ -289,6 +299,7 @@ class PairCutEngine:
         dirty = np.unique(np.concatenate(servers))
         self._version += 1
         self._server_dirty[dirty] = self._version
+        self._moved_mask[moved] = True
         # Vertex epochs feed the AssemblyCache: a mover's own slot changed,
         # and every neighbor's boundary/t-link context references it.
         self._vertex_epoch[moved] = self._version

@@ -58,6 +58,11 @@ def glad_e(
         :func:`glad_s` (assembly caching, chunked/parallel block solves,
         warm-started incremental re-solves).  GLAD-E's active-mask workload
         is exactly the regime both 'auto' policies enable themselves for.
+
+    The result's ``moved`` is the relayout's move delta RELATIVE TO the
+    carried-over old layout — net movers plus every newly-inserted vertex —
+    i.e. exactly the set :func:`repro.gnn.distributed.patch_plan` needs to
+    patch a live ShardPlan after the incremental relayout.
     """
     new_graph = cm_new.graph
     active = changed_vertices(old_graph, new_graph, assign_old)
@@ -66,6 +71,7 @@ def glad_e(
     assign = np.zeros(new_graph.n, dtype=np.int64)
     keep = min(old_graph.n, new_graph.n)
     assign[:keep] = assign_old[:keep]
+    new_ids = np.arange(old_graph.n, new_graph.n, dtype=np.int64)
     if new_graph.n > old_graph.n:
         new_mask = np.zeros(new_graph.n, dtype=bool)
         new_mask[old_graph.n:] = True
@@ -73,13 +79,17 @@ def glad_e(
 
     if not active.any():
         f = cm_new.factors(assign)
-        return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f)
+        return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f,
+                          moved=new_ids)
 
     # R defaults small for incremental updates (the filtered set is small).
     if R is None:
         R = max(3, cm_new.net.m)
-    return glad_s(
+    res = glad_s(
         cm_new, R=R, init=assign, active=active, seed=seed, backend=backend,
         sweep=sweep, workers=workers, cache=cache, chunk_nodes=chunk_nodes,
         warm=warm,
     )
+    # glad_s diffs against the seeded init; fold the insertions back in.
+    res.moved = np.union1d(res.moved, new_ids) if len(new_ids) else res.moved
+    return res

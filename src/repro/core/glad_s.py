@@ -59,6 +59,11 @@ class GladResult:
     accepted: int
     wall_time_s: float
     factors: dict
+    # Net move delta vs the starting layout (vertices whose final server
+    # differs from ``init``) — feeds gnn.distributed.patch_plan so the
+    # serving layer patches its ShardPlan instead of recompiling.  All
+    # vertices for a random init.
+    moved: Optional[np.ndarray] = None
 
 
 def _pair_members(assign: np.ndarray, i: int, j: int,
@@ -157,7 +162,8 @@ def _init_assign(cm: CostModel, init: Optional[np.ndarray],
 
 def _empty_result(cm: CostModel, assign: np.ndarray) -> GladResult:
     f = cm.factors(assign)
-    return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f)
+    return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f,
+                      moved=np.zeros(0, dtype=np.int64))
 
 
 def glad_s(
@@ -238,6 +244,7 @@ def glad_s(
     if engine != "incremental":
         raise ValueError(f"unknown engine {engine!r}")
 
+    init_snapshot = assign.copy()
     eng = PairCutEngine(cm, assign, active=active, backend=backend,
                         workers=workers, worker_mode=worker_mode,
                         cache=cache, cache_bytes=cache_bytes,
@@ -253,11 +260,15 @@ def glad_s(
     else:
         raise ValueError(f"unknown sweep {sweep!r}")
 
+    # Net movers via the engine's commit ledger: only vertices it ever
+    # committed can differ from the init, so the diff is O(touched).
+    touched = eng.touched_vertices()
+    moved = touched[eng.state.assign[touched] != init_snapshot[touched]]
     return GladResult(
         assign=eng.state.assign, cost=eng.state.total, history=history,
         iterations=iters, accepted=accepted,
         wall_time_s=time.perf_counter() - t0,
-        factors=eng.state.factors(),
+        factors=eng.state.factors(), moved=moved,
     )
 
 
@@ -320,6 +331,7 @@ def _glad_s_reference(cm, assign, pairs, R, active, rng, backend,
                       max_iterations, on_iteration, t0):
     """Seed-path Alg. 1: full total() per proposal, per-edge-scan auxiliary
     construction.  Oracle for equivalence tests + the speedup benchmark."""
+    init_snapshot = assign.copy()
     visits = np.zeros(len(pairs), dtype=np.int64)
     cur_cost = cm.total(assign)
     history = [cur_cost]
@@ -351,4 +363,5 @@ def _glad_s_reference(cm, assign, pairs, R, active, rng, backend,
         assign=assign, cost=cur_cost, history=history, iterations=iters,
         accepted=accepted, wall_time_s=time.perf_counter() - t0,
         factors=cm.factors(assign),
+        moved=np.flatnonzero(assign != init_snapshot),
     )

@@ -58,22 +58,62 @@ def _pad_lists(lists, pad_val=-1, cap: Optional[int] = None) -> np.ndarray:
     return out
 
 
+def halos_of(
+    graph: DataGraph,
+    assign: np.ndarray,
+    num_parts: int,
+    parts: Optional[np.ndarray] = None,
+) -> dict:
+    """Per-part halo sets: the out-of-part neighbors each part aggregates.
+
+    One grouped pass over the cut links (no per-part edge scan): every cut
+    link (u, v) contributes (part(v), u) and (part(u), v) need-pairs; a
+    single ``np.unique`` over the combined key yields each part's halo,
+    sorted ascending by vertex id — deterministic, and the order the
+    ShardPlan's searchsorted halo coordinates rely on.
+
+    ``parts`` restricts the output (and the grouping work) to a subset —
+    the plan-patch path asks only for the dirty parts.
+    """
+    targets = range(num_parts) if parts is None else [int(p) for p in parts]
+    empty = np.zeros(0, np.int64)
+    out = {p: empty for p in targets}
+    e = graph.edges
+    if len(e) == 0 or graph.n == 0:
+        return out
+    pu, pv = assign[e[:, 0]], assign[e[:, 1]]
+    cross = pu != pv
+    if parts is not None:
+        # Restrict BEFORE materializing the need-pairs: a dirty-part patch
+        # pays O(cut links incident to dirty parts), not O(cut links).
+        inpart = np.zeros(num_parts, dtype=bool)
+        inpart[np.asarray(parts, dtype=np.int64)] = True
+        c1 = cross & inpart[pv]
+        c2 = cross & inpart[pu]
+    else:
+        c1 = c2 = cross
+    owner = np.concatenate([pv[c1], pu[c2]]).astype(np.int64)
+    need = np.concatenate([e[c1, 0], e[c2, 1]]).astype(np.int64)
+    if len(owner) == 0:
+        return out
+    key = np.unique(owner * np.int64(graph.n) + need)
+    ow = key // graph.n
+    nd = key % graph.n
+    bounds = np.searchsorted(ow, np.array(sorted(targets) + [num_parts]))
+    for k, p in enumerate(sorted(targets)):
+        out[p] = nd[bounds[k]:bounds[k + 1]]
+    return out
+
+
 def partition_from_assign(
     graph: DataGraph, assign: np.ndarray, num_parts: int, factors: dict
 ) -> DevicePartition:
     parts = [np.where(assign == p)[0] for p in range(num_parts)]
     sizes = np.array([len(p) for p in parts], dtype=np.int64)
     # Halo: for each part, the out-of-part neighbors its vertices aggregate.
-    halos = []
     e = graph.edges
-    for p in range(num_parts):
-        if len(e) == 0:
-            halos.append(np.zeros(0, np.int64))
-            continue
-        mine_u = assign[e[:, 0]] == p
-        mine_v = assign[e[:, 1]] == p
-        need = np.concatenate([e[mine_u & ~mine_v, 1], e[mine_v & ~mine_u, 0]])
-        halos.append(np.unique(need))
+    halo_map = halos_of(graph, assign, num_parts)
+    halos = [halo_map[p] for p in range(num_parts)]
     cut = int((assign[e[:, 0]] != assign[e[:, 1]]).sum()) if len(e) else 0
     return DevicePartition(
         num_parts=num_parts,

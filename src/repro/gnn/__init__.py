@@ -3,13 +3,16 @@ from repro.gnn.models import (
     segment_sum,
 )
 from repro.gnn.distributed import (
-    ShardPlan, compile_plan, gather_outputs, make_bsp_forward,
-    scatter_features, scatter_ints, simulate_bsp_forward,
+    PlanBSR, PlanCaps, PlanDelta, ShardPlan, build_plan_bsr, compile_plan,
+    gather_outputs, make_bsp_forward, patch_plan, plan_caps, plans_equal,
+    recompile_like, scatter_features, scatter_ints, simulate_bsp_forward,
 )
 
 __all__ = [
     "GNNConfig", "directed_edges", "forward", "init_params", "loss_fn",
     "predict", "segment_sum",
-    "ShardPlan", "compile_plan", "gather_outputs", "make_bsp_forward",
-    "scatter_features", "scatter_ints", "simulate_bsp_forward",
+    "PlanBSR", "PlanCaps", "PlanDelta", "ShardPlan", "build_plan_bsr",
+    "compile_plan", "gather_outputs", "make_bsp_forward", "patch_plan",
+    "plan_caps", "plans_equal", "recompile_like", "scatter_features",
+    "scatter_ints", "simulate_bsp_forward",
 ]

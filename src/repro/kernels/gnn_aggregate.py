@@ -94,6 +94,28 @@ def spmm(values, block_cols, feats, *, bm: int, bk: int, bd: int = 128,
     return out
 
 
+def spmm_jnp(values, block_cols, feats, bm: int, bk: int):
+    """Vectorized jnp execution of the kernel's exact BSR layout.
+
+    The non-TPU fallback for ``spmm``: one gather of (bk, d) feature tiles by
+    ``block_cols`` plus one einsum contraction, instead of interpret-mode
+    Pallas (O(python) per block) or the per-block ``ref.spmm_ref`` loop.  It
+    may differ from the kernel only in accumulation order (the einsum
+    contracts all ``max_blocks`` tiles at once vs the kernel's sequential
+    j-loop); both accumulate in fp32.
+    """
+    n_dst_blocks, max_blocks = block_cols.shape
+    d = feats.shape[1]
+    assert feats.shape[0] % bk == 0, (feats.shape, bk)
+    tiles = feats.reshape(-1, bk, d)
+    gathered = tiles[block_cols]                   # (nb, maxb, bk, d)
+    vals = values.reshape(n_dst_blocks, max_blocks, bm, bk)
+    out = jnp.einsum(
+        "nmbk,nmkd->nbd",
+        vals.astype(jnp.float32), gathered.astype(jnp.float32))
+    return out.reshape(n_dst_blocks * bm, d).astype(feats.dtype)
+
+
 # --------------------------------------------------------------- host packing
 def build_bsr(
     src_dst: np.ndarray,

@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.gnn_aggregate import build_bsr, spmm as _spmm
+from repro.kernels.gnn_aggregate import (
+    build_bsr, spmm as _spmm, spmm_jnp as _spmm_jnp)
 
 
 def on_tpu() -> bool:
@@ -62,15 +63,24 @@ class BSRAggregate:
         self.nnz_density = float((vals != 0).mean())
 
     def __call__(self, feats: jnp.ndarray, impl: str = "auto") -> jnp.ndarray:
-        """feats (n, d) -> (n, d) aggregated by incoming links."""
+        """feats (n, d) -> (n, d) aggregated by incoming links.
+
+        ``impl``: 'pallas' (the kernel; interpret-mode off TPU), 'jnp' (the
+        vectorized gather+einsum execution of the same BSR layout — the fast
+        non-TPU path), 'ref' (the per-block oracle loop), or 'auto'
+        (pallas on TPU, jnp elsewhere).
+        """
         if impl == "auto":
-            impl = "pallas" if on_tpu() else "ref"
+            impl = "pallas" if on_tpu() else "jnp"
         d = feats.shape[1]
         pad_d = (-d) % 128
         x = jnp.pad(feats, ((0, self.n_src_pad - feats.shape[0]), (0, pad_d)))
         if impl == "pallas":
             out = _spmm(self.values, self.block_cols, x,
                         bm=self.bm, bk=self.bk, interpret=not on_tpu())
+        elif impl == "jnp":
+            out = _spmm_jnp(self.values, self.block_cols, x,
+                            self.bm, self.bk)
         else:
             out = _ref.spmm_ref(self.values, self.block_cols, x,
                                 self.bm, self.bk)

@@ -82,6 +82,10 @@ class RelayoutEvent:
     new_cost: float
     migrated: int
     wall_time_s: float
+    # Move delta vs the pre-event layout: the vertices a serving layer must
+    # re-home — feed straight into gnn.distributed.patch_plan to patch the
+    # live ShardPlan instead of recompiling it.
+    moved: Optional[np.ndarray] = None
 
 
 class ElasticCoordinator:
@@ -102,6 +106,9 @@ class ElasticCoordinator:
         self.gnn = gnn
         self.part = part
         self.events: List[RelayoutEvent] = []
+        # Move delta of the most recent relayout (also on each event) — the
+        # input to the serving layer's ShardPlan patch.
+        self.last_moved: np.ndarray = np.zeros(0, dtype=np.int64)
         # Engine knobs for the GLAD re-layouts (assembly caching, chunked
         # block fan-out, warm-started incremental re-solves) — relayout
         # latency is the control plane's budget.  The warm-started
@@ -131,12 +138,13 @@ class ElasticCoordinator:
                      **self._glad_opts)
         new_part = partition_from_assign(self.graph, res.assign,
                                          self.part.num_parts, res.factors)
-        migrated = int((res.assign != self.part.assign).sum())
+        moved = np.flatnonzero(res.assign != self.part.assign)
         self.events.append(RelayoutEvent(
-            "failure", dead, old_cost, res.cost, migrated,
-            time.perf_counter() - t0))
+            "failure", dead, old_cost, res.cost, len(moved),
+            time.perf_counter() - t0, moved=moved))
         self.net = net
         self.part = new_part
+        self.last_moved = moved
         return new_part
 
     def on_straggler(self, slow: List[int], slow_factor: float = 3.0,
@@ -152,10 +160,11 @@ class ElasticCoordinator:
                      sweep="batched", **self._glad_opts)
         new_part = partition_from_assign(self.graph, res.assign,
                                          self.part.num_parts, res.factors)
-        migrated = int((res.assign != self.part.assign).sum())
+        moved = np.flatnonzero(res.assign != self.part.assign)
         self.events.append(RelayoutEvent(
-            "straggler", slow, old_cost, res.cost, migrated,
-            time.perf_counter() - t0))
+            "straggler", slow, old_cost, res.cost, len(moved),
+            time.perf_counter() - t0, moved=moved))
         self.net = net
         self.part = new_part
+        self.last_moved = moved
         return new_part
