@@ -36,6 +36,22 @@ convergence runs (repeated passes until none accepts): the steady-state
 mix of assembly, churny mid-game solves and clean-skip tails, with final
 costs checked against the recorded PR-2 trajectories.
 
+Section 4 (``multilevel_cells``) — the multilevel V-cycle (heavy-edge
+coarsening + per-level boundary refinement) vs the flat batched engine,
+interleaved in the same noise window, at mu_factor=2.0 (the multi-server
+regime; the default factors collapse these sizes onto one server, which
+would make refinement vacuous).  Gates: final cost <= 1.05x flat,
+coarsening determinism (cluster-map checksums reproduce on rebuild), and
+the finest refinement replaying bit-identically on the flat engine from
+the recorded projected init + boundary mask.  The full grid adds a
+V-cycle-only n=500k scale cell (flat skipped by design).
+
+Section 5 (``admission_cells``) — AssemblyCache pair-frequency admission
+regression: a uniform pair scan over a starved byte budget must show ZERO
+steady-state evictions (the second-touch gate freezes a resident set
+instead of thrashing), nonzero rejected assemblies, nonzero hits, and
+exact cost parity against a cache-free solve.
+
 Full-run cost parity (sequential vs batched-pairwise vs batched-block,
 exhaustive R) is recorded for n <= 20k; the 50k full runs are skipped by
 default and logged as skipped — per-round numbers there come from the
@@ -738,6 +754,168 @@ def run_cell(n: int, m: int, seed: int = 0, R=None, reps: int = 3):
     }
 
 
+def run_multilevel_cell(n: int, m: int, seed: int = 0, reps: int = 2,
+                        mu_factor: float = 2.0, coarsen_to=None,
+                        run_flat: bool = True):
+    """Multilevel V-cycle vs the flat batched engine, interleaved in the
+    same noise window.
+
+    ``mu_factor=2.0`` (vs the 0.05 default of the other sections) puts the
+    instances in the multi-server regime: at the default factors the
+    optimum collapses onto one server at these sizes, which would make the
+    boundary refinement vacuous and the cost-ratio gate meaningless.
+
+    Records the quality gate (multilevel cost / flat cost), the coarsening
+    hierarchy with a determinism checksum (matching is a pure function of
+    the cost model), and a bit-identity flag for replaying the finest
+    refinement on the flat engine from the recorded projected init +
+    boundary mask.  ``run_flat=False`` marks the flat run skipped (the
+    n >= 500k memory/runtime cell: the V-cycle must complete, the flat
+    engine need not)."""
+    import resource
+
+    from repro.core.multilevel import COARSEN_TO, build_levels
+
+    if coarsen_to is None:
+        coarsen_to = COARSEN_TO
+    target_links = int(n * 4.2)
+    g = synthetic_siot(n=n, target_links=target_links, seed=seed)
+    net = build_edge_network(g, m, seed=seed, mu_factor=mu_factor)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+
+    fns = {"multilevel": lambda: glad_s(cm, seed=seed, sweep="batched",
+                                        multilevel=True,
+                                        coarsen_to=coarsen_to)}
+    if run_flat:
+        fns["flat"] = lambda: glad_s(cm, seed=seed, sweep="batched")
+    best = {k: float("inf") for k in fns}
+    out = {}
+    for _ in range(max(1, reps)):
+        for key, fn in fns.items():
+            t0 = time.perf_counter()
+            out[key] = fn()
+            best[key] = min(best[key], time.perf_counter() - t0)
+    ml = out["multilevel"]
+
+    # Coarsening determinism: rebuilding the hierarchy must reproduce every
+    # cluster map bit-for-bit (splitmix-mixed XOR checksum per rung).
+    def checksums():
+        stack = build_levels(cm, coarsen_to=coarsen_to)
+        return [int(np.bitwise_xor.reduce(
+            (lvl.cluster_of.astype(np.uint64)
+             * np.uint64(0x9E3779B97F4A7C15))
+            ^ np.arange(len(lvl.cluster_of), dtype=np.uint64)))
+            for lvl in stack[1:]]
+
+    cks = checksums()
+    deterministic = cks == checksums()
+
+    # Finest refinement == flat engine: replay from the recorded projected
+    # init + boundary mask and compare the history hex-for-hex.
+    finest = ml.levels[-1]
+    if finest["role"] == "refine" and finest["active"] is not None \
+            and finest["active"].any():
+        replay = glad_s(cm, R=finest["R"], init=finest["init"],
+                        active=finest["active"], seed=seed, sweep="batched")
+        replay_ok = (
+            [np.float64(h).hex() for h in replay.history]
+            == [np.float64(h).hex() for h in finest["history"]]
+            and bool((replay.assign == ml.assign).all()))
+        finest_iters = finest["iterations"]
+    else:               # projection had no cut links: nothing to replay
+        replay_ok = True
+        finest_iters = 0
+
+    cell = {
+        "n": n, "m": m, "mu_factor": mu_factor, "coarsen_to": coarsen_to,
+        "levels": len(ml.levels),
+        "level_sizes": [ls["n"] for ls in ml.levels[::-1]],
+        "coarsest_n": ml.levels[0]["n"],
+        "coarsest_wall_s": round(ml.levels[0]["wall_time_s"], 4),
+        "multilevel_wall_s": round(best["multilevel"], 4),
+        "multilevel_cost": ml.cost,
+        "multilevel_iterations": ml.iterations,
+        "finest_refine_iterations": finest_iters,
+        "coarsening_deterministic": deterministic,
+        "cluster_checksum": cks[0] if cks else None,
+        "finest_replay_bit_identical": replay_ok,
+        "max_rss_gb": round(resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss / 1e6, 3),
+    }
+    if run_flat:
+        flat = out["flat"]
+        cell.update({
+            "flat_wall_s": round(best["flat"], 4),
+            "flat_cost": flat.cost,
+            "flat_iterations": flat.iterations,
+            "speedup_vs_flat": round(best["flat"] / best["multilevel"], 2),
+            "cost_ratio_vs_flat": ml.cost / flat.cost,
+        })
+    else:
+        cell["flat"] = "skipped (V-cycle-only scale cell: the flat " \
+                       "engine's full-n sweeps exceed the cell budget)"
+    return cell
+
+
+def run_admission_cell(n: int, m: int, seed: int = 0, reps: int = 2):
+    """AssemblyCache pair-frequency admission regression (the scan-thrash
+    fix): a uniform round-robin scan over more pair assemblies than the
+    byte budget holds used to evict on every miss (zero steady-state
+    hits).  The second-touch admission gate freezes a resident set
+    instead: after warmup, evictions must stay FLAT while hits keep
+    accruing, and rejected assemblies must never change results — the
+    starved-budget full solve is compared against a cache-free one."""
+    from repro.core.engine import PairCutEngine, round_robin_rounds
+
+    target_links = int(n * 4.2)
+    g = synthetic_siot(n=n, target_links=target_links, seed=seed)
+    net = build_edge_network(g, m, seed=seed)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+    rng = np.random.default_rng(seed)
+    init = rng.integers(0, m, size=n).astype(np.int64)
+    connected = {(int(i), int(j)) for i, j in net.pairs}
+    pairs = [p for rnd in round_robin_rounds(m) for p in rnd
+             if p in connected]
+
+    # Budget sized to a few resident assemblies — far fewer than the scan
+    # touches, the regime the admission gate exists for.
+    probe = PairCutEngine(cm, init.copy(), cache=True)
+    for p in pairs:
+        probe.solve_pair(*p)
+    budget = max(e.nbytes for e in probe._cache.values()) * 3
+
+    eng = PairCutEngine(cm, init.copy(), cache=True, cache_bytes=budget)
+    for _ in range(2):                                   # warmup scans
+        for p in pairs:
+            eng.solve_pair(*p)
+    warm = dict(eng.cache_stats())
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        for p in pairs:
+            eng.solve_pair(*p)
+        best = min(best, time.perf_counter() - t0)
+    steady = eng.cache_stats()
+
+    # Trajectory invariance: admission decides WHICH assemblies are
+    # retained, never their content.
+    res = glad_s(cm, seed=seed, sweep="batched", cache=True,
+                 cache_bytes=budget)
+    ref = glad_s(cm, seed=seed, sweep="batched", cache=False)
+    return {
+        "n": n, "m": m, "scan_pairs": len(pairs),
+        "cache_budget_assemblies": 3,
+        "scan_pass_ms": round(best * 1000, 2),
+        "steady_evictions": steady["evictions"] - warm["evictions"],
+        "steady_hits": (steady["hits"] + steady["patched"]
+                        - warm["hits"] - warm["patched"]),
+        "steady_rejected": steady["rejected"] - warm["rejected"],
+        "admission_cost": res.cost,
+        "admission_rel_cost_err": abs(res.cost - ref.cost)
+        / max(abs(ref.cost), 1e-12),
+    }
+
+
 def _verify_cost_parity(out: dict, tol: float = 1e-9):
     """Every cell's engine paths must agree on the final cost.  Returns a
     list of human-readable violations (empty = pass)."""
@@ -765,6 +943,28 @@ def _verify_cost_parity(out: dict, tol: float = 1e-9):
             if (cell.get(key) or 0.0) > tol:
                 bad.append(f"resolve n={cell['n']} m={cell['m']}: "
                            f"{key}={cell[key]:.3e} > {tol:g}")
+    for cell in out.get("multilevel_cells", []):
+        where = f"multilevel n={cell['n']} m={cell['m']}"
+        ratio = cell.get("cost_ratio_vs_flat")
+        if ratio is not None and ratio > 1.05:
+            bad.append(f"{where}: cost_ratio_vs_flat={ratio:.4f} > 1.05")
+        if not cell.get("coarsening_deterministic", True):
+            bad.append(f"{where}: coarsening checksums diverged on rebuild")
+        if not cell.get("finest_replay_bit_identical", True):
+            bad.append(f"{where}: finest refinement != flat-engine replay")
+    for cell in out.get("admission_cells", []):
+        where = f"admission n={cell['n']} m={cell['m']}"
+        if cell.get("admission_rel_cost_err", 0.0) > tol:
+            bad.append(f"{where}: admission_rel_cost_err="
+                       f"{cell['admission_rel_cost_err']:.3e} > {tol:g}")
+        if cell.get("steady_evictions", 0) != 0:
+            bad.append(f"{where}: steady_evictions="
+                       f"{cell['steady_evictions']} (scan still thrashes)")
+        if cell.get("steady_rejected", 1) <= 0:
+            bad.append(f"{where}: admission gate never engaged "
+                       "(no budget pressure — cell mis-sized)")
+        if cell.get("steady_hits", 1) <= 0:
+            bad.append(f"{where}: resident set served no hits")
     return bad
 
 
@@ -847,6 +1047,46 @@ def main(argv=None):
               f"{cell['perturb_cached_ms']}ms warm "
               f"{cell['perturb_warm_ms']}ms")
 
+    # Multilevel V-cycle vs flat, interleaved (PR-6).  The quick cell
+    # feeds --fail-on-mismatch (quality/determinism/bit-identity gates)
+    # and --check-parity (pinned costs); the full grid adds the 50k
+    # headline cell and the 500k V-cycle-only scale cell.
+    ml_grid = ([(5000, 16, 256, True)] if args.quick else
+               [(5000, 16, 256, True), (50000, 32, None, True),
+                (500000, 32, None, False)])
+    ml_cells = []
+    for n, m, ct, run_flat in ml_grid:
+        # The flat-skipped scale cell is a completion/memory gate, not a
+        # timing comparison: one rep.
+        cell = run_multilevel_cell(
+            n, m, reps=min(args.reps, 2) if run_flat else 1,
+            coarsen_to=ct, run_flat=run_flat)
+        ml_cells.append(cell)
+        if run_flat:
+            print(f"n={n:>6} m={m:>2}: multilevel "
+                  f"{cell['multilevel_wall_s']:.2f}s flat "
+                  f"{cell['flat_wall_s']:.2f}s "
+                  f"({cell['speedup_vs_flat']}x, cost ratio "
+                  f"{cell['cost_ratio_vs_flat']:.4f}, "
+                  f"{cell['levels']} levels, replay_ok="
+                  f"{cell['finest_replay_bit_identical']})")
+        else:
+            print(f"n={n:>6} m={m:>2}: multilevel "
+                  f"{cell['multilevel_wall_s']:.2f}s "
+                  f"({cell['levels']} levels, flat skipped, "
+                  f"maxrss {cell['max_rss_gb']}GB)")
+
+    # AssemblyCache admission regression (PR-6 satellite): scan-resistance
+    # + exact-parity gates feed --fail-on-mismatch.
+    adm_cells = []
+    for n, m in [(5000, 16)]:
+        cell = run_admission_cell(n, m, reps=min(args.reps, 2))
+        adm_cells.append(cell)
+        print(f"n={n:>6} m={m:>2}: admission scan pass "
+              f"{cell['scan_pass_ms']}ms, steady evictions "
+              f"{cell['steady_evictions']}, hits {cell['steady_hits']}, "
+              f"rejected {cell['steady_rejected']}")
+
     conv_cells = []
     if not args.quick:
         for n, m in round_grid:
@@ -887,6 +1127,8 @@ def main(argv=None):
         "cells": cells,
         "round_solver_cells": round_cells,
         "resolve_cells": resolve_cells,
+        "multilevel_cells": ml_cells,
+        "admission_cells": adm_cells,
         "convergence_cells": conv_cells,
     }
     with open(args.out, "w") as f:
@@ -935,6 +1177,8 @@ def check_parity(ref_path: str = "BENCH_layout.json",
          ("sequential_cost", "batched_pairwise_cost", "batched_block_cost",
           "first_pass_cost")),
         ("resolve_cells", ("resolve_final_cost",)),
+        ("multilevel_cells", ("flat_cost", "multilevel_cost")),
+        ("admission_cells", ("admission_cost",)),
     ]
     bad = []
     for section, keys in checks:

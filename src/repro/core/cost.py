@@ -78,7 +78,18 @@ def workload_for(model: str, in_dim: int, hidden: int = 16, out_dim: int = 2,
 
 
 class CostModel:
-    """Vectorized evaluator of the four cost factors for a (net, graph, gnn)."""
+    """Vectorized evaluator of the four cost factors for a (net, graph, gnn).
+
+    Structural contract (Thm 2, relied on by ``repro.core.multilevel``):
+    every vertex-separable term of the objective lives in :attr:`unary`
+    (mu + C_P + rho), the only pairwise term is the tau-weighted link sum,
+    and the only data-independent term is :attr:`constant` (sum eps).  So
+    ``total(a) == unary[arange(n), a].sum() + tau-link-sum + constant``,
+    which is what makes the multilevel coarse models EXACT: summing unary
+    rows per cluster into the coarse mu (alpha/beta/gamma/rho zeroed so
+    nothing double counts) and summing parallel edge weights preserves the
+    objective of every projected assignment, since intra-cluster links
+    land on the tau diagonal (zero)."""
 
     def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload):
         # Graph evolution can add clients the fleet has no upload entry for
@@ -135,6 +146,18 @@ class CostModel:
     def constant(self) -> float:
         """C0 (Thm 2): data-independent maintenance sum_i eps_i."""
         return float(self.net.eps.sum())
+
+    def tau_ref(self) -> float:
+        """Mean inter-server transmission coefficient over CONNECTED pairs
+        — the traffic scale one link unit can cost.  Used by the multilevel
+        matcher's mu gate (a merge commits both endpoints to one server, so
+        candidates whose unary disagreement exceeds what the merged link
+        could save at this scale are pruned) and usable as a drift scale
+        anywhere a single tau number is needed."""
+        p = self.net.pairs
+        if not len(p):
+            return 0.0
+        return float(self.net.tau[p[:, 0], p[:, 1]].mean())
 
     # ------------------------------------------------------------- evaluation
     def factors(self, assign: np.ndarray) -> Dict[str, float]:

@@ -64,7 +64,11 @@ Cross-round assembly caching (the AssemblyCache):
   All patched values reproduce the fresh assembly bit-for-bit (same unary
   base, same bincount accumulation order), so cached trajectories are
   identical to uncached ones.  Entries live in an LRU dict under a byte
-  budget; eviction only costs the evicted pair a re-assembly.
+  budget; eviction only costs the evicted pair a re-assembly.  Admission
+  is frequency-gated (see :meth:`PairCutEngine._admit`): under budget
+  pressure, first-touch pairs are solved but not stored, so cyclic sweeps
+  whose pair universe overruns the budget keep a stable resident set
+  instead of scan-thrashing.
 
 The engine preserves the paper's auxiliary-graph semantics exactly
 (Sec. IV-B: t-link = unary + side-effect traffic to third servers, n-link =
@@ -248,11 +252,15 @@ class PairCutEngine:
         self._cache: "OrderedDict[Tuple[int, int], _PairAssembly]" = \
             OrderedDict()
         self._cache_used = 0
+        # Pair-frequency admission (TinyLFU-lite): per-pair touch counts
+        # back the under-pressure admission decision in _admit.
+        self._touches: Dict[Tuple[int, int], int] = {}
         self._vertex_epoch = np.zeros(g.n, dtype=np.int64)
         self.cache_hits = 0          # verbatim reuse (nothing touched)
         self.cache_patched = 0       # O(touched) theta patch
         self.cache_misses = 0        # full (re-)assembly
         self.cache_evictions = 0
+        self.cache_rejected = 0      # assemblies not admitted under pressure
         self.warm_hits = 0           # integer caps unchanged: mask-only BFS
         self.warm_repairs = 0        # drain + delta augment
         self.warm_cold = 0           # primed / gated back to a cold solve
@@ -268,6 +276,7 @@ class PairCutEngine:
         return {
             "hits": self.cache_hits, "patched": self.cache_patched,
             "misses": self.cache_misses, "evictions": self.cache_evictions,
+            "rejected": self.cache_rejected,
             "entries": len(self._cache), "bytes": self._cache_used,
             "warm_hits": self.warm_hits, "warm_repairs": self.warm_repairs,
             "warm_cold": self.warm_cold,
@@ -321,6 +330,9 @@ class PairCutEngine:
         LRU byte budget.  Returns None when the pair hosts no active
         vertices."""
         key = (i, j)
+        touches = self._touches.get(key, 0) + 1
+        self._touches[key] = touches
+        resident = False
         e = self._cache.get(key)
         if e is not None:
             if self._refresh_entry(i, j, e):
@@ -328,14 +340,49 @@ class PairCutEngine:
                 return e
             self._cache_used -= self._entry_bytes(e)
             del self._cache[key]
+            resident = True                # rebuild of a proven-hot entry
         e = self._assemble_full(i, j)
         self.cache_misses += 1
         if e is not None:
-            self._cache[key] = e
             self._ensure_core(e)           # eager: every entry gets solved
-            self._cache_used += e.nbytes   # base + core bytes, while
-            self._evict_over_budget()      # still resident
+            if resident or self._admit(e.nbytes, touches):
+                self._cache[key] = e
+                self._cache_used += e.nbytes   # base + core bytes, while
+                self._evict_over_budget()      # still resident
+            else:
+                # Not admitted: the assembly is still used for this solve,
+                # just not stored (and never primes warm state — the
+                # refreshed/allow_prime plumbing treats it as fresh).
+                self.cache_rejected += 1
         return e
+
+    def _admit(self, nbytes: int, touches: int) -> bool:
+        """Pair-frequency admission (TinyLFU-lite): under budget pressure a
+        fresh assembly is admitted only when the pair has been touched
+        before AND more often than the LRU victim it would displace.
+
+        Plain LRU scan-thrashes on cyclic sweeps whose pair universe
+        overruns the byte budget (the n=50k flat path): every visit evicts
+        the entry that is next to be reused, so the cache degrades into
+        pure overhead.  Frequency admission freezes a resident set instead
+        — a uniform scan stops evicting entirely, while genuinely hot
+        pairs (skewed revisit patterns, GLAD-E masks) out-touch stale
+        victims and still displace them.
+
+        The required lead is TWO touches, not one: a cyclic scan touches
+        the candidate before it touches the not-yet-visited LRU resident,
+        so mid-scan the candidate always leads by exactly one — a margin
+        of one would re-admit once per pass (thrash with extra steps).  A
+        genuinely hotter pair's lead grows without bound and clears the
+        margin immediately.  Admission changes WHICH pairs are cached,
+        never any cached value, so trajectories remain bit-identical with
+        the policy on or off."""
+        if not self._cache or self._cache_used + nbytes <= self._cache_bytes:
+            return True
+        if touches < 2:
+            return False
+        victim = next(iter(self._cache))
+        return touches > self._touches.get(victim, 0) + 1
 
     def _evict_over_budget(self) -> None:
         """LRU eviction down to the byte budget (never below one entry).

@@ -47,6 +47,9 @@ def glad_e(
     cache: "bool | str" = "auto",
     chunk_nodes: "int | str" = "auto",
     warm: "bool | str" = "auto",
+    multilevel: "bool | str" = False,
+    coarsen_to: int = 1024,
+    levels: Optional[int] = None,
 ) -> GladResult:
     """Args:
       cm_new: cost model bound to the *evolved* graph G(t).
@@ -58,6 +61,14 @@ def glad_e(
         :func:`glad_s` (assembly caching, chunked/parallel block solves,
         warm-started incremental re-solves).  GLAD-E's active-mask workload
         is exactly the regime both 'auto' policies enable themselves for.
+      multilevel / coarsen_to / levels: escalation to the multilevel
+        V-cycle when the churn is too large for the incremental path to
+        pay: with ``multilevel=True`` (or 'auto' and more than half the
+        vertices changed) the masked refinement is replaced by a full
+        coarsen/solve/refine V-cycle warm-started from the carried-over
+        layout — a massively-evolved graph is a fresh layout problem, and
+        the V-cycle is the fast full solver.  Default False keeps the
+        masked incremental path (bit-identical to previous behavior).
 
     The result's ``moved`` is the relayout's move delta RELATIVE TO the
     carried-over old layout — net movers plus every newly-inserted vertex —
@@ -81,6 +92,24 @@ def glad_e(
         f = cm_new.factors(assign)
         return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f,
                           moved=new_ids)
+
+    # Churn-triggered escalation: when (almost) everything changed, the
+    # masked incremental refinement degenerates into a flat full sweep —
+    # hand the problem to the V-cycle instead, warm-started from the
+    # carried layout (the mask is dropped; the V-cycle refines boundaries
+    # at every level, a superset of the changed set's effect).
+    if multilevel == "auto":
+        multilevel = active.mean() > 0.5
+    if multilevel:
+        res = glad_s(
+            cm_new, R=R, init=assign, seed=seed, backend=backend,
+            workers=workers, cache=cache, chunk_nodes=chunk_nodes,
+            warm=warm, multilevel=True, coarsen_to=coarsen_to,
+            levels=levels,
+        )
+        res.moved = (np.union1d(res.moved, new_ids) if len(new_ids)
+                     else res.moved)
+        return res
 
     # R defaults small for incremental updates (the filtered set is small).
     if R is None:

@@ -64,6 +64,11 @@ class GladResult:
     # serving layer patches its ShardPlan instead of recompiling.  All
     # vertices for a random init.
     moved: Optional[np.ndarray] = None
+    # Multilevel runs only: one stats dict per level solve (coarsest solve
+    # first, then each refinement down to the finest), carrying the
+    # projected init / boundary-active mask each level ran under — enough
+    # to replay any level on the flat engine bit-for-bit.
+    levels: Optional[List[dict]] = None
 
 
 def _pair_members(assign: np.ndarray, i: int, j: int,
@@ -184,6 +189,9 @@ def glad_s(
     cache_bytes: int = 256 << 20,
     chunk_nodes: "int | str" = "auto",
     warm: "bool | str" = "auto",
+    multilevel: "bool | str" = False,
+    coarsen_to: int = 1024,
+    levels: Optional[int] = None,
 ) -> GladResult:
     """Paper Algorithm 1.
 
@@ -225,7 +233,36 @@ def glad_s(
         regression.  Masks are bit-identical warm or cold — the minimal
         source side is unique per quantized problem — so trajectories are
         unchanged (differential-fuzz + golden-fixture pinned).
+      multilevel: route the solve through the coarsen/solve/refine V-cycle
+        (:func:`repro.core.multilevel.glad_multilevel`) — the scaling path
+        for n >> 10^5.  'auto' enables it for maskless solves at
+        ``multilevel.MULTILEVEL_AUTO_MIN_N`` vertices and beyond; the
+        default False preserves every existing flat trajectory.  The
+        V-cycle always sweeps batched internally and is incompatible with
+        an ``active`` mask (it is a full-layout construct) and with
+        ``engine='reference'``.
+      coarsen_to: V-cycle coarsest-level size (multilevel only).
+      levels: cap on the number of hierarchy levels (None = until
+        ``coarsen_to`` or stagnation; multilevel only).
     """
+    if multilevel == "auto":
+        from repro.core.multilevel import MULTILEVEL_AUTO_MIN_N
+        multilevel = active is None and cm.graph.n >= MULTILEVEL_AUTO_MIN_N
+    if multilevel:
+        if engine == "reference":
+            raise ValueError("multilevel requires engine='incremental'")
+        if active is not None:
+            raise ValueError(
+                "multilevel solves the full layout; run flat glad_s for "
+                "masked (GLAD-E-style) refinements")
+        from repro.core.multilevel import glad_multilevel
+        return glad_multilevel(
+            cm, R=R, init=init, seed=seed, backend=backend,
+            coarsen_to=coarsen_to, levels=levels,
+            round_solver=round_solver, workers=workers,
+            worker_mode=worker_mode, cache=cache, cache_bytes=cache_bytes,
+            chunk_nodes=chunk_nodes, warm=warm,
+            max_iterations=max_iterations, on_iteration=on_iteration)
     rng = np.random.default_rng(seed)
     net, graph = cm.net, cm.graph
     t0 = time.perf_counter()

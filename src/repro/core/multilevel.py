@@ -1,0 +1,423 @@
+"""Multilevel GLAD: a METIS-style V-cycle over the pairwise min-cut engine.
+
+Flat GLAD sweeps pay O(n) member volume per round from the very first
+iteration, so million-vertex layouts spend almost all their wall time on
+first-pass cuts whose decisions are dominated by coarse cluster structure.
+The V-cycle factors that structure out:
+
+  coarsen   iterative heavy-edge matching (vectorized over the DataGraph
+            CSR, decided in the quantized integer weight domain) contracts
+            matched pairs into coarse vertices until ``coarsen_to`` is
+            reached.  Each coarse level is a real ``DataGraph`` +
+            ``CostModel`` pair: coarse edge weights are the summed fine
+            weights, and the coarse unary matrix is the row-sum of the fine
+            one (folded into the coarse network's ``mu``; compute and
+            per-vertex maintenance coefficients are zeroed so nothing is
+            double counted).  Because intra-cluster links cost tau[i,i] = 0
+            under any projection, the coarse objective of a coarse
+            assignment EQUALS the fine objective of its projection — the
+            hierarchy restricts the search space, never distorts the cost
+            (pinned by a hypothesis property test).
+  solve     the coarsest level is solved by the EXISTING engine
+            (:func:`repro.core.glad_s.glad_s`, batched disjoint-pair
+            rounds) — no new optimizer code at any level.
+  refine    each assignment is projected one level down
+            (``assign[cluster_of]``) and the same engine re-runs with the
+            projection as warm init and a boundary-active mask (endpoints
+            of cut links + ``refine_hops`` neighborhood rings).  The active
+            mask is exactly the regime the engine's 'auto' policies enable
+            the AssemblyCache and warm-start (ResidualCut) for, so
+            cross-round caching, persistency peeling and warm re-solves
+            compose per level unchanged.  ``cache_bytes``/``chunk_nodes``
+            are scaled to each level's vertex count, so coarse levels never
+            reserve the finest level's budgets.
+
+The finest refinement is literally a flat ``glad_s`` call on the original
+cost model — its trajectory is bit-identical to running the flat engine
+from the same projected init and mask (golden-fixture pinned).
+
+Matching is capacity-aware (cluster fine-vertex counts are capped at
+``MAX_CLUSTER_FACTOR * n / coarsen_to`` so no coarse vertex grows beyond
+what a balanced layout could place) and mu-aware: a merge commits both
+endpoints to one server, so candidates whose unary preference disagreement
+provably exceeds the traffic the merge can save are gated out
+(``MU_GATE_SLACK``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.engine import AUTO_CHUNK_NODES
+from repro.graphs.datagraph import DataGraph, contract_graph, csr_multirange
+from repro.graphs.edgenet import EdgeNetwork
+
+#: ``multilevel='auto'`` turns the V-cycle on from this vertex count.
+MULTILEVEL_AUTO_MIN_N = 200_000
+#: Default coarsest-level size (the level the full-R solve runs at).
+#: Chosen so the coarsest exhaustive-patience solve stays a small share of
+#: the V-cycle wall clock at n=50k/m=32 while final cost tracks the flat
+#: engine within 1e-3 (BENCH_layout multilevel cells).
+COARSEN_TO = 1024
+#: Matching proposal rounds per coarsening level.
+MATCH_ROUNDS = 4
+#: Stop coarsening when a level shrinks by less than this factor.
+STAGNATION_FRAC = 0.95
+#: Cluster fine-vertex cap = this factor x (n / coarsen_to).
+MAX_CLUSTER_FACTOR = 1.5
+#: mu gate: allow a merge only while the unary disagreement lower bound
+#: stays under SLACK x tau_ref x link weight (the traffic scale the merge
+#: can save).  Permissive on purpose — it prunes egregious merges only.
+MU_GATE_SLACK = 4.0
+#: Integer domain for matching decisions (mirrors maxflow's quantization).
+_WQ_SCALE = 10 ** 7
+#: Floor for a level's scaled AssemblyCache budget.
+_MIN_LEVEL_CACHE = 8 << 20
+
+
+@dataclasses.dataclass
+class Level:
+    """One rung of the coarsening hierarchy.
+
+    ``cluster_of`` maps the NEXT-FINER level's vertices onto this level's
+    (``None`` at the finest level).  ``vertex_w`` counts the fine vertices
+    each coarse vertex carries (the capacity weight the matcher caps).
+    """
+
+    cm: CostModel
+    cluster_of: Optional[np.ndarray]
+    vertex_w: np.ndarray
+
+
+def quantize_weights(w: np.ndarray) -> np.ndarray:
+    """Edge weights -> the integer domain matching decisions are made in
+    (scale-invariant, deterministic ties)."""
+    mx = float(w.max()) if len(w) else 0.0
+    if mx <= 0.0:
+        return np.zeros(len(w), dtype=np.int64)
+    return np.rint(w * (_WQ_SCALE / mx)).astype(np.int64)
+
+
+def _mix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Deterministic per-(vertex, neighbor) hash for tie-breaking.
+
+    Equal-weight candidates (the whole finest level, when links are unit
+    weight) must not all prefer the same smallest-id neighbor — that herds
+    every proposal onto a few hubs and each handshake round matches only
+    one tail per hub.  A splitmix-style hash spreads the ties uniformly
+    while staying a pure function of the ids (coarsening stays
+    deterministic, no RNG)."""
+    x = (a.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+         ^ (b.astype(np.uint64) + np.uint64(0xBF58476D1CE4E5B9)))
+    x ^= x >> np.uint64(31)
+    x *= np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(29)
+    return x
+
+
+def heavy_edge_matching(
+    graph: DataGraph,
+    vertex_w: np.ndarray,
+    max_w: int,
+    unary: Optional[np.ndarray] = None,
+    tau_ref: float = 0.0,
+    rounds: int = MATCH_ROUNDS,
+) -> np.ndarray:
+    """Iterative HEM over the CSR: ``match[v]`` = partner (or v itself).
+
+    Per round: every unmatched vertex PROPOSES to its heaviest eligible
+    unmatched neighbor (integer-quantized weight; ties broken by the
+    deterministic :func:`_mix` hash so equal-weight levels don't herd onto
+    hubs).  Every proposed-to vertex then ACCEPTS its heaviest incoming
+    proposer, overriding its own outgoing proposal — the incoming-aware
+    handshake is what lets a hub pair up every round instead of chasing a
+    neighbor that never looks back.  Vertices whose accept/propose
+    pointers agree (``c[c[v]] == v``) match.  Eligibility = the merged
+    capacity weight fits ``max_w`` and, when ``unary`` is given, the mu
+    gate holds.  Fully deterministic — no RNG anywhere, so coarsening is a
+    pure function of the cost model (the determinism the smoke bench
+    pins).
+    """
+    n = graph.n
+    match = np.arange(n, dtype=np.int64)
+    if graph.num_edges == 0:
+        return match
+    indptr, indices, eids = graph.indptr, graph.indices, graph.edge_ids
+    w = graph.weights_or_ones().astype(np.float64)
+    wq = quantize_weights(w)
+    matched = np.zeros(n, dtype=bool)
+    if unary is not None:
+        pref = np.argmin(unary, axis=1).astype(np.int64)
+        base = unary[np.arange(n), pref]
+    for _ in range(rounds):
+        un = np.flatnonzero(~matched)
+        flat, rep = csr_multirange(indptr, un)
+        if len(flat) == 0:
+            break
+        v = un[rep]
+        nbr = indices[flat]
+        ew = eids[flat]
+        ok = ~matched[nbr]
+        ok &= vertex_w[v] + vertex_w[nbr] <= max_w
+        if unary is not None and tau_ref > 0.0:
+            # Lower bound on the unary penalty of co-locating v and nbr:
+            # one of them must leave its preferred server.
+            d_lb = np.minimum(unary[v, pref[nbr]] - base[v],
+                              unary[nbr, pref[v]] - base[nbr])
+            ok &= MU_GATE_SLACK * tau_ref * w[ew] >= d_lb
+        if not ok.any():
+            break
+        v, nbr, cw = v[ok], nbr[ok], wq[ew[ok]]
+        h = _mix(v, nbr)
+        # Proposal: per proposer v, heaviest neighbor, hash tie-break.
+        order = np.lexsort((h, -cw, v))
+        vs_, nb_, cw_, h_ = v[order], nbr[order], cw[order], h[order]
+        head = np.ones(len(order), dtype=bool)
+        head[1:] = vs_[1:] != vs_[:-1]
+        pv, pt = vs_[head], nb_[head]            # proposer -> target
+        pw, ph = cw_[head], h_[head]
+        # Acceptance: per target, heaviest incoming proposer (hash, then
+        # proposer id, break residual ties deterministically).
+        order2 = np.lexsort((pv, ph, -pw, pt))
+        t2, p2 = pt[order2], pv[order2]
+        head2 = np.ones(len(order2), dtype=bool)
+        head2[1:] = t2[1:] != t2[:-1]
+        c = np.full(n, -1, dtype=np.int64)
+        c[pv] = pt                               # own outgoing proposal
+        c[t2[head2]] = p2[head2]                 # incoming winner overrides
+        cand = np.flatnonzero(c >= 0)
+        partner = c[cand]
+        mutual = (c[partner] == cand) & (cand < partner)
+        a, b = cand[mutual], partner[mutual]
+        if len(a) == 0:
+            break
+        match[a] = b
+        match[b] = a
+        matched[a] = True
+        matched[b] = True
+    return match
+
+
+def clusters_from_matching(match: np.ndarray):
+    """Matching -> (cluster_of, num_clusters); coarse ids ordered by each
+    cluster's smallest member id (deterministic)."""
+    rep = np.minimum(np.arange(len(match), dtype=np.int64), match)
+    uniq, cluster_of = np.unique(rep, return_inverse=True)
+    return cluster_of.astype(np.int64), int(len(uniq))
+
+
+def coarse_cost_model(
+    cm: CostModel, graph_c: DataGraph, cluster_of: np.ndarray, nc: int
+) -> CostModel:
+    """Exact coarse model: coarse ``mu`` rows are the summed fine ``unary``
+    rows; compute/per-vertex-maintenance coefficients are zeroed (already
+    inside the fine unary), ``tau``/``w``/``eps`` carry over.  The coarse
+    ``unary`` therefore equals the summed fine unary and, with summed edge
+    weights and tau[i,i] = 0, the coarse total of any coarse assignment
+    equals the fine total of its projection (up to float summation order).
+    """
+    net = cm.net
+    order = np.argsort(cluster_of, kind="stable")
+    starts = np.searchsorted(cluster_of[order], np.arange(nc))
+    mu_c = np.add.reduceat(cm.unary[order], starts, axis=0)
+    zeros = np.zeros(net.m, dtype=np.float64)
+    net_c = EdgeNetwork(
+        m=net.m, w=net.w, tau=net.tau, alpha=zeros, beta=zeros, gamma=zeros,
+        rho=zeros, eps=net.eps, mu=mu_c, sku=net.sku, coords=net.coords,
+    )
+    return CostModel(net_c, graph_c, cm.gnn)
+
+
+def build_levels(
+    cm: CostModel,
+    coarsen_to: int = COARSEN_TO,
+    max_levels: Optional[int] = None,
+    mu_gate: bool = True,
+) -> List[Level]:
+    """Coarsening hierarchy, finest first.  Stops at ``coarsen_to``
+    vertices, at ``max_levels`` rungs, or when matching stagnates."""
+    levels = [Level(cm=cm, cluster_of=None,
+                    vertex_w=np.ones(cm.graph.n, dtype=np.int64))]
+    tau_ref = cm.tau_ref() if mu_gate else 0.0
+    cap = max(2, int(np.ceil(
+        MAX_CLUSTER_FACTOR * cm.graph.n / max(coarsen_to, 1))))
+    while True:
+        cur = levels[-1]
+        g = cur.cm.graph
+        if g.n <= coarsen_to or g.num_edges == 0:
+            break
+        if max_levels is not None and len(levels) >= max_levels:
+            break
+        match = heavy_edge_matching(
+            g, cur.vertex_w, cap,
+            unary=cur.cm.unary if mu_gate else None, tau_ref=tau_ref)
+        cluster_of, nc = clusters_from_matching(match)
+        if nc >= STAGNATION_FRAC * g.n:
+            break
+        g_c = contract_graph(g, cluster_of, nc)
+        cm_c = coarse_cost_model(cur.cm, g_c, cluster_of, nc)
+        vw_c = np.bincount(cluster_of, weights=cur.vertex_w,
+                           minlength=nc).astype(np.int64)
+        levels.append(Level(cm=cm_c, cluster_of=cluster_of, vertex_w=vw_c))
+    return levels
+
+
+def restrict_assign(cluster_of: np.ndarray, nc: int, assign: np.ndarray,
+                    m: int) -> np.ndarray:
+    """Fine -> coarse restriction of a warm init: member-weighted majority
+    vote per cluster, ties to the smallest server id."""
+    cnt = np.bincount(cluster_of * m + assign, minlength=nc * m)
+    return cnt.reshape(nc, m).argmax(axis=1).astype(np.int64)
+
+
+def boundary_active(graph: DataGraph, assign: np.ndarray,
+                    hops: int = 1) -> np.ndarray:
+    """Refinement mask: endpoints of cut links, expanded ``hops`` rings."""
+    act = np.zeros(graph.n, dtype=bool)
+    e = graph.edges
+    if len(e) == 0:
+        return act
+    cut = assign[e[:, 0]] != assign[e[:, 1]]
+    act[e[cut, 0]] = True
+    act[e[cut, 1]] = True
+    for _ in range(int(hops)):
+        src = np.flatnonzero(act)
+        flat, _ = csr_multirange(graph.indptr, src)
+        if len(flat):
+            act[graph.indices[flat]] = True
+    return act
+
+
+def _level_knobs(n_level: int, n_finest: int, cache_bytes: int,
+                 chunk_nodes) -> tuple:
+    """Scale the engine budgets to a level's size: the AssemblyCache budget
+    shrinks with the vertex count (a coarse level's pair assemblies are
+    proportionally small) and the glued-union chunk never exceeds the
+    level itself."""
+    frac = n_level / max(n_finest, 1)
+    cb = min(int(cache_bytes),
+             max(_MIN_LEVEL_CACHE, int(cache_bytes * frac)))
+    if chunk_nodes == "auto":
+        cn = min(AUTO_CHUNK_NODES, max(1024, n_level))
+    else:
+        cn = chunk_nodes
+    return cb, cn
+
+
+def glad_multilevel(
+    cm: CostModel,
+    R: Optional[int] = None,
+    init: Optional[np.ndarray] = None,
+    seed: int = 0,
+    backend: str = "auto",
+    coarsen_to: int = COARSEN_TO,
+    levels: Optional[int] = None,
+    refine_R: Optional[int] = None,
+    refine_hops: int = 1,
+    round_solver: str = "auto",
+    workers: int = 0,
+    worker_mode: str = "thread",
+    cache: "bool | str" = "auto",
+    cache_bytes: int = 256 << 20,
+    chunk_nodes: "int | str" = "auto",
+    warm: "bool | str" = "auto",
+    mu_gate: bool = True,
+    max_iterations: int = 100_000,
+    on_iteration=None,
+):
+    """The V-cycle driver: coarsen, solve the coarsest level with ``R``
+    patience, then project + refine each level with ``refine_R`` patience
+    (default ``max(3, m)`` — the GLAD-E incremental setting) under a
+    boundary-active mask.  Every solve is a plain :func:`glad_s` call
+    (batched sweep), so all engine knobs compose per level.
+
+    Returns a ``GladResult`` whose ``history``/``iterations``/``accepted``
+    concatenate the per-level solves and whose ``levels`` field holds one
+    stats dict per solve — including each refinement's projected ``init``
+    and ``active`` mask, so callers can replay any level on the flat
+    engine bit-for-bit (the golden-fixture contract).
+    """
+    from repro.core.glad_s import GladResult, glad_s   # lazy: import cycle
+
+    t0 = time.perf_counter()
+    stack = build_levels(cm, coarsen_to=coarsen_to, max_levels=levels,
+                         mu_gate=mu_gate)
+    flat_kw = dict(backend=backend, sweep="batched",
+                   round_solver=round_solver, workers=workers,
+                   worker_mode=worker_mode, cache=cache, warm=warm,
+                   max_iterations=max_iterations,
+                   on_iteration=on_iteration, multilevel=False)
+    n0 = cm.graph.n
+    if len(stack) == 1:
+        # Nothing to coarsen (tiny graph / no links): flat solve, annotated.
+        res = glad_s(cm, R=R, init=init, seed=seed, cache_bytes=cache_bytes,
+                     chunk_nodes=chunk_nodes, **flat_kw)
+        res.levels = [dict(level=0, role="coarsest", n=n0,
+                           edges=cm.graph.num_edges, init=init, active=None,
+                           R=R, cost=res.cost, iterations=res.iterations,
+                           accepted=res.accepted, history=list(res.history),
+                           wall_time_s=res.wall_time_s)]
+        return res
+
+    # Restrict a provided warm init down the stack (majority vote per rung).
+    coarse_init = None
+    if init is not None:
+        coarse_init = np.asarray(init, dtype=np.int64)
+        for lvl in stack[1:]:
+            coarse_init = restrict_assign(
+                lvl.cluster_of, lvl.cm.graph.n, coarse_init, cm.net.m)
+
+    level_stats: List[dict] = []
+    top = stack[-1]
+    cb, cn = _level_knobs(top.cm.graph.n, n0, cache_bytes, chunk_nodes)
+    res = glad_s(top.cm, R=R, init=coarse_init, seed=seed, cache_bytes=cb,
+                 chunk_nodes=cn, **flat_kw)
+    assign = res.assign
+    history = list(res.history)
+    iters, accepted = res.iterations, res.accepted
+    level_stats.append(dict(
+        level=len(stack) - 1, role="coarsest", n=top.cm.graph.n,
+        edges=top.cm.graph.num_edges, init=coarse_init, active=None, R=R,
+        cost=res.cost, iterations=res.iterations, accepted=res.accepted,
+        history=list(res.history), wall_time_s=res.wall_time_s))
+
+    if refine_R is None:
+        refine_R = max(3, cm.net.m)
+    for k in range(len(stack) - 2, -1, -1):
+        lvl = stack[k]
+        proj = assign[stack[k + 1].cluster_of]
+        act = boundary_active(lvl.cm.graph, proj, hops=refine_hops)
+        stats = dict(level=k, role="refine", n=lvl.cm.graph.n,
+                     edges=lvl.cm.graph.num_edges, init=proj, active=act,
+                     R=refine_R)
+        if not act.any():
+            # Projection has no cut links at this level: nothing to refine.
+            assign = proj
+            stats.update(cost=float(lvl.cm.total(proj)), iterations=0,
+                         accepted=0, history=[], wall_time_s=0.0)
+            level_stats.append(stats)
+            continue
+        cb, cn = _level_knobs(lvl.cm.graph.n, n0, cache_bytes, chunk_nodes)
+        r = glad_s(lvl.cm, R=refine_R, init=proj, active=act, seed=seed,
+                   cache_bytes=cb, chunk_nodes=cn, **flat_kw)
+        assign = r.assign
+        history.extend(r.history)
+        iters += r.iterations
+        accepted += r.accepted
+        stats.update(cost=r.cost, iterations=r.iterations,
+                     accepted=r.accepted, history=list(r.history),
+                     wall_time_s=r.wall_time_s)
+        level_stats.append(stats)
+
+    f = cm.factors(assign)
+    moved = (np.flatnonzero(assign != np.asarray(init, dtype=np.int64))
+             if init is not None else np.arange(n0, dtype=np.int64))
+    return GladResult(
+        assign=assign, cost=f["total"], history=history, iterations=iters,
+        accepted=accepted, wall_time_s=time.perf_counter() - t0, factors=f,
+        moved=moved, levels=level_stats,
+    )

@@ -140,20 +140,26 @@ def data_partition(
     cache: "bool | str" = "auto",
     chunk_nodes: "int | str" = "auto",
     warm: "bool | str" = "auto",
+    multilevel: "bool | str" = False,
+    coarsen_to: int = 1024,
+    levels: Optional[int] = None,
 ) -> DevicePartition:
     """GLAD-S over a pod-shaped EdgeNetwork -> shard_map-ready partition.
 
     Uses the batched disjoint-pair sweep — the placement bridge wants wall
     time, not the paper's exact Alg.-1 trajectory.  ``workers`` /
     ``cache`` / ``chunk_nodes`` / ``warm`` tune the engine's block fan-out,
-    cross-round assembly caching and warm-started incremental re-solves
+    cross-round assembly caching and warm-started incremental re-solves;
+    ``multilevel`` ('auto' recommended for n >= 200k) routes the layout
+    through the coarsen/solve/refine V-cycle
     (see :func:`repro.core.glad_s.glad_s`)."""
     if net is None:
         net = pod_edge_network(num_parts, graph.n, pods=pods, seed=seed)
     cm = CostModel(net, graph, gnn)
     res = glad_s(cm, R=R, seed=seed, init=init, sweep="batched",
                  workers=workers, cache=cache, chunk_nodes=chunk_nodes,
-                 warm=warm)
+                 warm=warm, multilevel=multilevel, coarsen_to=coarsen_to,
+                 levels=levels)
     return partition_from_assign(graph, res.assign, num_parts, res.factors)
 
 
@@ -269,12 +275,18 @@ def rebalance(
     cache: "bool | str" = "auto",
     chunk_nodes: "int | str" = "auto",
     warm: "bool | str" = "auto",
+    multilevel: "bool | str" = False,
+    coarsen_to: int = 1024,
+    levels: Optional[int] = None,
 ) -> DevicePartition:
     """Straggler mitigation: degrade the slow server's compute coefficients
-    and run an incremental re-layout warm-started from the current one."""
+    and run an incremental re-layout warm-started from the current one.
+    ``multilevel`` escalates to the V-cycle (warm init restricted up the
+    hierarchy by majority vote) — for fleets serving very large graphs."""
     net2 = net.degrade(straggler, slow_factor)
     cm = CostModel(net2, graph, gnn)
     res = glad_s(cm, init=part.assign, R=net2.m, seed=seed, sweep="batched",
                  workers=workers, cache=cache, chunk_nodes=chunk_nodes,
-                 warm=warm)
+                 warm=warm, multilevel=multilevel, coarsen_to=coarsen_to,
+                 levels=levels)
     return partition_from_assign(graph, res.assign, part.num_parts, res.factors)

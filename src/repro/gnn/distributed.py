@@ -177,20 +177,38 @@ class ShardPlan:
 
 
 # --------------------------------------------------------- host construction
+def _degree_buckets(deg: np.ndarray) -> np.ndarray:
+    """Power-of-two degree buckets: floor(log2(deg)) (degree <= 1 -> 0).
+
+    The member-slotting key: coarse enough that the small degree drift of
+    incremental graph evolution almost never crosses a bucket boundary,
+    while hubs still sort ahead of the tail (the BSR-density property the
+    tiled aggregation kernels rely on)."""
+    return np.where(deg > 1,
+                    np.log2(np.maximum(deg, 1)).astype(np.int64), 0)
+
+
 def _part_members(graph: DataGraph, assign: np.ndarray, num_parts: int,
                   parts=None) -> dict:
-    """Per-part member lists, degree-descending (vertex-id tie-break).
+    """Per-part member lists: degree-BUCKET descending, vertex-id ascending
+    within a bucket.
 
     Deterministic — two compiles of the same assignment produce identical
-    tables — and the within-partition ordering the BSR tiling assumes
-    (kernels/gnn_aggregate: degree ordering concentrates links in few
-    blocks, so block density tracks layout quality)."""
-    deg = graph.degrees
+    tables — and hub-first, the within-partition ordering the BSR tiling
+    assumes (kernels/gnn_aggregate: degree ordering concentrates links in
+    few blocks, so block density tracks layout quality).  Bucketing by
+    floor(log2(degree)) instead of exact degree makes slots ID-STABLE
+    across patches: a vertex whose degree drifts within its power-of-two
+    bucket keeps its relative slot, so ``patch_plan`` reslots (and the BSR
+    layer retiles) only the parts whose membership or bucket census
+    actually changed — the prerequisite for finer per-block-row BSR
+    patching."""
+    b = _degree_buckets(graph.degrees)
     out = {}
     for p in (range(num_parts) if parts is None else parts):
         vs = np.flatnonzero(assign == p)
         if len(vs):
-            vs = vs[np.lexsort((vs, -deg[vs]))]
+            vs = vs[np.lexsort((vs, -b[vs]))]
         out[int(p)] = vs.astype(np.int64)
     return out
 

@@ -197,6 +197,44 @@ class DataGraph:
         return DataGraph(n=n, edges=edges, features=feats, labels=labels, coords=coords)
 
 
+# --------------------------------------------------------------- coarsening
+def contract_graph(graph: DataGraph, cluster_of: np.ndarray,
+                   num_clusters: int) -> DataGraph:
+    """Cluster-quotient graph (multilevel coarsening): vertices are the
+    clusters, intra-cluster links vanish, parallel inter-cluster links merge
+    with SUMMED weights — so tau * weight over the coarse links equals the
+    fine C_T of any projected layout exactly.
+
+    The merged edge list is built already canonical (unique lo < hi keys in
+    sorted order), so ``edge_weights`` aligns with the post-init
+    canonical ``edges`` order by construction.  Deterministic: the per-key
+    weight sums are sequential ``np.add.reduceat`` segments over the sorted
+    key order.
+    """
+    cluster_of = np.asarray(cluster_of, dtype=np.int64)
+    e = graph.edges
+    if len(e) == 0:
+        return DataGraph(n=num_clusters, edges=np.zeros((0, 2), np.int64))
+    w = graph.weights_or_ones().astype(np.float64)
+    cu = cluster_of[e[:, 0]]
+    cv = cluster_of[e[:, 1]]
+    keep = cu != cv
+    lo = np.minimum(cu[keep], cv[keep])
+    hi = np.maximum(cu[keep], cv[keep])
+    key = lo * num_clusters + hi
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    if len(ks) == 0:
+        return DataGraph(n=num_clusters, edges=np.zeros((0, 2), np.int64))
+    ws = w[keep][order]
+    uniq, start = np.unique(ks, return_index=True)
+    wsum = np.add.reduceat(ws, start)
+    edges = np.stack([uniq // num_clusters, uniq % num_clusters], axis=1)
+    g = DataGraph(n=num_clusters, edges=edges)
+    g.edge_weights = wsum
+    return g
+
+
 # ---------------------------------------------------------------- synthetic
 def synthetic_siot(
     n: int = 8001,

@@ -100,7 +100,10 @@ class ElasticCoordinator:
                  part: DevicePartition, workers: int = 0,
                  cache: "bool | str" = "auto",
                  chunk_nodes: "int | str" = "auto",
-                 warm: "bool | str" = "auto"):
+                 warm: "bool | str" = "auto",
+                 multilevel: "bool | str" = False,
+                 coarsen_to: int = 1024,
+                 levels: Optional[int] = None):
         self.net = net
         self.graph = graph
         self.gnn = gnn
@@ -114,9 +117,15 @@ class ElasticCoordinator:
         # latency is the control plane's budget.  The warm-started
         # relayouts carry no active mask, so cache/warm 'auto' resolve OFF
         # there; pass cache=True, warm=True to retain flow state across a
-        # coordinator's repeated relayouts of the same fleet.
+        # coordinator's repeated relayouts of the same fleet.  'multilevel'
+        # ('auto' recommended for very large graphs) escalates relayouts to
+        # the coarsen/solve/refine V-cycle — the warm init is restricted up
+        # the hierarchy by majority vote, so survivors still anchor the
+        # coarse solve.
         self._glad_opts = dict(workers=workers, cache=cache,
-                               chunk_nodes=chunk_nodes, warm=warm)
+                               chunk_nodes=chunk_nodes, warm=warm,
+                               multilevel=multilevel, coarsen_to=coarsen_to,
+                               levels=levels)
 
     def on_failure(self, dead: List[int], seed: int = 0) -> DevicePartition:
         """Node loss: disconnect dead servers, re-layout incrementally

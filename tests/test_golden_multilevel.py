@@ -1,0 +1,101 @@
+"""Golden multilevel V-cycle regression.
+
+Pins (a) the coarsening hierarchy — level sizes and a checksum of every
+cluster map, so matching stays a deterministic pure function of the cost
+model — and (b) the FINEST-LEVEL refinement trajectory bit-for-bit, both
+as produced inside the V-cycle and as replayed by a flat ``glad_s`` call
+from the recorded projected init + boundary mask.  The two must agree
+with the committed history hex-for-hex: the finest refinement IS the flat
+engine, not a lookalike.
+
+REGENERATION RECIPE (only for a deliberate trajectory- or
+coarsening-semantics change): rebuild the instance from ``params``, run
+``glad_s(..., multilevel=True, coarsen_to=params['coarsen_to'])``, dump
+level sizes, per-rung cluster checksums (splitmix-mixed XOR, see below),
+and the finest level's R/active-count/iterations/accepted/history(+hex)/
+cost(+hex)/final assign to ``fixtures/golden_multilevel.json``.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.glad_s import glad_s
+from repro.core.multilevel import build_levels
+from repro.graphs.datagraph import synthetic_siot
+from repro.graphs.edgenet import build_edge_network
+
+FIXTURE = (pathlib.Path(__file__).parent / "fixtures"
+           / "golden_multilevel.json")
+
+
+def _cluster_checksum(cluster_of):
+    return int(np.bitwise_xor.reduce(
+        (cluster_of.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15))
+        ^ np.arange(len(cluster_of), dtype=np.uint64)))
+
+
+@pytest.fixture(scope="module")
+def golden_ml():
+    with open(FIXTURE) as f:
+        fix = json.load(f)
+    p = fix["params"]
+    g = synthetic_siot(n=p["n"], target_links=p["target_links"],
+                       seed=p["graph_seed"])
+    net = build_edge_network(g, p["m"], seed=p["net_seed"],
+                             mu_factor=p["mu_factor"])
+    cm = CostModel(net, g, workload_for(p["gnn_model"], p["in_dim"]))
+    res = glad_s(cm, seed=p["glad_seed"], sweep="batched", multilevel=True,
+                 coarsen_to=p["coarsen_to"])
+    return fix, cm, res
+
+
+def test_coarsening_hierarchy_matches_golden(golden_ml):
+    fix, cm, _ = golden_ml
+    stack = build_levels(cm, coarsen_to=fix["params"]["coarsen_to"])
+    assert [l.cm.graph.n for l in stack] == fix["level_sizes"]
+    assert ([_cluster_checksum(l.cluster_of) for l in stack[1:]]
+            == fix["cluster_checksums"])
+
+
+def test_finest_refinement_matches_golden_bit_for_bit(golden_ml):
+    fix, _, res = golden_ml
+    finest = res.levels[-1]
+    assert finest["level"] == 0 and finest["role"] == "refine"
+    assert int(finest["active"].sum()) == fix["active_count"]
+    assert finest["R"] == fix["refine_R"]
+    assert finest["iterations"] == fix["iterations"]
+    assert finest["accepted"] == fix["accepted"]
+    got_hex = [np.float64(h).hex() for h in finest["history"]]
+    assert got_hex == fix["history_hex"]
+    assert np.float64(finest["cost"]).hex() == fix["final_cost_hex"]
+    np.testing.assert_array_equal(res.assign, np.array(fix["assign"]))
+
+
+def test_flat_replay_of_finest_level_matches_golden_bit_for_bit(golden_ml):
+    """Run the flat engine from the V-cycle's recorded projected init and
+    boundary mask: it must walk the committed trajectory exactly."""
+    fix, cm, res = golden_ml
+    finest = res.levels[-1]
+    replay = glad_s(cm, R=finest["R"], init=finest["init"],
+                    active=finest["active"],
+                    seed=fix["params"]["glad_seed"], sweep="batched")
+    assert replay.iterations == fix["iterations"]
+    assert replay.accepted == fix["accepted"]
+    assert ([np.float64(h).hex() for h in replay.history]
+            == fix["history_hex"])
+    assert np.float64(replay.cost).hex() == fix["final_cost_hex"]
+    np.testing.assert_array_equal(replay.assign, np.array(fix["assign"]))
+
+
+def test_golden_multilevel_fixture_is_self_consistent(golden_ml):
+    fix, cm, _ = golden_ml
+    assert cm.total(np.array(fix["assign"])) == pytest.approx(
+        fix["final_cost"], rel=1e-12)
+    h = np.array(fix["history"])
+    assert (np.diff(h) <= 1e-9).all()
+    assert h[-1] == pytest.approx(fix["final_cost"], rel=1e-12)
+    assert fix["accepted"] >= 1      # the pinned refinement really moves
+    assert len(fix["level_sizes"]) == len(fix["cluster_checksums"]) + 1

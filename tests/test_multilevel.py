@@ -1,0 +1,364 @@
+"""Multilevel GLAD V-cycle (heavy-edge coarsening + per-level refinement).
+
+The load-bearing property is EXACTNESS of the hierarchy: the coarse
+objective of any coarse assignment equals the fine objective of its
+projection, because intra-cluster links cost tau[i,i] = 0, inter-cluster
+edge weights sum, and the coarse unary matrix is the row-sum of the fine
+one.  Everything else (matching validity, capacity caps, determinism,
+restriction/projection, boundary masks, engine dispatch, the glad_e
+escalation) guards the plumbing around that invariant.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.engine import PairCutEngine
+from repro.core.glad_s import glad_s
+from repro.core.multilevel import (
+    boundary_active,
+    build_levels,
+    clusters_from_matching,
+    glad_multilevel,
+    heavy_edge_matching,
+    quantize_weights,
+    restrict_assign,
+)
+from repro.graphs.datagraph import DataGraph, contract_graph, synthetic_siot
+from repro.graphs.edgenet import build_edge_network
+from tests.conftest import random_graph
+
+
+def _cm(rng, n, m, extra_edges=None, mu_factor=2.0, seed=0):
+    """Nontrivial instance: mu_factor large enough that the optimum uses
+    several servers (the build_edge_network default collapses to one at
+    small n, which makes refinement vacuous)."""
+    g = random_graph(rng, n, n if extra_edges is None else extra_edges)
+    net = build_edge_network(g, m, seed=seed, mu_factor=mu_factor)
+    return CostModel(net, g, workload_for("gcn", 8))
+
+
+# ---------------------------------------------------------------- exactness
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 5000))
+def test_coarse_cost_equals_projected_fine_cost(seed):
+    """For EVERY adjacent level pair and random coarse assignment: the
+    coarse total equals the fine total of the projection (tight rtol —
+    only float summation order may differ)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(30, 120))
+    cm = _cm(rng, n, int(rng.integers(2, 5)), seed=seed)
+    stack = build_levels(cm, coarsen_to=max(4, n // 6))
+    assert len(stack) >= 2, "instance failed to coarsen at all"
+    for fine, coarse in zip(stack[:-1], stack[1:]):
+        nc = coarse.cm.graph.n
+        for _ in range(3):
+            a_c = rng.integers(0, cm.net.m, size=nc).astype(np.int64)
+            a_f = a_c[coarse.cluster_of]
+            assert coarse.cm.total(a_c) == pytest.approx(
+                fine.cm.total(a_f), rel=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000))
+def test_coarsening_respects_capacity_and_partition(seed):
+    """vertex_w is a partition of the fine vertices (sums preserved) and
+    every cluster respects the matcher's capacity cap."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 150))
+    cm = _cm(rng, n, 3, seed=seed)
+    coarsen_to = max(4, n // 8)
+    stack = build_levels(cm, coarsen_to=coarsen_to)
+    from repro.core.multilevel import MAX_CLUSTER_FACTOR
+    cap = max(2, int(np.ceil(MAX_CLUSTER_FACTOR * n / coarsen_to)))
+    for lvl in stack:
+        assert int(lvl.vertex_w.sum()) == n
+        assert lvl.vertex_w.max() <= cap
+        if lvl.cluster_of is not None:
+            assert lvl.cluster_of.min() >= 0
+            assert lvl.cluster_of.max() == lvl.cm.graph.n - 1
+
+
+# ----------------------------------------------------- matching / contraction
+
+def test_matching_is_valid_involution_between_neighbors():
+    rng = np.random.default_rng(7)
+    g = random_graph(rng, 80, 120)
+    vw = np.ones(g.n, dtype=np.int64)
+    match = heavy_edge_matching(g, vw, max_w=2)
+    np.testing.assert_array_equal(match[match], np.arange(g.n))
+    nbrs = {tuple(e) for e in g.edges} | {tuple(e[::-1]) for e in g.edges}
+    paired = np.flatnonzero(match != np.arange(g.n))
+    assert len(paired) > 0
+    for v in paired:
+        assert (int(v), int(match[v])) in nbrs
+
+
+def test_matching_capacity_gate_blocks_overweight_pairs():
+    g = DataGraph(n=4, edges=np.array([[0, 1], [1, 2], [2, 3]]))
+    vw = np.array([3, 1, 1, 3], dtype=np.int64)
+    match = heavy_edge_matching(g, vw, max_w=2)
+    # Only 1-2 fits under the cap; 0 and 3 must stay singletons.
+    assert match[0] == 0 and match[3] == 3
+    assert match[1] == 2 and match[2] == 1
+
+
+def test_matching_prefers_heavy_edges():
+    g = DataGraph(n=4, edges=np.array([[0, 1], [1, 2], [2, 3]]))
+    g.edge_weights = np.array([1.0, 50.0, 1.0])
+    match = heavy_edge_matching(g, np.ones(4, np.int64), max_w=2)
+    assert match[1] == 2 and match[2] == 1
+
+
+def test_quantize_weights_scale_invariant():
+    w = np.array([1.0, 2.0, 4.0])
+    np.testing.assert_array_equal(quantize_weights(w),
+                                  quantize_weights(w * 1e-6))
+    assert quantize_weights(np.zeros(3)).dtype == np.int64
+
+
+def test_contract_graph_sums_parallel_edge_weights():
+    g = DataGraph(n=4, edges=np.array([[0, 1], [0, 2], [1, 3], [2, 3]]))
+    g.edge_weights = np.array([5.0, 1.0, 2.0, 3.0])
+    # clusters {0,1} and {2,3}: intra edges 0-1 (w=5) and 2-3 (w=3) vanish;
+    # 0-2 (1) and 1-3 (2) become one coarse link of weight 3.
+    cluster_of = np.array([0, 0, 1, 1])
+    gc = contract_graph(g, cluster_of, 2)
+    assert gc.n == 2 and gc.num_edges == 1
+    np.testing.assert_array_equal(gc.edges, [[0, 1]])
+    np.testing.assert_allclose(gc.edge_weights, [3.0])
+
+
+def test_clusters_from_matching_orders_by_smallest_member():
+    match = np.array([2, 1, 0, 4, 3])
+    cluster_of, nc = clusters_from_matching(match)
+    assert nc == 3
+    np.testing.assert_array_equal(cluster_of, [0, 1, 0, 2, 2])
+
+
+def test_coarsening_is_deterministic():
+    rng = np.random.default_rng(11)
+    cm = _cm(rng, 200, 4)
+    s1 = build_levels(cm, coarsen_to=16)
+    s2 = build_levels(cm, coarsen_to=16)
+    assert len(s1) == len(s2)
+    for a, b in zip(s1[1:], s2[1:]):
+        np.testing.assert_array_equal(a.cluster_of, b.cluster_of)
+        np.testing.assert_array_equal(a.cm.graph.edges, b.cm.graph.edges)
+
+
+# ------------------------------------------------- restriction / projection
+
+def test_restrict_assign_majority_vote_ties_to_smallest():
+    cluster_of = np.array([0, 0, 0, 1, 1])
+    assign = np.array([2, 2, 1, 3, 0])
+    out = restrict_assign(cluster_of, 2, assign, m=4)
+    np.testing.assert_array_equal(out, [2, 0])   # tie 0-vs-3 -> 0
+
+
+def test_boundary_active_marks_cut_endpoints_and_rings():
+    g = DataGraph(n=5, edges=np.array([[0, 1], [1, 2], [2, 3], [3, 4]]))
+    assign = np.array([0, 0, 1, 1, 1])
+    act0 = boundary_active(g, assign, hops=0)
+    np.testing.assert_array_equal(act0, [False, True, True, False, False])
+    act1 = boundary_active(g, assign, hops=1)
+    np.testing.assert_array_equal(act1, [True, True, True, True, False])
+    uncut = boundary_active(g, np.zeros(5, np.int64), hops=1)
+    assert not uncut.any()
+
+
+# --------------------------------------------------------------- the V-cycle
+
+def test_vcycle_matches_flat_quality_and_reports_levels():
+    rng = np.random.default_rng(0)
+    g = synthetic_siot(n=2000, target_links=8400, seed=0)
+    net = build_edge_network(g, 8, seed=0, mu_factor=2.0)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+    flat = glad_s(cm, seed=0, sweep="batched")
+    ml = glad_s(cm, seed=0, sweep="batched", multilevel=True, coarsen_to=256)
+    assert ml.cost <= flat.cost * 1.05
+    assert ml.cost == pytest.approx(cm.total(ml.assign), rel=1e-12)
+    assert ml.levels is not None and len(ml.levels) >= 2
+    assert ml.levels[0]["role"] == "coarsest"
+    assert ml.levels[-1]["level"] == 0
+    assert ml.iterations == sum(ls["iterations"] for ls in ml.levels)
+    # moved covers every vertex whose final placement differs from init
+    # (init None -> all vertices reported).
+    assert len(ml.moved) == g.n
+
+
+def test_finest_refinement_bit_identical_to_flat_replay():
+    """The finest refinement IS a flat glad_s call: replaying it from the
+    recorded projected init + boundary mask must reproduce the history
+    hex-for-hex and the assignment exactly."""
+    rng = np.random.default_rng(3)
+    g = synthetic_siot(n=1500, target_links=6300, seed=3)
+    net = build_edge_network(g, 8, seed=3, mu_factor=2.0)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+    ml = glad_s(cm, seed=3, sweep="batched", multilevel=True, coarsen_to=128)
+    finest = ml.levels[-1]
+    assert finest["level"] == 0 and finest["role"] == "refine"
+    assert finest["active"].any(), "instance must exercise real refinement"
+    replay = glad_s(cm, R=finest["R"], init=finest["init"],
+                    active=finest["active"], seed=3, sweep="batched")
+    assert ([np.float64(h).hex() for h in replay.history]
+            == [np.float64(h).hex() for h in finest["history"]])
+    np.testing.assert_array_equal(replay.assign, ml.assign)
+    # The level's recorded cost is the engine's incremental total — bit
+    # comparable; ml.cost is recomputed from factors (summation order may
+    # differ by a ulp) so it only gets a tight approx.
+    assert np.float64(replay.cost).hex() == np.float64(finest["cost"]).hex()
+    assert ml.cost == pytest.approx(replay.cost, rel=1e-12)
+
+
+def test_vcycle_warm_init_restricts_down_the_stack():
+    rng = np.random.default_rng(5)
+    cm = _cm(rng, 300, 4)
+    init = rng.integers(0, 4, size=300).astype(np.int64)
+    ml = glad_multilevel(cm, init=init, seed=5, coarsen_to=32)
+    flat_from_init = glad_s(cm, init=init, seed=5, sweep="batched")
+    assert ml.cost <= flat_from_init.cost * 1.05
+    moved_set = set(ml.moved.tolist())
+    diff = set(np.flatnonzero(ml.assign != init).tolist())
+    assert diff == moved_set
+
+
+def test_vcycle_tiny_graph_degenerates_to_flat():
+    rng = np.random.default_rng(9)
+    cm = _cm(rng, 20, 3)
+    ml = glad_s(cm, seed=1, sweep="batched", multilevel=True,
+                coarsen_to=1024)
+    flat = glad_s(cm, seed=1, sweep="batched")
+    np.testing.assert_array_equal(ml.assign, flat.assign)
+    assert len(ml.levels) == 1 and ml.levels[0]["role"] == "coarsest"
+
+
+def test_vcycle_levels_knob_caps_stack_depth():
+    rng = np.random.default_rng(13)
+    cm = _cm(rng, 400, 4)
+    ml = glad_s(cm, seed=0, sweep="batched", multilevel=True, coarsen_to=8,
+                levels=2)
+    # levels=2 -> one coarsening rung -> coarsest + exactly one refinement.
+    assert len(ml.levels) == 2
+
+
+# ----------------------------------------------------------------- dispatch
+
+def test_multilevel_rejects_reference_engine_and_active_mask(cm_small):
+    with pytest.raises(ValueError, match="multilevel"):
+        glad_s(cm_small, multilevel=True, engine="reference")
+    act = np.zeros(cm_small.graph.n, dtype=bool)
+    act[:5] = True
+    with pytest.raises(ValueError, match="multilevel"):
+        glad_s(cm_small, multilevel=True, active=act)
+
+
+def test_multilevel_auto_threshold(cm_small, monkeypatch):
+    import repro.core.multilevel as mlmod
+    calls = []
+    real = mlmod.glad_multilevel
+
+    def spy(cm, **kw):
+        calls.append(cm.graph.n)
+        return real(cm, **kw)
+
+    monkeypatch.setattr(mlmod, "glad_multilevel", spy)
+    monkeypatch.setattr("repro.core.glad_s.glad_multilevel", spy,
+                        raising=False)
+    # Below the auto threshold: 'auto' must stay flat.
+    glad_s(cm_small, seed=0, sweep="batched", multilevel="auto")
+    assert calls == []
+    monkeypatch.setattr(mlmod, "MULTILEVEL_AUTO_MIN_N", 10)
+    glad_s(cm_small, seed=0, sweep="batched", multilevel="auto")
+    assert calls == [cm_small.graph.n]
+
+
+def test_glad_e_escalation_routes_through_vcycle():
+    from repro.core.glad_e import glad_e
+    from repro.core.evolution import apply_delta, sample_delta
+    gnn = workload_for("gcn", 16)
+    g0 = synthetic_siot(n=400, target_links=1680, seed=2)
+    net0 = build_edge_network(g0, 4, seed=2, mu_factor=2.0)
+    cm0 = CostModel(net0, g0, gnn)
+    base = glad_s(cm0, seed=2, sweep="batched")
+    delta = sample_delta(g0, pct_links=0.2, pct_vertices=0.05, seed=2)
+    g1 = apply_delta(g0, delta)
+    net1 = build_edge_network(g1, 4, seed=2, mu_factor=2.0)
+    net1.mu = net1.mu[:g1.n]
+    cm1 = CostModel(net1, g1, gnn)
+    esc = glad_e(cm1, g0, base.assign, seed=2, multilevel=True,
+                 coarsen_to=64)
+    assert esc.levels is not None   # escalated solves carry level stats
+    flat = glad_e(cm1, g0, base.assign, seed=2)
+    assert esc.cost <= flat.cost * 1.05
+
+
+# --------------------------------- AssemblyCache pair-frequency admission
+
+def test_admission_gates_cold_pairs_under_pressure(cm_small):
+    """Under budget pressure a first-touch pair is assembled but NOT
+    admitted (no eviction churn); displacement needs a lead of TWO over
+    the LRU victim (one would be indistinguishable from cyclic-scan phase
+    skew — see PairCutEngine._admit)."""
+    rng = np.random.default_rng(4)
+    init = rng.integers(0, cm_small.net.m, size=cm_small.graph.n)
+    eng = PairCutEngine(cm_small, init.astype(np.int64), cache=True)
+    assert eng.solve_pair(0, 1) is not None     # fills the (empty) cache
+    e01 = eng._cache[(0, 1)]
+    eng._cache_bytes = eng._cache_used          # now: zero headroom
+    assert eng.solve_pair(2, 3) is not None     # first touch -> rejected
+    st_ = eng.cache_stats()
+    assert st_["rejected"] == 1 and st_["evictions"] == 0
+    assert (2, 3) not in eng._cache
+    assert eng._cache[(0, 1)] is e01            # resident entry untouched
+    # Second touch: lead of 1 over resident (0,1) — still phase-skew
+    # territory, still rejected.
+    assert eng.solve_pair(2, 3) is not None
+    assert (2, 3) not in eng._cache
+    assert eng.cache_stats()["evictions"] == 0
+    # Third touch: lead of 2 -> genuinely hotter, displaces the resident.
+    assert eng.solve_pair(2, 3) is not None
+    assert (2, 3) in eng._cache
+    assert eng.cache_stats()["evictions"] >= 1
+
+
+def test_admission_uniform_scan_freezes_resident_set(cm_small):
+    """A uniform scan over more pairs than fit must stop thrashing: after
+    the warmup pass, evictions stay flat while hits keep accruing."""
+    rng = np.random.default_rng(8)
+    m = cm_small.net.m
+    init = rng.integers(0, m, size=cm_small.graph.n).astype(np.int64)
+    pairs = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    eng = PairCutEngine(cm_small, init.copy(), cache=True)
+    for p in pairs:                             # size the budget to ~2 pairs
+        eng.solve_pair(*p)
+    budget = max(e.nbytes for e in eng._cache.values()) * 2
+    eng = PairCutEngine(cm_small, init.copy(), cache=True,
+                        cache_bytes=budget)
+    for _ in range(2):
+        for p in pairs:
+            eng.solve_pair(*p)
+    ev_warm = eng.cache_stats()["evictions"]
+    for _ in range(3):
+        for p in pairs:
+            eng.solve_pair(*p)
+    st_ = eng.cache_stats()
+    assert st_["evictions"] == ev_warm          # admission froze the set
+    assert st_["rejected"] > 0
+    assert st_["hits"] + st_["patched"] > 0     # residents keep serving
+
+
+@pytest.mark.parametrize("budget", [1, 64 << 10])
+def test_admission_never_changes_trajectories(cm_small, budget):
+    """Admission decides WHICH assemblies are retained, never their
+    content: starved-budget runs stay bit-identical to cache-free ones."""
+    act = np.zeros(cm_small.graph.n, dtype=bool)
+    act[: cm_small.graph.n // 2] = True
+    init = np.arange(cm_small.graph.n, dtype=np.int64) % cm_small.net.m
+    kw = dict(R=6, init=init, active=act, seed=3, sweep="batched")
+    res = glad_s(cm_small, cache=True, cache_bytes=budget, **kw)
+    ref = glad_s(cm_small, cache=False, **kw)
+    assert ([np.float64(a).hex() for a in res.history]
+            == [np.float64(b).hex() for b in ref.history])
+    np.testing.assert_array_equal(res.assign, ref.assign)

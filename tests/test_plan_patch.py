@@ -231,11 +231,45 @@ def test_plan_dtypes_and_determinism(small_siot):
     build_plan_bsr(plan, bm=4, bk=8)
     build_plan_bsr(again, bm=4, bk=8)
     assert plans_equal(plan, again) == []
-    # Members are degree-ordered within each partition (BSR contract).
+    # Members are degree-BUCKET-ordered within each partition (BSR
+    # contract): bucket floor(log2(deg)) non-increasing, vertex id
+    # ascending inside each bucket — id-stable slotting across patches.
+    from repro.gnn.distributed import _degree_buckets
+    b = _degree_buckets(g.degrees)
     for p in range(plan.num_parts):
         vs = plan.local[p][plan.local[p] >= 0]
-        d = g.degrees[vs]
-        assert (np.diff(d) <= 0).all()
+        db = b[vs]
+        assert (np.diff(db) <= 0).all()
+        for bucket in np.unique(db):
+            ids = vs[db == bucket]
+            assert (np.diff(ids) > 0).all()
+
+
+def test_member_slots_stable_under_in_bucket_degree_drift():
+    """The satellite fix for the degree-order reshuffle: a degree bump
+    that stays inside its power-of-two bucket must NOT move any member's
+    slot, so ``patch_plan`` only reslots parts whose bucket census truly
+    changed.  (Exact-degree ordering reshuffled the whole part whenever
+    one edge landed.)"""
+    from repro.gnn.distributed import _part_members
+
+    # Cycle 0-1-2-3-0: every vertex degree 2 (bucket 1).
+    g0 = DataGraph(n=4, edges=np.array([[0, 1], [1, 2], [2, 3], [0, 3]]))
+    # Chord 0-2: degrees of 0 and 2 become 3 — still bucket 1.
+    g1 = DataGraph(n=4, edges=np.array([[0, 1], [1, 2], [2, 3], [0, 3],
+                                        [0, 2]]))
+    assign = np.zeros(4, dtype=np.int64)
+    m0 = _part_members(g0, assign, 1)[0]
+    m1 = _part_members(g1, assign, 1)[0]
+    np.testing.assert_array_equal(m0, m1)
+    # A bucket-crossing bump (degree 2 -> 4) DOES reorder: hub first.
+    g2 = DataGraph(n=6, edges=np.array([[0, 1], [1, 2], [2, 3], [0, 3]]))
+    g3 = DataGraph(n=6, edges=np.array([[0, 1], [1, 2], [2, 3], [0, 3],
+                                        [2, 4], [2, 5]]))
+    assign6 = np.zeros(6, dtype=np.int64)
+    m2 = _part_members(g2, assign6, 1)[0]
+    m3 = _part_members(g3, assign6, 1)[0]
+    assert m3[0] == 2 and not np.array_equal(m2, m3)
 
 
 def test_int32_guard():
