@@ -4,11 +4,12 @@
                                           [--check-parity]
 
 ``--smoke`` runs CI-sized sanity passes (the layout-engine benchmark at
-quick sizes plus the plan-patch cell, one repetition, written to
-BENCH_layout.smoke.json) so the harness can be exercised cheaply without
+quick sizes plus the plan-patch and serving cells, one repetition, written
+to BENCH_layout.smoke.json) so the harness can be exercised cheaply without
 touching the committed numbers; it exits nonzero if the engine paths
 disagree on any final cost, if a patched ShardPlan diverges from a fresh
-compile, or if the 8-device retrace counts are off.
+compile, if the 8-device retrace counts are off, or if the serving cell's
+oracle parity / traffic-aware ordering gates fail.
 
 ``--check-parity`` re-runs the quick grids and exits nonzero if any cell's
 final cost diverges from the committed BENCH_layout.json beyond 1e-12
@@ -23,7 +24,8 @@ import time
 
 from benchmarks import (adaptability, convergence, cost_comparison,
                         cost_factors, kernel_density, layout_engine,
-                        overhead, plan_patch, roofline_table, sensitivity)
+                        overhead, plan_patch, roofline_table, sensitivity,
+                        serving)
 
 SECTIONS = [
     ("cost_comparison  (Fig. 8/9)", cost_comparison.run),
@@ -36,6 +38,7 @@ SECTIONS = [
     ("roofline_table   (deliverable g)", roofline_table.run),
     ("layout_engine    (engine vs seed, round solvers)", layout_engine.run),
     ("plan_patch       (incremental ShardPlan pipeline)", plan_patch.run),
+    ("serving          (request-driven ego inference)", serving.run),
 ]
 
 
@@ -54,6 +57,7 @@ def main() -> None:
     if args.check_parity:
         rc = layout_engine.check_parity()
         rc = plan_patch.check_parity() or rc
+        rc = serving.check_parity() or rc
         sys.exit(rc)
     if args.smoke:
         print("\n===== smoke: layout_engine (quick, 1 rep) =====")
@@ -63,6 +67,10 @@ def main() -> None:
         print("\n===== smoke: plan_patch (quick, 1 rep) =====")
         t0 = time.perf_counter()
         rc = plan_patch.run(smoke=True) or rc
+        print(f"# smoke wall time: {time.perf_counter() - t0:.1f}s")
+        print("\n===== smoke: serving (quick) =====")
+        t0 = time.perf_counter()
+        rc = serving.run(smoke=True) or rc
         print(f"# smoke wall time: {time.perf_counter() - t0:.1f}s")
         sys.exit(rc or 0)
     for name, fn in SECTIONS:

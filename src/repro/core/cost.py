@@ -91,7 +91,8 @@ class CostModel:
     objective of every projected assignment, since intra-cluster links
     land on the tau diagonal (zero)."""
 
-    def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload):
+    def __init__(self, net: EdgeNetwork, graph: DataGraph, gnn: GNNWorkload,
+                 traffic: "np.ndarray | None" = None):
         # Graph evolution can add clients the fleet has no upload entry for
         # yet (Sec. V-A): derive mu for them from coordinates when present,
         # else charge the fleet-average upload cost.  The padded mu lives on
@@ -118,19 +119,47 @@ class CostModel:
         self.net = dataclasses.replace(net, mu=mu)
         self.graph = graph
         self.gnn = gnn
+        # Per-vertex request rate (requests/vertex, Sec. II-A's stream
+        # workload): scales the vertex's COMPUTE row C_P(v, ·) — a vertex
+        # serving r times as many requests costs r times the per-inference
+        # work on whichever server hosts it.  Upload (one-time residency),
+        # tau (per-link sync, already per-BSP-round) and maintenance are
+        # NOT scaled.  None = traffic-blind (the repo's historical
+        # behavior, bit-identical).  Normalize to mean 1 (see
+        # ``repro.gnn.serving.request_traffic``) to keep the C_P scale
+        # comparable across traffic-aware and traffic-blind layouts.
+        if traffic is not None:
+            traffic = np.asarray(traffic, dtype=np.float64).copy()
+            if traffic.shape != (graph.n,):
+                if traffic.shape[0] < graph.n:
+                    # Evolution can add vertices after the window the
+                    # traffic histogram was measured on: neutral weight.
+                    traffic = np.concatenate(
+                        [traffic, np.ones(graph.n - traffic.shape[0])])
+                else:
+                    raise ValueError(
+                        f"traffic shape {traffic.shape} != ({graph.n},)")
+            if (traffic < 0).any():
+                raise ValueError("traffic weights must be non-negative")
+            traffic.setflags(write=False)
+        self.traffic = traffic
         self._unary = None
 
     # ------------------------------------------------------------ components
     @property
     def cp_matrix(self) -> np.ndarray:
-        """C_P(v, i) per Eq. (5): (n, m)."""
+        """C_P(v, i) per Eq. (5): (n, m).  With :attr:`traffic` set, row v is
+        scaled by the vertex's request rate (serving workload, Sec. II-A)."""
         deg = self.graph.degrees.astype(np.float64)  # |N_v|
         net, g = self.net, self.gnn
-        return (
+        out = (
             np.outer(deg, net.alpha) * g.agg_units
             + net.beta[None, :] * g.upd_units
             + net.gamma[None, :] * g.act_units
         )
+        if self.traffic is not None:
+            out *= self.traffic[:, None]
+        return out
 
     @property
     def unary(self) -> np.ndarray:

@@ -7,6 +7,11 @@ from repro.gnn.distributed import (
     gather_outputs, make_bsp_forward, patch_plan, plan_caps, plans_equal,
     recompile_like, scatter_features, scatter_ints, simulate_bsp_forward,
 )
+from repro.gnn.serving import (
+    EgoBatch, FeatureCache, GNNServeEngine, ServeStats, ego_tables,
+    extract_ego, extract_ego_batch, link_traffic, make_ego_forward,
+    request_traffic, serving_cost, zipf_requests,
+)
 
 __all__ = [
     "GNNConfig", "directed_edges", "forward", "init_params", "loss_fn",
@@ -15,4 +20,7 @@ __all__ = [
     "compile_plan", "gather_outputs", "make_bsp_forward", "patch_plan",
     "plan_caps", "plans_equal", "recompile_like", "scatter_features",
     "scatter_ints", "simulate_bsp_forward",
+    "EgoBatch", "FeatureCache", "GNNServeEngine", "ServeStats", "ego_tables",
+    "extract_ego", "extract_ego_batch", "link_traffic", "make_ego_forward",
+    "request_traffic", "serving_cost", "zipf_requests",
 ]

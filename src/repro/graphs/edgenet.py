@@ -37,6 +37,17 @@ _BASE_ALPHA = 2.0e-4   # vector-add per element
 _BASE_BETA = 1.0e-4    # matvec MAC
 _BASE_GAMMA = 5.0e-5   # activation per element
 
+# Fixed sentinel for unusable routes (failed server, disconnected pair).
+# A CONSTANT, not derived from the current tau: deriving BIG from
+# max(tau) re-inflates it by 1e6 on every successive failure (the previous
+# sentinel is already the max), overflowing float64 after a handful of
+# events and corrupting the flow solver's integer quantization.  1e12 is
+# ~9 orders above any realistic tau/mu unit cost in this repo, and the
+# sentinel never reaches the quantizer anyway: dead servers have w=0, so
+# `pairs` excludes them from every sweep and orphans are reassigned before
+# a solve.
+OFFLINE_COST = 1.0e12
+
 
 @dataclasses.dataclass
 class EdgeNetwork:
@@ -72,16 +83,18 @@ class EdgeNetwork:
         return net
 
     def without_server(self, i: int) -> "EdgeNetwork":
-        """Model a node failure: disconnect server i (tau -> BIG, w -> 0)."""
+        """Model a node failure: disconnect server i (tau -> OFFLINE_COST,
+        w -> 0).  Idempotent, and repeated failures of DIFFERENT servers
+        write the same fixed sentinel — costs stay finite and bit-stable no
+        matter how many on_failure events stack up."""
         w = self.w.copy()
         tau = self.tau.copy()
         mu = self.mu.copy()
         w[i, :] = 0
         w[:, i] = 0
-        big = np.max(tau[np.isfinite(tau)]) * 1e6 if np.isfinite(tau).any() else 1e12
-        tau[i, :] = big
-        tau[:, i] = big
-        mu[:, i] = big
+        tau[i, :] = OFFLINE_COST
+        tau[:, i] = OFFLINE_COST
+        mu[:, i] = OFFLINE_COST
         return dataclasses.replace(self, w=w, tau=tau, mu=mu)
 
 

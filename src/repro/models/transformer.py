@@ -358,8 +358,16 @@ def init_cache(cfg: LMConfig, batch: int, max_len: int,
 
 def prefill(cfg: LMConfig, params, batch: Dict, max_len: int,
             dist: Dist = Dist()):
-    """Run the prompt, build the KV cache.  Returns (logits_last, cache)."""
+    """Run the prompt, build the KV cache.  Returns (logits_last, cache).
+
+    Optional ``batch["lengths"]`` (B,) marks the true prompt length of each
+    row when prompts are right-padded to a shared bucket: logits are
+    gathered at position length-1 and ``cache["len"]`` is set per row, so
+    one trace serves every prompt length in the bucket.  Trailing pad is
+    harmless — attention is causal (pad rows never feed real rows) and
+    decode masks KV beyond ``len``."""
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
     x = _embed(cfg, params, tokens, dist)
     if cfg.family == "vlm" and "patches" in batch:
         pe = batch["patches"].astype(cfg.dtype) @ params["patch_proj"].astype(
@@ -397,8 +405,17 @@ def prefill(cfg: LMConfig, params, batch: Dict, max_len: int,
     k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
-    logits = _unembed(cfg, params, x[:, -1:], dist)
-    cache = {"k": k, "v": v, "len": jnp.full((B,), L, jnp.int32)}
+    if lengths is not None:
+        lengths = lengths.astype(jnp.int32)
+        idx = jnp.clip(lengths - 1, 0, L - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+            idx, (B, 1, x.shape[-1])), axis=1)
+        cache_len = lengths
+    else:
+        x_last = x[:, -1:]
+        cache_len = jnp.full((B,), L, jnp.int32)
+    logits = _unembed(cfg, params, x_last, dist)
+    cache = {"k": k, "v": v, "len": cache_len}
     return logits, cache
 
 

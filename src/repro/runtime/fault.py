@@ -46,13 +46,27 @@ class FailureDetector:
 
     def heartbeat(self, device: int, now: float,
                   step_time_s: Optional[float] = None):
+        """Record a heartbeat from a LIVE device.  A late heartbeat from a
+        device already swept dead is ignored: sweep() reports each death
+        exactly once, so silently flipping ``alive`` back would desync the
+        detector from a coordinator that has already removed the server
+        from the net.  Re-admitting a repaired device is an explicit
+        control-plane action — :meth:`revive`."""
         d = self.devices[device]
+        if not d.alive:
+            return
         d.last_heartbeat = now
-        d.alive = True
         if step_time_s is not None:
             d.step_time_ewma = (step_time_s if d.step_time_ewma == 0.0 else
                                 (1 - self.ewma) * d.step_time_ewma
                                 + self.ewma * step_time_s)
+
+    def revive(self, device: int, now: float):
+        """Explicitly re-admit a repaired device (fresh EWMA, live again)."""
+        d = self.devices[device]
+        d.alive = True
+        d.last_heartbeat = now
+        d.step_time_ewma = 0.0
 
     def sweep(self, now: float) -> List[int]:
         """Mark timed-out devices dead; return newly-dead ids."""
@@ -136,7 +150,11 @@ class ElasticCoordinator:
         for d in dead:
             net = net.without_server(d)
         cm = CostModel(net, self.graph, self.gnn)
-        old_cost = self.part.cost_factors.get("total", float("inf"))
+        # Recompute under the DEGRADED net (same convention as
+        # on_straggler) so RelayoutEvent deltas are comparable across event
+        # kinds: old_cost is "what staying put would cost now", not the
+        # stale stored total from before the failure.
+        old_cost = cm.total(self.part.assign)
         # Orphans must move; everything else is warm-started.
         assign = self.part.assign.copy()
         orphan = np.isin(assign, dead)

@@ -55,12 +55,29 @@ class ServeEngine:
         self.live: List[Optional[Request]] = [None] * slots
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
+        # Prompt-length bucketing: pad prompts to power-of-2 buckets so the
+        # jitted prefill traces O(log max_len) specializations instead of
+        # one per distinct length (a compile storm under real traffic).
+        # Only KV-cache families — pad positions are inert there (causal
+        # attention + decode's len-mask).  Recurrent families (ssm/xlstm)
+        # thread pad tokens through their state, and vlm offsets positions
+        # by the patch count, so both keep exact-length prefill.
+        self._bucketed = cfg.family in ("dense", "moe")
+        # Trace counters (same contract as make_bsp_forward's stats): the
+        # increment runs at TRACE time only, so tests can assert the
+        # retrace bound directly.
+        self.trace_counts = {"prefill": 0, "decode": 0}
 
-        self._decode = jax.jit(
-            lambda p, t, c: zoo.decode_step(cfg, p, t, c, dist))
-        self._prefill = jax.jit(
-            lambda p, b: zoo.prefill(cfg, p, b, max_len, dist),
-            static_argnames=())
+        def _decode_fn(p, t, c):
+            self.trace_counts["decode"] += 1
+            return zoo.decode_step(cfg, p, t, c, dist)
+
+        def _prefill_fn(p, b):
+            self.trace_counts["prefill"] += 1
+            return zoo.prefill(cfg, p, b, max_len, dist)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(_prefill_fn)
 
     # ----------------------------------------------------------------- admin
     def submit(self, req: Request):
@@ -69,12 +86,33 @@ class ServeEngine:
     def _free_slots(self):
         return [i for i, r in enumerate(self.live) if r is None]
 
-    def _insert(self, slot: int, req: Request):
-        """Prefill one request and splice its KV into the batch cache."""
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        batch = {"tokens": prompt}
-        logits, rcache = self._prefill(self.params, batch)
+    @staticmethod
+    def _bucket(length: int) -> int:
+        """Smallest power of two >= length."""
+        return 1 << max(length - 1, 0).bit_length()
+
+    def _insert(self, slot: int, req: Request) -> bool:
+        """Prefill one request; splice its KV into the batch cache.  If the
+        request already finishes at prefill (first generated token is EOS,
+        or a one-token budget), it completes here and the slot stays free —
+        returns True iff the slot was occupied."""
         L = len(req.prompt)
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        if self._bucketed:
+            bucket = min(self._bucket(L), self.max_len)
+            prompt = jnp.pad(prompt, ((0, 0), (0, bucket - L)))
+            batch = {"tokens": prompt,
+                     "lengths": jnp.asarray([L], jnp.int32)}
+        else:
+            batch = {"tokens": prompt}
+        logits, rcache = self._prefill(self.params, batch)
+        self.stats.prefills += 1
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+        if tok == req.eos_id or req.max_new_tokens <= 1:
+            req.done = True
+            self.stats.completed += 1
+            return False
         for key in ("k", "v"):
             if key in self.cache:
                 self.cache[key] = self.cache[key].at[:, slot].set(
@@ -86,18 +124,18 @@ class ServeEngine:
                 self.cache[key] = self.cache[key].at[:, slot].set(
                     rcache[key][:, 0])
         self.cache["len"] = self.cache["len"].at[slot].set(L)
-        tok = int(jnp.argmax(logits[0, -1]))
-        req.out_tokens.append(tok)
         self.live[slot] = req
-        self.stats.prefills += 1
+        return True
 
     # ------------------------------------------------------------------ tick
     def tick(self):
         """Admit from queue, then advance every live slot one token."""
         for slot in self._free_slots():
-            if not self.queue:
-                break
-            self._insert(slot, self.queue.popleft())
+            # A request that completes at prefill leaves the slot free for
+            # the next queued one.
+            while self.queue:
+                if self._insert(slot, self.queue.popleft()):
+                    break
 
         if not any(r is not None for r in self.live):
             return
@@ -109,6 +147,10 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(last), self.cache)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        # One host transfer for all slot lengths — the per-slot
+        # int(self.cache["len"][i]) reads were a device sync per live slot
+        # per tick.
+        lens = np.asarray(self.cache["len"])
         self.stats.ticks += 1
 
         for i, r in enumerate(self.live):
@@ -117,7 +159,7 @@ class ServeEngine:
             tok = int(nxt[i])
             r.out_tokens.append(tok)
             self.stats.generated_tokens += 1
-            full = int(self.cache["len"][i]) >= self.max_len - 1
+            full = int(lens[i]) >= self.max_len - 1
             if tok == r.eos_id or len(r.out_tokens) >= r.max_new_tokens or full:
                 r.done = True
                 self.live[i] = None

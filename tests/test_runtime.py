@@ -26,9 +26,26 @@ def test_failure_detector_timeout_and_recovery():
     fd.heartbeat(0, now=12.0)
     dead = fd.sweep(now=15.0)
     assert set(dead) == {1, 2, 3}
-    fd.heartbeat(1, now=16.0)               # node came back
+    fd.revive(1, now=16.0)                  # explicit re-admission
     assert fd.devices[1].alive
     assert fd.sweep(now=17.0) == []
+
+
+def test_heartbeat_after_death_is_ignored():
+    """A late heartbeat from a swept-dead device must NOT resurrect it —
+    sweep() reports each death exactly once and the coordinator has
+    already dropped the server; only revive() re-admits."""
+    fd = FailureDetector(2, timeout_s=10)
+    fd.heartbeat(0, now=0.0)
+    fd.heartbeat(1, now=0.0)
+    assert fd.sweep(now=15.0) == [0, 1]
+    fd.heartbeat(0, now=16.0, step_time_s=1.0)     # late packet
+    assert not fd.devices[0].alive
+    assert fd.devices[0].step_time_ewma == 0.0
+    assert fd.sweep(now=17.0) == []                # no double-report
+    fd.revive(0, now=18.0)
+    assert fd.devices[0].alive
+    assert fd.sweep(now=19.0) == []
 
 
 def test_straggler_detection_ewma():
@@ -66,6 +83,54 @@ def test_straggler_relayout_reduces_load_on_slow_server(cluster):
     newp = coord.on_straggler([0], slow_factor=50.0)
     after = (newp.assign == 0).sum()
     assert after < before                            # load moved off
+
+
+def test_repeated_failures_keep_costs_finite_and_stable(cluster):
+    """Regression: without_server used an ESCALATING sentinel (big x 1e6
+    per call), so a failure sequence overflowed the cost arithmetic into
+    inf/garbage.  Three sequential failures must keep every event cost
+    finite, pin the offline sentinel bit-stable, and stay deterministic."""
+    from repro.graphs.edgenet import OFFLINE_COST
+    g, gnn, net, part = cluster
+
+    def run():
+        coord = ElasticCoordinator(net, g, gnn, part)
+        for d in (5, 3, 1):
+            coord.on_failure([d], seed=0)
+        return coord
+
+    coord = run()
+    assert len(coord.events) == 3
+    for ev in coord.events:
+        assert np.isfinite(ev.old_cost), ev
+        assert np.isfinite(ev.new_cost), ev
+    # No vertex left on a dead server.
+    assert not np.isin(coord.part.assign, [1, 3, 5]).any()
+    # The sentinel is the SAME fixed value for every dead server, however
+    # late in the sequence it died (idempotent, no escalation).
+    for d in (5, 3, 1):
+        assert (coord.net.tau[d, :] == OFFLINE_COST).all()
+        assert (coord.net.tau[:, d] == OFFLINE_COST).all()
+        assert (coord.net.mu[:, d] == OFFLINE_COST).all()
+    again = coord.net.without_server(5)            # idempotent re-kill
+    np.testing.assert_array_equal(again.tau, coord.net.tau)
+    # Deterministic trajectory: a re-run lands on identical assignments.
+    coord2 = run()
+    np.testing.assert_array_equal(coord.part.assign, coord2.part.assign)
+    for a, b in zip(coord.events, coord2.events):
+        assert a.new_cost == b.new_cost
+
+
+def test_on_failure_old_cost_uses_degraded_net(cluster):
+    """old_cost must be 'what staying put would cost NOW' — computed under
+    the degraded net, same convention as on_straggler — so event deltas
+    are comparable across kinds."""
+    g, gnn, net, part = cluster
+    coord = ElasticCoordinator(net, g, gnn, part)
+    degraded = net.without_server(5)
+    expect = CostModel(degraded, g, gnn).total(part.assign)
+    coord.on_failure([5])
+    assert coord.events[-1].old_cost == expect
 
 
 def test_checkpoint_restore_after_failure_smaller_mesh(tmp_path):

@@ -66,3 +66,67 @@ def test_engine_stops_at_max_len(model):
                        max_new_tokens=100, eos_id=-1))
     eng.run(max_ticks=50)
     assert eng.stats.completed == 1          # hit the cache limit, freed
+
+
+def test_eos_at_prefill_frees_slot_same_tick(model):
+    """A request whose FIRST generated token is EOS must complete at
+    insert time (no slot occupied, no decode), and the freed slot admits
+    the next queued request in the same tick."""
+    cfg, params = model
+    prompt = np.array([7, 11, 13], np.int32)
+    # Learn what the first generated token is from an EOS-free solo run.
+    first_tok = _solo_decode(cfg, params, prompt, 1, 32)[0]
+
+    eng = ServeEngine(cfg, params, slots=1, max_len=32)
+    hit = Request(uid=0, prompt=prompt, max_new_tokens=8, eos_id=first_tok)
+    follow = Request(uid=1, prompt=np.array([1, 2, 3, 4], np.int32),
+                     max_new_tokens=3, eos_id=-1)
+    eng.submit(hit)
+    eng.submit(follow)
+    eng.tick()
+    assert hit.done and hit.out_tokens == [first_tok]
+    assert eng.live[0] is follow             # slot handed over same tick
+    assert eng.stats.completed == 1
+    # The same tick's decode already advanced the admitted request.
+    assert int(np.asarray(eng.cache["len"])[0]) == len(follow.prompt) + 1
+    assert len(follow.out_tokens) == 2       # prefill token + one decode
+    eng.run()
+    assert eng.stats.completed == 2 and follow.done
+
+
+def test_one_token_budget_completes_at_prefill(model):
+    cfg, params = model
+    eng = ServeEngine(cfg, params, slots=2, max_len=32)
+    req = Request(uid=0, prompt=np.array([3, 5, 9], np.int32),
+                  max_new_tokens=1, eos_id=-1)
+    eng.submit(req)
+    eng.run(max_ticks=5)
+    assert req.done and len(req.out_tokens) == 1
+    assert eng.stats.completed == 1
+    assert eng.stats.ticks == 0              # never needed a decode
+    assert req.out_tokens == _solo_decode(cfg, params, req.prompt, 1, 32)
+
+
+def test_prefill_retraces_bounded_by_buckets(model):
+    """Prompt-length bucketing: many distinct lengths must trace only
+    O(log max_len) prefill specializations, and batched outputs still
+    match solo runs (pad positions are inert under causal attention)."""
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    lengths = list(range(3, 17))             # 14 distinct lengths
+    prompts = [rng.integers(1, 400, size=ln).astype(np.int32)
+               for ln in lengths]
+    solo = [_solo_decode(cfg, params, p, 3, 64) for p in prompts]
+
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3, eos_id=-1)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert eng.stats.completed == len(prompts)
+    buckets = {max(1 << (ln - 1).bit_length(), 1) for ln in lengths}
+    assert eng.trace_counts["prefill"] <= len(buckets)   # 4/8/16 -> 3
+    assert eng.trace_counts["decode"] == 1
+    for r, s in zip(reqs, solo):
+        assert r.out_tokens == s, f"request {r.uid} diverged"
