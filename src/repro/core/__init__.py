@@ -1,4 +1,6 @@
-from repro.core.cost import CostModel, GNNWorkload, LayoutState, workload_for
+from repro.core.cost import (
+    CostModel, GNNWorkload, LayoutState, Replication, workload_for,
+)
 from repro.core.engine import PairCutEngine, round_robin_rounds
 from repro.core.glad_s import GladResult, glad_s, solve_pair
 from repro.core.glad_e import glad_e
@@ -13,7 +15,7 @@ from repro.core.partition import (
 )
 
 __all__ = [
-    "CostModel", "GNNWorkload", "LayoutState", "workload_for",
+    "CostModel", "GNNWorkload", "LayoutState", "Replication", "workload_for",
     "PairCutEngine", "round_robin_rounds",
     "GladResult", "glad_s", "solve_pair", "glad_e", "GladA", "drift_bound",
     "greedy_layout", "random_layout", "uploading_first_layout",

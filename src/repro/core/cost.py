@@ -27,6 +27,39 @@ from repro.graphs.datagraph import DataGraph
 from repro.graphs.edgenet import EdgeNetwork
 
 
+@dataclasses.dataclass
+class Replication:
+    """A set of read-only replica placements ON TOP of an assignment.
+
+    ``by_part[p]`` holds the vertex ids replicated INTO partition p (sorted
+    ascending, never including vertices homed on p — a replica of a resident
+    is meaningless).  Replication is a *unary* overlay on a fixed cut: each
+    (v -> p) decision trades the saved directed read traffic from v's home
+    into p against a one-time sync + storage charge, independently of every
+    other replica — so the greedy that accepts all positive-gain candidates
+    is exact for the overlay subproblem (the cut itself is GLAD's job).
+    """
+
+    by_part: Dict[int, np.ndarray]
+    gain: float                       # total objective improvement (>= 0)
+    saved: float                      # read traffic no longer crossing links
+    sync: float                       # sum sync_weight * tau[home, p]
+    storage: float                    # count * storage_cost
+    sync_weight: float
+    storage_cost: float
+
+    @property
+    def count(self) -> int:
+        return int(sum(len(v) for v in self.by_part.values()))
+
+    def pairs(self) -> np.ndarray:
+        """(k, 2) array of (vertex, part) placements, part-major sorted."""
+        out = [np.stack([ids, np.full(len(ids), p, dtype=np.int64)], axis=1)
+               for p, ids in sorted(self.by_part.items()) if len(ids)]
+        return (np.concatenate(out, axis=0) if out
+                else np.zeros((0, 2), dtype=np.int64))
+
+
 @dataclasses.dataclass(frozen=True)
 class GNNWorkload:
     """Feature-dim schedule of the served GNN: s = [s_0, .., s_K] (Sec. II-A).
@@ -255,6 +288,103 @@ class CostModel:
         # Use mean C_P(u, ·) — server-independent comparison is what Thm 3 uses
         # (the newly added vertex goes to the *same* server for X and Y).
         return float(self.cp_matrix[new, 0].sum()) if new else 0.0
+
+    # ------------------------------------------------------------ replication
+    def _replica_savings(self, assign: np.ndarray):
+        """Per-candidate saved read traffic, keyed ``v * m + p``.
+
+        Directed-read split of C_T: each cut link's tau * w prices two
+        directed reads (either endpoint's host pulling the other's row once
+        per BSP round), half the link cost each.  Replicating v into a
+        consumer part p serves p's reads of v locally, saving
+        ``0.5 * tau[home_v, p] * W(v, p)`` where W(v, p) sums the weights of
+        v's cut links into p.  Returns (keys sorted ascending, savings)."""
+        e = self.graph.edges
+        m = np.int64(self.net.m)
+        if not len(e):
+            return np.zeros(0, np.int64), np.zeros(0, np.float64)
+        a_u, a_v = assign[e[:, 0]], assign[e[:, 1]]
+        cut = a_u != a_v
+        if not cut.any():
+            return np.zeros(0, np.int64), np.zeros(0, np.float64)
+        w = self.graph.weights_or_ones()[cut]
+        u, v = e[cut, 0], e[cut, 1]
+        au, av = a_u[cut], a_v[cut]
+        half = 0.5 * self.net.tau[au, av] * w
+        keys = np.concatenate([u * m + av, v * m + au])
+        vals = np.concatenate([half, half])
+        uniq, inv = np.unique(keys, return_inverse=True)
+        saved = np.zeros(len(uniq), dtype=np.float64)
+        np.add.at(saved, inv, vals)
+        return uniq, saved
+
+    def replicate_greedy(self, assign: np.ndarray, sync_weight: float = 0.5,
+                         storage: float = 0.0,
+                         budget: "int | None" = None) -> Replication:
+        """Accept every replica placement with positive gain on top of the
+        given cut (paper Sec. III-B extended with Fograph-style inference
+        replication).
+
+        Replicating v into consumer p is a unary decision given the cut:
+        gain(v, p) = 0.5 * tau[home, p] * W(v, p)
+                     - (sync_weight * tau[home, p] + storage).
+        Candidates are independent, so accepting all positive gains is the
+        exact optimum of the overlay; ``budget`` caps replicas per part
+        (keep the top gains, vertex-id tie break — deterministic)."""
+        assign = np.asarray(assign, dtype=np.int64)
+        m = np.int64(self.net.m)
+        keys, saved = self._replica_savings(assign)
+        vs = (keys // m).astype(np.int64)
+        ps = (keys % m).astype(np.int64)
+        cost = sync_weight * self.net.tau[assign[vs], ps] + storage
+        gain = saved - cost
+        keep = gain > 1e-12
+        vs, ps, gain = vs[keep], ps[keep], gain[keep]
+        by_part: Dict[int, np.ndarray] = {}
+        for p in np.unique(ps):
+            sel = ps == p
+            ids, g = vs[sel], gain[sel]
+            if budget is not None and len(ids) > budget:
+                top = np.lexsort((ids, -g))[:budget]
+                ids, g = ids[top], g[top]
+            by_part[int(p)] = np.sort(ids)
+        repl = Replication(by_part=by_part, gain=0.0, saved=0.0, sync=0.0,
+                           storage=0.0, sync_weight=float(sync_weight),
+                           storage_cost=float(storage))
+        acc = self.replication_cost(assign, repl)
+        repl.saved, repl.sync = acc["saved"], acc["sync"]
+        repl.storage, repl.gain = acc["storage"], -acc["net"]
+        return repl
+
+    def replication_cost(self, assign: np.ndarray,
+                         repl: Replication) -> Dict[str, float]:
+        """Exact accounting of a replication overlay on ``assign``:
+        ``saved`` (read traffic served locally), ``sync``/``storage`` (the
+        overlay's recurring charges), ``net`` = sync + storage - saved, and
+        ``total`` = the layout objective with the overlay applied.  The
+        greedy's own output always has ``net <= 0``."""
+        assign = np.asarray(assign, dtype=np.int64)
+        m = np.int64(self.net.m)
+        keys, saved_all = self._replica_savings(assign)
+        saved = sync = 0.0
+        count = 0
+        for p, ids in sorted(repl.by_part.items()):
+            ids = np.asarray(ids, dtype=np.int64)
+            ids = ids[assign[ids] != p]       # a home-resident needs no copy
+            if not len(ids):
+                continue
+            k = ids * m + p
+            if len(keys):
+                pos = np.minimum(np.searchsorted(keys, k), len(keys) - 1)
+                match = keys[pos] == k
+                saved += float(saved_all[pos[match]].sum())
+            sync += float(
+                (repl.sync_weight * self.net.tau[assign[ids], p]).sum())
+            count += len(ids)
+        storage = repl.storage_cost * count
+        net = sync + storage - saved
+        return {"saved": saved, "sync": sync, "storage": storage,
+                "net": net, "total": self.total(assign) + net}
 
 
 class LayoutState:

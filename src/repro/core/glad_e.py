@@ -50,6 +50,7 @@ def glad_e(
     multilevel: "bool | str" = False,
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
+    replicate: "bool | dict" = False,
 ) -> GladResult:
     """Args:
       cm_new: cost model bound to the *evolved* graph G(t).
@@ -69,6 +70,10 @@ def glad_e(
         layout — a massively-evolved graph is a fresh layout problem, and
         the V-cycle is the fast full solver.  Default False keeps the
         masked incremental path (bit-identical to previous behavior).
+      replicate: move-vs-replicate overlay, forwarded to :func:`glad_s` —
+        re-greedied after each accepted round of the refinement and
+        attached to the result (``result.replication``).  A post-pass:
+        the evolved layout itself is bit-identical with the knob off.
 
     The result's ``moved`` is the relayout's move delta RELATIVE TO the
     carried-over old layout — net movers plus every newly-inserted vertex —
@@ -89,9 +94,13 @@ def glad_e(
         assign = seed_new_vertices(cm_new, assign, new_mask)
 
     if not active.any():
+        from repro.core.glad_s import _attach_replication
         f = cm_new.factors(assign)
-        return GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f,
-                          moved=new_ids)
+        return _attach_replication(
+            cm_new,
+            GladResult(assign, f["total"], [f["total"]], 0, 0, 0.0, f,
+                       moved=new_ids),
+            replicate)
 
     # Churn-triggered escalation: when (almost) everything changed, the
     # masked incremental refinement degenerates into a flat full sweep —
@@ -105,7 +114,7 @@ def glad_e(
             cm_new, R=R, init=assign, seed=seed, backend=backend,
             workers=workers, cache=cache, chunk_nodes=chunk_nodes,
             warm=warm, multilevel=True, coarsen_to=coarsen_to,
-            levels=levels,
+            levels=levels, replicate=replicate,
         )
         res.moved = (np.union1d(res.moved, new_ids) if len(new_ids)
                      else res.moved)
@@ -117,7 +126,7 @@ def glad_e(
     res = glad_s(
         cm_new, R=R, init=assign, active=active, seed=seed, backend=backend,
         sweep=sweep, workers=workers, cache=cache, chunk_nodes=chunk_nodes,
-        warm=warm,
+        warm=warm, replicate=replicate,
     )
     # glad_s diffs against the seeded init; fold the insertions back in.
     res.moved = np.union1d(res.moved, new_ids) if len(new_ids) else res.moved

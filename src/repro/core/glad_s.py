@@ -69,6 +69,15 @@ class GladResult:
     # projected init / boundary-active mask each level ran under — enough
     # to replay any level on the flat engine bit-for-bit.
     levels: Optional[List[dict]] = None
+    # replicate=True runs only: the accepted move-vs-replicate overlay on
+    # the final cut (core.cost.Replication), the objective with it applied
+    # (cost - replication.gain), and the replicated total recorded after
+    # each ACCEPTED round.  The overlay never feeds back into the cut
+    # decisions, so the assign/cost/history trajectory is bit-identical
+    # with the knob on or off.
+    replication: Optional[object] = None
+    replicated_cost: Optional[float] = None
+    repl_history: Optional[List[float]] = None
 
 
 def _pair_members(assign: np.ndarray, i: int, j: int,
@@ -192,6 +201,7 @@ def glad_s(
     multilevel: "bool | str" = False,
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
+    replicate: "bool | dict" = False,
 ) -> GladResult:
     """Paper Algorithm 1.
 
@@ -244,6 +254,16 @@ def glad_s(
       coarsen_to: V-cycle coarsest-level size (multilevel only).
       levels: cap on the number of hierarchy levels (None = until
         ``coarsen_to`` or stagnation; multilevel only).
+      replicate: move-vs-replicate overlay (Fograph-style inference
+        replication).  True — or a dict of
+        :meth:`CostModel.replicate_greedy` kwargs (``sync_weight``,
+        ``storage``, ``budget``) — re-runs the greedy after each ACCEPTED
+        round, recording the replicated total in ``repl_history``, and
+        attaches the final overlay as ``result.replication`` /
+        ``result.replicated_cost``.  The overlay is a post-pass on the
+        current cut: it never alters which moves are proposed or accepted,
+        so layouts are bit-identical with the knob on or off (default
+        False skips the extra per-accept work entirely).
     """
     if multilevel == "auto":
         from repro.core.multilevel import MULTILEVEL_AUTO_MIN_N
@@ -256,13 +276,14 @@ def glad_s(
                 "multilevel solves the full layout; run flat glad_s for "
                 "masked (GLAD-E-style) refinements")
         from repro.core.multilevel import glad_multilevel
-        return glad_multilevel(
+        return _attach_replication(cm, glad_multilevel(
             cm, R=R, init=init, seed=seed, backend=backend,
             coarsen_to=coarsen_to, levels=levels,
             round_solver=round_solver, workers=workers,
             worker_mode=worker_mode, cache=cache, cache_bytes=cache_bytes,
             chunk_nodes=chunk_nodes, warm=warm,
-            max_iterations=max_iterations, on_iteration=on_iteration)
+            max_iterations=max_iterations, on_iteration=on_iteration),
+            replicate)
     rng = np.random.default_rng(seed)
     net, graph = cm.net, cm.graph
     t0 = time.perf_counter()
@@ -275,9 +296,9 @@ def glad_s(
         R = net.m * (net.m - 1) // 2
 
     if engine == "reference":
-        return _glad_s_reference(
+        return _attach_replication(cm, _glad_s_reference(
             cm, assign, pairs, R, active, rng, backend, max_iterations,
-            on_iteration, t0)
+            on_iteration, t0), replicate)
     if engine != "incremental":
         raise ValueError(f"unknown engine {engine!r}")
 
@@ -287,6 +308,27 @@ def glad_s(
                         cache=cache, cache_bytes=cache_bytes,
                         chunk_nodes=chunk_nodes, warm=warm)
     history = [eng.state.total]
+    repl_history: Optional[List[float]] = None
+    if replicate:
+        # Per-accepted-round replicated-cost ledger: acceptance is exactly
+        # a strict drop of the live total, so the wrapper re-greedies the
+        # overlay on every improvement without touching the sweep loops
+        # (the trajectory stays bit-identical — replication reads the cut,
+        # never writes it).
+        repl_opts = replicate if isinstance(replicate, dict) else {}
+        repl_history = []
+        base_cb, best = on_iteration, {"c": eng.state.total}
+
+        def _repl_cb(it, cost):
+            if cost < best["c"] - 1e-12:
+                best["c"] = cost
+                r = cm.replicate_greedy(eng.state.assign, **repl_opts)
+                repl_history.append(
+                    cm.replication_cost(eng.state.assign, r)["total"])
+            if base_cb is not None:
+                base_cb(it, cost)
+
+        on_iteration = _repl_cb
     if sweep == "single":
         iters, accepted = _sweep_single(
             eng, pairs, R, rng, max_iterations, on_iteration, history)
@@ -301,12 +343,26 @@ def glad_s(
     # committed can differ from the init, so the diff is O(touched).
     touched = eng.touched_vertices()
     moved = touched[eng.state.assign[touched] != init_snapshot[touched]]
-    return GladResult(
+    res = GladResult(
         assign=eng.state.assign, cost=eng.state.total, history=history,
         iterations=iters, accepted=accepted,
         wall_time_s=time.perf_counter() - t0,
         factors=eng.state.factors(), moved=moved,
     )
+    res.repl_history = repl_history
+    return _attach_replication(cm, res, replicate)
+
+
+def _attach_replication(cm: CostModel, res: GladResult,
+                        replicate) -> GladResult:
+    """Final move-vs-replicate overlay on the solved cut (post-pass)."""
+    if not replicate:
+        return res
+    opts = replicate if isinstance(replicate, dict) else {}
+    repl = cm.replicate_greedy(res.assign, **opts)
+    res.replication = repl
+    res.replicated_cost = cm.replication_cost(res.assign, repl)["total"]
+    return res
 
 
 def _sweep_single(eng, pairs, R, rng, max_iterations, on_iteration, history):

@@ -43,6 +43,11 @@ class DevicePartition:
     halo_sizes: np.ndarray        # (P,)
     cut_links: int
     cost_factors: dict
+    # Optional move-vs-replicate overlay (core.cost.Replication) attached by
+    # the replicate= solver knob: the read-only copies each part should host
+    # on top of its residents.  compile_plan promotes it to the ShardPlan's
+    # persistent replica table.
+    replication: Optional[object] = None
 
     @property
     def capacity(self) -> int:
@@ -106,7 +111,8 @@ def halos_of(
 
 
 def partition_from_assign(
-    graph: DataGraph, assign: np.ndarray, num_parts: int, factors: dict
+    graph: DataGraph, assign: np.ndarray, num_parts: int, factors: dict,
+    replication=None,
 ) -> DevicePartition:
     parts = [np.where(assign == p)[0] for p in range(num_parts)]
     sizes = np.array([len(p) for p in parts], dtype=np.int64)
@@ -124,6 +130,7 @@ def partition_from_assign(
         halo_sizes=np.array([len(h) for h in halos], dtype=np.int64),
         cut_links=cut,
         cost_factors=factors,
+        replication=replication,
     )
 
 
@@ -143,6 +150,7 @@ def data_partition(
     multilevel: "bool | str" = False,
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
+    replicate: "bool | dict" = False,
 ) -> DevicePartition:
     """GLAD-S over a pod-shaped EdgeNetwork -> shard_map-ready partition.
 
@@ -152,15 +160,19 @@ def data_partition(
     cross-round assembly caching and warm-started incremental re-solves;
     ``multilevel`` ('auto' recommended for n >= 200k) routes the layout
     through the coarsen/solve/refine V-cycle
-    (see :func:`repro.core.glad_s.glad_s`)."""
+    (see :func:`repro.core.glad_s.glad_s`).  ``replicate`` (True or a dict
+    of ``replicate_greedy`` kwargs) attaches the move-vs-replicate overlay
+    to the partition — ``compile_plan`` then materializes the replica
+    table; the cut itself is unchanged."""
     if net is None:
         net = pod_edge_network(num_parts, graph.n, pods=pods, seed=seed)
     cm = CostModel(net, graph, gnn)
     res = glad_s(cm, R=R, seed=seed, init=init, sweep="batched",
                  workers=workers, cache=cache, chunk_nodes=chunk_nodes,
                  warm=warm, multilevel=multilevel, coarsen_to=coarsen_to,
-                 levels=levels)
-    return partition_from_assign(graph, res.assign, num_parts, res.factors)
+                 levels=levels, replicate=replicate)
+    return partition_from_assign(graph, res.assign, num_parts, res.factors,
+                                 replication=res.replication)
 
 
 # --------------------------------------------------------------------- MoE
@@ -278,15 +290,19 @@ def rebalance(
     multilevel: "bool | str" = False,
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
+    replicate: "bool | dict" = False,
 ) -> DevicePartition:
     """Straggler mitigation: degrade the slow server's compute coefficients
     and run an incremental re-layout warm-started from the current one.
     ``multilevel`` escalates to the V-cycle (warm init restricted up the
-    hierarchy by majority vote) — for fleets serving very large graphs."""
+    hierarchy by majority vote) — for fleets serving very large graphs.
+    ``replicate`` re-greedies the move-vs-replicate overlay against the
+    degraded fleet and attaches it to the new partition."""
     net2 = net.degrade(straggler, slow_factor)
     cm = CostModel(net2, graph, gnn)
     res = glad_s(cm, init=part.assign, R=net2.m, seed=seed, sweep="batched",
                  workers=workers, cache=cache, chunk_nodes=chunk_nodes,
                  warm=warm, multilevel=multilevel, coarsen_to=coarsen_to,
-                 levels=levels)
-    return partition_from_assign(graph, res.assign, part.num_parts, res.factors)
+                 levels=levels, replicate=replicate)
+    return partition_from_assign(graph, res.assign, part.num_parts,
+                                 res.factors, replication=res.replication)

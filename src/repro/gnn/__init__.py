@@ -5,12 +5,13 @@ from repro.gnn.models import (
 from repro.gnn.distributed import (
     PlanBSR, PlanCaps, PlanDelta, ShardPlan, build_plan_bsr, compile_plan,
     gather_outputs, make_bsp_forward, patch_plan, plan_caps, plans_equal,
-    recompile_like, scatter_features, scatter_ints, simulate_bsp_forward,
+    recompile_like, scatter_features, scatter_ints, scatter_replica_halo,
+    set_replication, simulate_bsp_forward,
 )
 from repro.gnn.serving import (
     EgoBatch, FeatureCache, GNNServeEngine, ServeStats, ego_tables,
     extract_ego, extract_ego_batch, link_traffic, make_ego_forward,
-    request_traffic, serving_cost, zipf_requests,
+    replicate_for_stream, request_traffic, serving_cost, zipf_requests,
 )
 
 __all__ = [
@@ -19,8 +20,10 @@ __all__ = [
     "PlanBSR", "PlanCaps", "PlanDelta", "ShardPlan", "build_plan_bsr",
     "compile_plan", "gather_outputs", "make_bsp_forward", "patch_plan",
     "plan_caps", "plans_equal", "recompile_like", "scatter_features",
-    "scatter_ints", "simulate_bsp_forward",
+    "scatter_ints", "scatter_replica_halo", "set_replication",
+    "simulate_bsp_forward",
     "EgoBatch", "FeatureCache", "GNNServeEngine", "ServeStats", "ego_tables",
     "extract_ego", "extract_ego_batch", "link_traffic", "make_ego_forward",
-    "request_traffic", "serving_cost", "zipf_requests",
+    "replicate_for_stream", "request_traffic", "serving_cost",
+    "zipf_requests",
 ]

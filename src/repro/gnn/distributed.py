@@ -104,6 +104,7 @@ class PlanCaps:
     e_cap: int
     round_widths: dict                  # shift -> padded width
     bsr_max_blocks: Optional[int] = None
+    r_cap: int = 0                      # replica slots per device
 
 
 @dataclasses.dataclass
@@ -166,6 +167,26 @@ class ShardPlan:
     slack: float = 0.0            # capacity-headroom fraction
     version: int = 0              # bumped by every patch (device-array cache)
     bsr: Optional[PlanBSR] = None
+    # ---- persistent replica residents (move-vs-replicate overlay) -------
+    # ``replication`` is the AUTHORITATIVE request: part -> sorted global
+    # ids the part should host as read-only copies, independent of where
+    # they are currently homed.  ``replica`` is its materialization at the
+    # current assignment — the request minus ids homed on the part — in a
+    # rectangular (P, r_cap) table parallel to ``halo`` (sorted ascending,
+    # -1 pad), patched in place by :func:`patch_plan` under the same
+    # bit-identity-vs-fresh-compile contract as every other table.
+    # ``rounds0`` is the layer-0 ppermute schedule with replica-resident
+    # landing slots pruned (replicas carry RAW input features, so only the
+    # first exchange shrinks; deeper layers move activations and use the
+    # full ``rounds``); ``replica_halo_mask`` marks which halo slots those
+    # are, and ``halo_bytes_ppermute0`` counts the layer-0 rows that still
+    # cross the network.
+    replication: Optional[dict] = None
+    r_cap: int = 0
+    replica: Optional[np.ndarray] = None          # (P, r_cap) ids, -1 pad
+    replica_halo_mask: Optional[np.ndarray] = None  # (P, halo_cap) bool
+    rounds0: Optional[Sequence[dict]] = None
+    halo_bytes_ppermute0: int = 0
 
     @property
     def table_rows(self) -> int:
@@ -174,6 +195,10 @@ class ShardPlan:
     @property
     def n(self) -> int:
         return int(self.slot_of.shape[0])
+
+    @property
+    def has_replicas(self) -> bool:
+        return self.replication is not None
 
 
 # --------------------------------------------------------- host construction
@@ -419,10 +444,132 @@ def _patch_rounds(plan: ShardPlan, assign: np.ndarray, halos: dict,
     return widths_grew, new_shifts
 
 
+# ------------------------------------------------------------- replication
+def _normalize_replication(replication, n: int) -> Optional[dict]:
+    """Canonical replication request: ``{part: sorted unique int64 ids}``
+    with out-of-range ids dropped and empty parts removed; ``None`` when
+    nothing remains.  Accepts a core.cost.Replication (its ``by_part``),
+    a plain dict, or None."""
+    if replication is None:
+        return None
+    by_part = getattr(replication, "by_part", replication)
+    out = {}
+    for p, ids in by_part.items():
+        ids = np.unique(np.asarray(ids, dtype=np.int64))
+        ids = ids[(ids >= 0) & (ids < n)]
+        if len(ids):
+            out[int(p)] = ids
+    return out or None
+
+
+def _replica_rows(replication: Optional[dict], assign: np.ndarray,
+                  parts) -> dict:
+    """Materialized replica row per part: the request minus ids currently
+    HOMED on the part (a resident needs no copy — but the request keeps the
+    id, so a later move away re-materializes it)."""
+    out = {}
+    for p in parts:
+        ids = (replication or {}).get(int(p))
+        if ids is None:
+            out[int(p)] = np.zeros(0, dtype=np.int64)
+        else:
+            out[int(p)] = ids[assign[ids] != p]
+    return out
+
+
+def _derive_rounds0(plan: ShardPlan) -> None:
+    """Layer-0 ppermute schedule: the full ``rounds`` with every send whose
+    landing halo slot is replica-resident pruned (send -1 / recv dump slot).
+
+    A pure function of (rounds, halo, replica) recomputed wholesale after
+    every compile/patch — so the patch-vs-fresh-compile bit-identity of
+    those tables carries over to ``rounds0`` for free.  Shifts and widths
+    mirror ``rounds`` exactly: a value-only patch keeps the jitted
+    forward's signature, replica hits only blank out payload rows."""
+    if not plan.has_replicas:
+        plan.replica_halo_mask = None
+        plan.rounds0 = plan.rounds
+        plan.halo_bytes_ppermute0 = plan.halo_bytes_ppermute
+        return
+    Pn, halo_cap = plan.num_parts, plan.halo_cap
+    mask = np.zeros((Pn, halo_cap + 1), dtype=bool)   # col halo_cap: pad slot
+    for p in range(Pn):
+        ids = plan.replica[p]
+        ids = ids[ids >= 0]
+        hp = plan.halo[p]
+        cnt = int((hp >= 0).sum())
+        if len(ids) and cnt:
+            # Replicas that are ALSO halo members shrink the exchange;
+            # serving-only replicas (outside the halo) simply don't match.
+            k = np.searchsorted(hp[:cnt], ids)
+            k = np.minimum(k, cnt - 1)
+            mask[p, k[hp[k] == ids]] = True
+    plan.replica_halo_mask = mask[:, :halo_cap]
+    rounds0, total0 = [], 0
+    for r in plan.rounds:
+        q_of = (np.arange(Pn) + r["shift"]) % Pn      # receiver of each sender
+        hit = mask[np.arange(Pn)[:, None], r["recv_pos"]]   # by receiver row
+        send0 = np.where(hit[q_of], np.int32(-1), r["send_idx"])
+        recv0 = np.where(hit, np.int32(halo_cap), r["recv_pos"])
+        total0 += int((send0 >= 0).sum())
+        rounds0.append({"shift": r["shift"], "send_idx": send0,
+                        "recv_pos": recv0, "width": r["width"]})
+    plan.rounds0 = rounds0
+    plan.halo_bytes_ppermute0 = total0
+
+
+def scatter_replica_halo(plan: ShardPlan, features: np.ndarray) -> np.ndarray:
+    """(n, d) -> (P, halo_cap, d): each device's halo buffer pre-filled with
+    its replica-resident rows (raw input features), zeros elsewhere — the
+    layer-0 ``replica0`` operand of :func:`make_bsp_forward`."""
+    features = np.asarray(features)
+    d = features.shape[1] if features.ndim > 1 else 1
+    out = np.zeros((plan.num_parts, plan.halo_cap, d), dtype=features.dtype)
+    if plan.has_replicas and plan.replica_halo_mask is not None:
+        m = plan.replica_halo_mask
+        out[m] = features.reshape(len(features), d)[plan.halo[m]]
+    return out
+
+
+def set_replication(plan: ShardPlan, replication) -> PlanDelta:
+    """Install (or clear, with None) the plan's replication request IN
+    PLACE: re-materializes the replica table at the current assignment,
+    re-derives the layer-0 schedule, bumps the version.  Growing ``r_cap``
+    (or toggling replicas on/off) changes the forward's signature — one
+    retrace; re-installing within capacity is value-only."""
+    req = _normalize_replication(replication, plan.n)
+    plan.replication = req
+    Pn = plan.num_parts
+    grew = ()
+    if req is None:
+        if plan.r_cap:
+            grew = ("r_cap",)
+        plan.r_cap = 0
+        plan.replica = np.full((Pn, 0), -1, dtype=np.int64)
+    else:
+        rows = _replica_rows(req, plan.assign, range(Pn))
+        need = max((len(r) for r in rows.values()), default=0)
+        r_cap = plan.r_cap
+        if need > r_cap:
+            r_cap = (_grow_cap(r_cap, need, plan.pad_mult) if r_cap
+                     else _slack_cap(need, plan.slack, plan.pad_mult))
+            grew = ("r_cap",)
+        plan.r_cap = r_cap
+        replica = np.full((Pn, r_cap), -1, dtype=np.int64)
+        for p in range(Pn):
+            replica[p, : len(rows[p])] = rows[p]
+        plan.replica = replica
+    _derive_rounds0(plan)
+    plan.version += 1
+    return PlanDelta(
+        moved=np.zeros(0, dtype=np.int64), new_vertices=0,
+        dirty_parts=np.arange(Pn, dtype=np.int64), patched=True, grew=grew)
+
+
 def _compile_from_assign(
     graph: DataGraph, assign: np.ndarray, num_parts: int,
     pad_mult: int = 8, slack: float = 0.0, caps: Optional[PlanCaps] = None,
-    grow: bool = False,
+    grow: bool = False, replication=None,
 ) -> ShardPlan:
     """Full host-side plan compilation (numpy only, no jax device state).
 
@@ -497,7 +644,28 @@ def _compile_from_assign(
         assign, halos, loc_idx, Pn, halo_cap, pad_mult, slack,
         keep_widths=keep)
 
-    return ShardPlan(
+    repl = _normalize_replication(replication, n)
+    if repl is not None:
+        rows_r = _replica_rows(repl, assign, range(Pn))
+        max_r = max((len(r) for r in rows_r.values()), default=0)
+        if caps is not None:
+            if max_r > caps.r_cap and not grow:
+                raise ValueError(
+                    f"pinned r_cap {caps.r_cap} < needed {max_r}")
+            # A pinned r_cap that fits is kept EXACTLY (0 is a legit pinned
+            # value _grow_cap can't reproduce).
+            r_cap = (caps.r_cap if max_r <= caps.r_cap
+                     else _grow_cap(caps.r_cap, max_r, pad_mult))
+        else:
+            r_cap = _slack_cap(max_r, slack, pad_mult)
+    else:
+        r_cap = caps.r_cap if caps is not None else 0
+    replica = np.full((Pn, r_cap), -1, dtype=np.int64)
+    if repl is not None:
+        for p in range(Pn):
+            replica[p, : len(rows_r[p])] = rows_r[p]
+
+    plan = ShardPlan(
         num_parts=Pn, cap=cap, halo_cap=halo_cap, e_cap=e_cap,
         local=local, local_mask=local_mask, slot_of=slot_of,
         halo=halo, halo_slot=halo_slot,
@@ -506,20 +674,30 @@ def _compile_from_assign(
         halo_bytes_ppermute=total_rows,
         halo_rows_allgather=Pn * cap * max(Pn - 1, 0),
         assign=assign.copy(), pad_mult=pad_mult, slack=slack,
+        replication=repl, r_cap=r_cap, replica=replica,
     )
+    _derive_rounds0(plan)
+    return plan
 
 
 def compile_plan(
     graph: DataGraph, part: DevicePartition, pad_mult: int = 8,
     slack: float = 0.0, caps: Optional[PlanCaps] = None,
+    replication=None,
 ) -> ShardPlan:
     """Host-side plan compilation from a DevicePartition.
 
     ``slack`` reserves fractional capacity headroom on every padded axis so
     later :func:`patch_plan` calls stay shape-stable (no retrace); ``caps``
-    pins capacities outright (the patch oracle / growth path)."""
+    pins capacities outright (the patch oracle / growth path).
+    ``replication`` seeds the plan's replica table — defaults to the
+    partition's attached move-vs-replicate overlay (``part.replication``
+    from a ``glad_s(..., replicate=True)`` solve) when present."""
+    if replication is None:
+        replication = getattr(part, "replication", None)
     return _compile_from_assign(graph, part.assign, part.num_parts,
-                                pad_mult=pad_mult, slack=slack, caps=caps)
+                                pad_mult=pad_mult, slack=slack, caps=caps,
+                                replication=replication)
 
 
 def plan_caps(plan: ShardPlan) -> PlanCaps:
@@ -528,6 +706,7 @@ def plan_caps(plan: ShardPlan) -> PlanCaps:
         cap=plan.cap, halo_cap=plan.halo_cap, e_cap=plan.e_cap,
         round_widths={r["shift"]: r["width"] for r in plan.rounds},
         bsr_max_blocks=None if plan.bsr is None else plan.bsr.max_blocks,
+        r_cap=plan.r_cap,
     )
 
 
@@ -538,7 +717,7 @@ def recompile_like(plan: ShardPlan, graph: DataGraph,
     caps = plan_caps(plan)
     fresh = _compile_from_assign(graph, assign, plan.num_parts,
                                  pad_mult=plan.pad_mult, slack=plan.slack,
-                                 caps=caps)
+                                 caps=caps, replication=plan.replication)
     if plan.bsr is not None:
         build_plan_bsr(fresh, bm=plan.bsr.bm, bk=plan.bsr.bk,
                        max_blocks=plan.bsr.max_blocks)
@@ -549,21 +728,28 @@ def plans_equal(a: ShardPlan, b: ShardPlan) -> list:
     """Array-level comparison; returns the list of differing fields."""
     bad = []
     for f in ("num_parts", "cap", "halo_cap", "e_cap",
-              "halo_bytes_ppermute", "halo_rows_allgather"):
+              "halo_bytes_ppermute", "halo_rows_allgather",
+              "r_cap", "halo_bytes_ppermute0"):
         if getattr(a, f) != getattr(b, f):
             bad.append(f)
     for f in ("local", "local_mask", "slot_of", "halo", "halo_slot",
-              "edges_src", "edges_dst", "deg", "assign"):
-        if not np.array_equal(getattr(a, f), getattr(b, f)):
+              "edges_src", "edges_dst", "deg", "assign",
+              "replica", "replica_halo_mask"):
+        if not np.array_equal(getattr(a, f) if getattr(a, f) is not None
+                              else np.zeros(0),
+                              getattr(b, f) if getattr(b, f) is not None
+                              else np.zeros(0)):
             bad.append(f)
-    if len(a.rounds) != len(b.rounds):
-        bad.append("rounds(len)")
-    else:
-        for ra, rb in zip(a.rounds, b.rounds):
+    for name, ga, gb in (("rounds", a.rounds, b.rounds),
+                         ("rounds0", a.rounds0 or (), b.rounds0 or ())):
+        if len(ga) != len(gb):
+            bad.append(f"{name}(len)")
+            continue
+        for ra, rb in zip(ga, gb):
             if (ra["shift"] != rb["shift"] or ra["width"] != rb["width"]
                     or not np.array_equal(ra["send_idx"], rb["send_idx"])
                     or not np.array_equal(ra["recv_pos"], rb["recv_pos"])):
-                bad.append(f"round(shift={ra['shift']})")
+                bad.append(f"{name}(shift={ra['shift']})")
     if (a.bsr is None) != (b.bsr is None):
         bad.append("bsr(presence)")
     elif a.bsr is not None:
@@ -709,9 +895,21 @@ def patch_plan(
         plan.edges_src[p, :cnt] = s_row
         plan.edges_dst[p, :cnt] = d_row
 
+    # Replica rows: part p's materialization (request minus homed ids)
+    # changes only when a replicated vertex moves to or from p — both homes
+    # are in D, so refreshing the dirty parts covers every changed row.
+    if plan.has_replicas:
+        rrows = _replica_rows(plan.replication, new_assign, D)
+        if max((len(r) for r in rrows.values()), default=0) > plan.r_cap:
+            return _rebuild(plan, graph, new_assign, grew=("r_cap",))
+        for p in D:
+            plan.replica[p] = -1
+            plan.replica[p, : len(rrows[int(p)])] = rrows[int(p)]
+
     widths_grew, new_shifts = _patch_rounds(
         plan, new_assign, halos_all, loc_idx, halo_changed, mover_parts,
         resized)
+    _derive_rounds0(plan)
     plan.assign = new_assign.copy()
     plan.version += 1
 
@@ -737,15 +935,17 @@ def _rebuild(plan: ShardPlan, graph: DataGraph,
     caps = PlanCaps(
         cap=plan.cap, halo_cap=plan.halo_cap, e_cap=plan.e_cap,
         round_widths={r["shift"]: r["width"] for r in plan.rounds},
+        r_cap=plan.r_cap,
     )
     if "universe" in grew:
         caps = None                      # renumbered graph: clean slate
     bsr = plan.bsr
     fresh = _compile_from_assign(graph, new_assign, plan.num_parts,
                                  pad_mult=plan.pad_mult, slack=plan.slack,
-                                 caps=caps, grow=True)
+                                 caps=caps, grow=True,
+                                 replication=plan.replication)
     grew = tuple(grew) + tuple(
-        f for f in ("cap", "halo_cap", "e_cap")
+        f for f in ("cap", "halo_cap", "e_cap", "r_cap")
         if getattr(fresh, f) != getattr(plan, f) and f not in grew)
     version = plan.version + 1
     plan.__dict__.update(fresh.__dict__)
@@ -918,10 +1118,16 @@ def _bsr_aggregate(h_local, halo, vals, cols, src_rows, impl):
     return out[: h_local.shape[0], :d]
 
 
-def _exchange_ppermute(h_local, rounds, halo_cap, axis_name):
-    """Move exactly the cut-link rows (paper's C_T) via rotation rounds."""
+def _exchange_ppermute(h_local, rounds, halo_cap, axis_name, init=None):
+    """Move exactly the cut-link rows (paper's C_T) via rotation rounds.
+
+    ``init``: optional (halo_cap + 1, d) starting halo buffer — the layer-0
+    replica path pre-fills replica-resident slots with their (locally
+    stored) raw features and runs the PRUNED ``rounds0`` schedule, whose
+    dump-slot receives land on row halo_cap and never clobber real slots."""
     d = h_local.shape[-1]
-    halo = jnp.zeros((halo_cap + 1, d), h_local.dtype)
+    halo = init if init is not None else jnp.zeros((halo_cap + 1, d),
+                                                   h_local.dtype)
     zero_row = jnp.zeros((1, d), h_local.dtype)
     table = jnp.concatenate([h_local, zero_row], axis=0)
     for r in rounds:
@@ -1008,10 +1214,19 @@ def _device_layer(cfg, p, h_local, halo, plan_arrs, last,
 
 def _bsp_forward_device(cfg, params, h_local, plan_arrs, rounds, halo_cap,
                         exchange, axis_name, agg_mode="segment",
-                        agg_impl="jnp", src_rows=0):
+                        agg_impl="jnp", src_rows=0, rounds0=None, halo0=None):
+    """``rounds0``/``halo0``: the replica fast path for the FIRST exchange —
+    replicas store raw input features, so layer 0 serves their halo slots
+    from the pre-filled ``halo0`` buffer and runs the pruned schedule;
+    deeper layers move fresh activations and always use ``rounds``."""
     for k, p in enumerate(params):
         if exchange == "ppermute":
-            halo = _exchange_ppermute(h_local, rounds, halo_cap, axis_name)
+            if k == 0 and halo0 is not None:
+                halo = _exchange_ppermute(h_local, rounds0, halo_cap,
+                                          axis_name, init=halo0)
+            else:
+                halo = _exchange_ppermute(h_local, rounds, halo_cap,
+                                          axis_name)
         else:
             halo = _exchange_allgather(h_local, plan_arrs["halo_slot"], axis_name)
         h_local = _device_layer(cfg, p, h_local, halo, plan_arrs,
@@ -1050,6 +1265,9 @@ def make_bsp_forward(
     state = {"sig": None, "fn": None, "version": -1, "ops": None,
              "traces": 0, "builds": 0}
 
+    def _use_replicas():
+        return exchange == "ppermute" and plan.has_replicas
+
     def _signature():
         sig = (plan.cap, plan.halo_cap, plan.e_cap)
         if exchange == "ppermute":
@@ -1057,6 +1275,11 @@ def make_bsp_forward(
             # would recompile that path on schedule-only patches.
             sig += (tuple(r["shift"] for r in plan.rounds),
                     tuple(r["width"] for r in plan.rounds))
+        if _use_replicas():
+            # rounds0 mirrors rounds' shifts/widths, so toggling replicas
+            # only adds the halo0 operand + the pruned tables: one flag.
+            # r_cap growth alone is value-only (no shape in the jaxpr).
+            sig += ("repl",)
         if mode == "pallas":
             b = plan.bsr
             sig += (b.bm, b.bk, b.max_blocks, b.src_rows)
@@ -1069,6 +1292,9 @@ def make_bsp_forward(
         if exchange == "ppermute":
             for r in plan.rounds:
                 ops += [r["send_idx"], r["recv_pos"]]
+            if _use_replicas():
+                for r in plan.rounds0:
+                    ops += [r["send_idx"], r["recv_pos"]]
         return tuple(jnp.asarray(a) for a in ops)
 
     def _build():
@@ -1077,9 +1303,14 @@ def make_bsp_forward(
         src_rows = plan.bsr.src_rows if mode == "pallas" else 0
         n_fixed = 6 if mode == "pallas" else 4
         n_rounds = len(shifts) if exchange == "ppermute" else 0
+        has_repl = _use_replicas()
 
-        def inner(params, blocks, *ops):
+        def inner(params, blocks, *rest):
             state["traces"] += 1         # python body runs once per trace
+            if has_repl:
+                halo0_blk, ops = rest[0], rest[1:]
+            else:
+                halo0_blk, ops = None, rest
             plan_arrs = {
                 "edges_src": ops[0][0], "edges_dst": ops[1][0],
                 "deg": ops[2][0], "halo_slot": ops[3][0],
@@ -1087,25 +1318,36 @@ def make_bsp_forward(
             if mode == "pallas":
                 plan_arrs["bsr_values"] = ops[4][0]
                 plan_arrs["bsr_cols"] = ops[5][0]
-            local_rounds = [
-                {"shift": s, "nparts": nparts,
-                 "send_idx": ops[n_fixed + 2 * k][0],
-                 "recv_pos": ops[n_fixed + 2 * k + 1][0]}
-                for k, s in enumerate(shifts[:n_rounds])
-            ]
+
+            def mk_rounds(base):
+                return [
+                    {"shift": s, "nparts": nparts,
+                     "send_idx": ops[base + 2 * k][0],
+                     "recv_pos": ops[base + 2 * k + 1][0]}
+                    for k, s in enumerate(shifts[:n_rounds])
+                ]
+            local_rounds = mk_rounds(n_fixed)
+            rounds0 = mk_rounds(n_fixed + 2 * n_rounds) if has_repl else None
+            halo0 = None
+            if has_repl:
+                h0 = halo0_blk[0].astype(blocks.dtype)
+                halo0 = jnp.concatenate(
+                    [h0, jnp.zeros((1, h0.shape[-1]), h0.dtype)], axis=0)
             out = _bsp_forward_device(
                 cfg, params, blocks[0], plan_arrs, local_rounds,
-                halo_cap, exchange, axis_name, mode, impl, src_rows)
+                halo_cap, exchange, axis_name, mode, impl, src_rows,
+                rounds0=rounds0, halo0=halo0)
             return out[None]
 
-        n_ops = n_fixed + 2 * n_rounds
+        n_ops = n_fixed + 2 * n_rounds * (2 if has_repl else 1)
+        n_lead = 1 if has_repl else 0
         smapped = jaxcompat.shard_map(
             inner, mesh=mesh,
-            in_specs=(P(), spec_b) + (spec_b,) * n_ops,
+            in_specs=(P(), spec_b) + (spec_b,) * (n_lead + n_ops),
             out_specs=spec_b)
         return jax.jit(smapped)
 
-    def forward(params, blocks):
+    def forward(params, blocks, replica0=None):
         sig = _signature()
         if sig != state["sig"]:
             state["fn"] = _build()
@@ -1115,6 +1357,14 @@ def make_bsp_forward(
         if state["version"] != plan.version:
             state["ops"] = _operands()
             state["version"] = plan.version
+        if _use_replicas():
+            if replica0 is None:
+                raise ValueError(
+                    "plan has replicas: pass replica0="
+                    "scatter_replica_halo(plan, features) so layer 0 can "
+                    "serve replica-resident halo slots locally")
+            return state["fn"](params, blocks, jnp.asarray(replica0),
+                               *state["ops"])
         return state["fn"](params, blocks, *state["ops"])
 
     forward.stats = state

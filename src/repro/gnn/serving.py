@@ -394,6 +394,7 @@ class ServeStats:
     batches: int = 0
     wall_time_s: float = 0.0
     local_rows: int = 0          # ego rows owned by the home server
+    replica_hit_rows: int = 0    # remote rows resident as plan replicas
     cache_hit_rows: int = 0      # remote rows served from the home's cache
     fetched_rows: int = 0        # remote rows pulled cross-server
     fetch_cost: float = 0.0      # sum tau[home, owner] over fetched rows
@@ -410,13 +411,21 @@ class GNNServeEngine:
 
     Each tick pops up to ``batch`` queued targets, extracts their ego
     subgraphs, accounts feature locality against the CURRENT
-    ``plan.assign`` (home = the target's server; remote rows go through
-    the home's :class:`FeatureCache`, misses charge ``tau[home, owner]``),
-    and runs the jitted batched ego forward.  The plan is read live: when
-    ``plan.version`` moves (a fault-runtime ``patch_plan``), caches
-    re-seed from the new halos and serving continues — no rebuild of the
-    engine.  ``hops`` defaults to the model depth (exact receptive
-    field); ``fanout`` bounds per-hop neighbors (None = exact)."""
+    ``plan.assign`` (home = the target's server; remote rows consult the
+    plan's REPLICA table first — a replica-resident row is served from the
+    home's persistent copy at zero fetch — then the home's
+    :class:`FeatureCache`; misses charge ``tau[home, owner]``), and runs
+    the jitted batched ego forward.  The plan is read live: when
+    ``plan.version`` moves (a fault-runtime ``patch_plan``), caches and
+    replica masks re-seed and serving continues — no rebuild of the
+    engine.  Re-seeds also SNAPSHOT the per-epoch counters: ``stats``
+    stays cumulative across the engine's whole life, ``epoch_stats`` /
+    ``latency_percentiles(window='epoch')`` cover only the current plan
+    version (throughput/p99 after a patch must not be diluted by the old
+    plan's rows — the ledger before this snapshot silently mixed plans),
+    and ``epoch_history`` keeps the closed epochs.  ``hops`` defaults to
+    the model depth (exact receptive field); ``fanout`` bounds per-hop
+    neighbors (None = exact)."""
 
     def __init__(self, cfg: GNNConfig, params, graph: DataGraph,
                  plan: ShardPlan, features: Optional[np.ndarray] = None,
@@ -437,14 +446,22 @@ class GNNServeEngine:
         self.queue: deque = deque()         # (target, t_submit)
         self.stats = ServeStats()
         self.latencies: List[float] = []
+        # Per-plan-version window: reset on every cache re-seed so the
+        # post-patch report covers the new plan only.
+        self.epoch_stats = ServeStats()
+        self.epoch_latencies: List[float] = []
+        self.epoch_history: List[dict] = []
         self.fwd = make_ego_forward(cfg, params)
         self._degrees = graph.degrees.astype(np.float32)
         self._caches: Dict[int, FeatureCache] = {}
+        self._replica_mask: Dict[int, np.ndarray] = {}
         self._plan_version = -1
         self._refresh_caches()
 
     # ------------------------------------------------------------------ admin
     def _refresh_caches(self) -> None:
+        if self._plan_version >= 0:
+            self._close_epoch()
         row_bytes = self.features.shape[1] * self.features.dtype.itemsize
         self._caches = {}
         for p in range(self.plan.num_parts):
@@ -452,7 +469,27 @@ class GNNServeEngine:
             halo = self.plan.halo[p]
             c.seed(halo[halo >= 0])
             self._caches[p] = c
+        # Replica tier: rows the plan keeps PERSISTENTLY resident on each
+        # server (read-only copies synced once per epoch, not cached
+        # fetches) — consulted before the cache, never evicted.
+        self._replica_mask = {}
+        if getattr(self.plan, "has_replicas", False):
+            for p in range(self.plan.num_parts):
+                ids = self.plan.replica[p]
+                m = np.zeros(self.graph.n, dtype=bool)
+                m[ids[ids >= 0]] = True
+                self._replica_mask[p] = m
         self._plan_version = self.plan.version
+
+    def _close_epoch(self) -> None:
+        """Archive the finished plan-version window and start a fresh one."""
+        self.epoch_history.append({
+            "plan_version": self._plan_version,
+            "stats": self.epoch_stats,
+            "latency": self.latency_percentiles(window="epoch"),
+        })
+        self.epoch_stats = ServeStats()
+        self.epoch_latencies = []
 
     def cache_stats(self) -> Dict[str, int]:
         out = {"hits": 0, "misses": 0, "evictions": 0, "rejected": 0,
@@ -474,24 +511,36 @@ class GNNServeEngine:
     def _account(self, ego: EgoBatch, targets: np.ndarray) -> None:
         assign = self.plan.assign
         tau = self.net.tau if self.net is not None else None
+        ledgers = (self.stats, self.epoch_stats)
         for b in range(len(targets)):
             home = int(assign[targets[b]])
             row = ego.nodes[b]
             ns = row[row >= 0]
             owners = assign[ns]
             local = owners == home
-            self.stats.local_rows += int(local.sum())
+            for st in ledgers:
+                st.local_rows += int(local.sum())
             remote = ns[~local]
             if not len(remote):
                 continue
+            rmask = self._replica_mask.get(home)
+            if rmask is not None:
+                rhit = rmask[remote]
+                for st in ledgers:
+                    st.replica_hit_rows += int(rhit.sum())
+                remote = remote[~rhit]
+                if not len(remote):
+                    continue
             cache = self._caches[home]
             hit = cache.lookup(remote)
-            self.stats.cache_hit_rows += int(hit.sum())
+            for st in ledgers:
+                st.cache_hit_rows += int(hit.sum())
             missed = remote[~hit]
-            self.stats.fetched_rows += len(missed)
-            if tau is not None and len(missed):
-                self.stats.fetch_cost += float(
-                    tau[home, assign[missed]].sum())
+            fc = (float(tau[home, assign[missed]].sum())
+                  if tau is not None and len(missed) else 0.0)
+            for st in ledgers:
+                st.fetched_rows += len(missed)
+                st.fetch_cost += fc
             cache.admit(missed)
 
     def tick(self) -> Optional[np.ndarray]:
@@ -513,11 +562,13 @@ class GNNServeEngine:
         out = np.asarray(self.fwd(jnp.asarray(feats), jnp.asarray(ego.arcs),
                                   jnp.asarray(deg), jnp.asarray(tgt_rows)))
         now = time.perf_counter()
-        self.stats.wall_time_s += now - t0
-        self.stats.batches += 1
-        self.stats.requests += take
+        for st in (self.stats, self.epoch_stats):
+            st.wall_time_s += now - t0
+            st.batches += 1
+            st.requests += take
         for _, ts in items:
             self.latencies.append(now - ts)
+            self.epoch_latencies.append(now - ts)
         return out[:take]
 
     def run(self, max_batches: int = 10 ** 9) -> ServeStats:
@@ -534,17 +585,36 @@ class GNNServeEngine:
         return (np.concatenate(outs, axis=0) if outs
                 else np.zeros((0, self.cfg.layer_dims[-1]), np.float32))
 
-    def latency_percentiles(self) -> Dict[str, float]:
-        if not self.latencies:
+    def latency_percentiles(self, window: str = "all") -> Dict[str, float]:
+        """``window='all'``: engine lifetime; ``'epoch'``: current plan
+        version only (the post-patch report)."""
+        lats = self.latencies if window == "all" else self.epoch_latencies
+        if not lats:
             return {"p50": 0.0, "p99": 0.0}
-        arr = np.asarray(self.latencies)
+        arr = np.asarray(lats)
         return {"p50": float(np.percentile(arr, 50)),
                 "p99": float(np.percentile(arr, 99))}
 
 
 # ---------------------------------------------------------------- evaluation
+def _replication_masks(replication, assign: np.ndarray, num_parts: int,
+                       n: int):
+    """(num_parts, n) bool of MATERIALIZED replicas (request minus homed)
+    from a Replication / plain dict / replicated ShardPlan's request."""
+    by_part = getattr(replication, "by_part", None)
+    if by_part is None:
+        by_part = getattr(replication, "replication", replication)
+    mask = np.zeros((num_parts, n), dtype=bool)
+    for p, ids in (by_part or {}).items():
+        ids = np.asarray(ids, dtype=np.int64)
+        ids = ids[(ids >= 0) & (ids < n)]
+        mask[int(p), ids[assign[ids] != int(p)]] = True
+    return mask
+
+
 def serving_cost(cm, assign: np.ndarray, targets: np.ndarray, hops: int,
-                 fanout: Optional[int] = None) -> float:
+                 fanout: Optional[int] = None, replication=None,
+                 sync_weight: float = 0.5, storage: float = 0.0) -> float:
     """Analytic serving cost of a layout under a request stream, under the
     paper's DISTRIBUTED execution model: each ego vertex aggregates at its
     own host (the BSP forward restricted to the ego — C_P of node ``u`` at
@@ -554,24 +624,97 @@ def serving_cost(cm, assign: np.ndarray, targets: np.ndarray, hops: int,
     :func:`request_traffic`-weighted unary compute row — the quantity a
     traffic-aware ``CostModel`` hands GLAD.
 
+    ``replication`` (a ``core.Replication``, a ``{part: ids}`` dict, or a
+    replicated ShardPlan) prices replica-resident rows at ZERO fetch —
+    the copy already lives at the home, so only the one-time sync
+    (``sync_weight * tau[owner, p]`` per materialized replica, the same
+    rule as ``CostModel.replicate_greedy``) plus ``storage`` is charged,
+    once per replica, independent of how many requests read it.  Compute
+    stays at the owner — replication moves bytes, not FLOPs.
+
     Pass a traffic-BLIND CostModel: the stream itself carries the request
     weighting here, so a traffic-scaled ``cp_matrix`` would double count.
     This is the metric the serving bench uses to compare traffic-aware vs
-    traffic-blind GLAD layouts in the same window."""
+    traffic-blind (and replicated vs move-only) layouts in the same
+    window."""
     if cm.traffic is not None:
         raise ValueError("pass a traffic-blind CostModel (traffic=None)")
     assign = np.asarray(assign, dtype=np.int64)
     uniq, cnt = np.unique(np.asarray(targets, dtype=np.int64),
                           return_counts=True)
     cp, tau = cm.cp_matrix, cm.net.tau
+    rmask = None
     total = 0.0
+    if replication is not None:
+        rmask = _replication_masks(replication, assign, cm.net.m,
+                                   cm.graph.n)
+        ps, vs = np.nonzero(rmask)
+        total += float((sync_weight * tau[assign[vs], ps]).sum())
+        total += storage * len(vs)
     for v, c in zip(uniq, cnt):
         nodes, _, _ = extract_ego(cm.graph, int(v), hops, fanout)
         h = int(assign[v])
         owners = assign[nodes]
         cost = float(cp[nodes, owners].sum())
-        remote = owners[owners != h]
-        if len(remote):
-            cost += float(tau[h, remote].sum())
+        rn = nodes[owners != h]
+        if rmask is not None and len(rn):
+            rn = rn[~rmask[h, rn]]
+        if len(rn):
+            cost += float(tau[h, assign[rn]].sum())
         total += float(c) * cost
     return total
+
+
+def replicate_for_stream(cm, assign: np.ndarray, targets: np.ndarray,
+                         hops: int, fanout: Optional[int] = None,
+                         sync_weight: float = 0.5, storage: float = 0.0,
+                         budget: Optional[int] = None):
+    """Serving-side move-vs-replicate greedy: pick the replica set that
+    minimizes :func:`serving_cost` for THIS stream.
+
+    ``CostModel.replicate_greedy`` weighs replicas against the layout's
+    recurring halo traffic; under request serving the right weight is the
+    stream itself — ``w(v, h)`` = requests homed at ``h`` whose ego
+    contains remote row ``v``, each saving one ``tau[h, owner]`` fetch.
+    Replicating v into h is again a unary decision given the layout:
+    ``gain = w(v, h) * tau[h, owner] - (sync_weight * tau[owner, h] +
+    storage)``; all positive-gain pairs are accepted (they are independent,
+    so the greedy is exact for this overlay), ``budget`` caps replicas per
+    part (highest gain first, id tie-break).  Returns a
+    ``core.Replication`` ready for ``serving_cost(replication=...)`` /
+    ``set_replication``."""
+    from repro.core.cost import Replication
+
+    if cm.traffic is not None:
+        raise ValueError("pass a traffic-blind CostModel (traffic=None)")
+    assign = np.asarray(assign, dtype=np.int64)
+    m, n = cm.net.m, cm.graph.n
+    tau = cm.net.tau
+    w = np.zeros((m, n), dtype=np.float64)      # fetch multiplicity (h, v)
+    uniq, cnt = np.unique(np.asarray(targets, dtype=np.int64),
+                          return_counts=True)
+    for v, c in zip(uniq, cnt):
+        nodes, _, _ = extract_ego(cm.graph, int(v), hops, fanout)
+        h = int(assign[v])
+        rn = nodes[assign[nodes] != h]
+        w[h, rn] += float(c)
+    owner = np.broadcast_to(assign, (m, n))
+    hcol = np.arange(m)[:, None]
+    gain = w * tau[hcol, owner] - (sync_weight * tau[owner, hcol] + storage)
+    gain = np.where(w > 0, gain, -np.inf)
+    by_part, saved_t, sync_t = {}, 0.0, 0.0
+    for p in range(m):
+        ids = np.flatnonzero(gain[p] > 1e-12)
+        if budget is not None and len(ids) > budget:
+            ids = ids[np.lexsort((ids, -gain[p, ids]))[:budget]]
+            ids = np.sort(ids)
+        if len(ids):
+            by_part[p] = ids.astype(np.int64)
+            saved_t += float((w[p, ids] * tau[p, assign[ids]]).sum())
+            sync_t += float((sync_weight * tau[assign[ids], p]).sum())
+    count = sum(len(v) for v in by_part.values())
+    stor_t = storage * count
+    return Replication(by_part=by_part,
+                       gain=saved_t - sync_t - stor_t, saved=saved_t,
+                       sync=sync_t, storage=stor_t,
+                       sync_weight=sync_weight, storage_cost=storage)

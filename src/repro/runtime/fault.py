@@ -117,7 +117,8 @@ class ElasticCoordinator:
                  warm: "bool | str" = "auto",
                  multilevel: "bool | str" = False,
                  coarsen_to: int = 1024,
-                 levels: Optional[int] = None):
+                 levels: Optional[int] = None,
+                 replicate: "bool | dict" = False):
         self.net = net
         self.graph = graph
         self.gnn = gnn
@@ -136,10 +137,15 @@ class ElasticCoordinator:
         # the coarsen/solve/refine V-cycle — the warm init is restricted up
         # the hierarchy by majority vote, so survivors still anchor the
         # coarse solve.
+        # 'replicate' (True or replicate_greedy kwargs) keeps a
+        # move-vs-replicate overlay attached to every partition this
+        # coordinator produces; its replicas double as the degraded-mode
+        # fallback on failure — an orphan with a live replica re-homes to
+        # the replica's host instead of a random survivor.
         self._glad_opts = dict(workers=workers, cache=cache,
                                chunk_nodes=chunk_nodes, warm=warm,
                                multilevel=multilevel, coarsen_to=coarsen_to,
-                               levels=levels)
+                               levels=levels, replicate=replicate)
 
     def on_failure(self, dead: List[int], seed: int = 0) -> DevicePartition:
         """Node loss: disconnect dead servers, re-layout incrementally
@@ -155,16 +161,31 @@ class ElasticCoordinator:
         # kinds: old_cost is "what staying put would cost now", not the
         # stale stored total from before the failure.
         old_cost = cm.total(self.part.assign)
-        # Orphans must move; everything else is warm-started.
+        # Orphans must move; everything else is warm-started.  An orphan
+        # whose row is REPLICATED on a surviving server re-homes there (the
+        # copy is already resident — degraded mode serves from it with zero
+        # migration); lowest replica-hosting part wins, deterministically.
+        # Remaining orphans scatter randomly as before.
         assign = self.part.assign.copy()
         orphan = np.isin(assign, dead)
         alive = [i for i in range(net.m) if i not in dead]
         rng = np.random.default_rng(seed)
         assign[orphan] = rng.choice(alive, size=int(orphan.sum()))
+        repl = getattr(self.part, "replication", None)
+        if repl is not None:
+            placed = np.zeros(self.graph.n, dtype=bool)
+            for p in sorted(repl.by_part):
+                if p in dead:
+                    continue                 # the copy died with its host
+                ids = np.asarray(repl.by_part[p], dtype=np.int64)
+                take = ids[orphan[ids] & ~placed[ids]]
+                assign[take] = p
+                placed[take] = True
         res = glad_s(cm, init=assign, R=net.m, seed=seed, sweep="batched",
                      **self._glad_opts)
         new_part = partition_from_assign(self.graph, res.assign,
-                                         self.part.num_parts, res.factors)
+                                         self.part.num_parts, res.factors,
+                                         replication=res.replication)
         moved = np.flatnonzero(res.assign != self.part.assign)
         self.events.append(RelayoutEvent(
             "failure", dead, old_cost, res.cost, len(moved),
@@ -186,7 +207,8 @@ class ElasticCoordinator:
         res = glad_s(cm, init=self.part.assign, R=net.m, seed=seed,
                      sweep="batched", **self._glad_opts)
         new_part = partition_from_assign(self.graph, res.assign,
-                                         self.part.num_parts, res.factors)
+                                         self.part.num_parts, res.factors,
+                                         replication=res.replication)
         moved = np.flatnonzero(res.assign != self.part.assign)
         self.events.append(RelayoutEvent(
             "straggler", slow, old_cost, res.cost, len(moved),
