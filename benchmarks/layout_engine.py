@@ -52,6 +52,21 @@ steady-state evictions (the second-touch gate freezes a resident set
 instead of thrashing), nonzero rejected assemblies, nonzero hits, and
 exact cost parity against a cache-free solve.
 
+Section 6 (``session_cells``) — cross-slot persistent LayoutSession vs
+per-slot rebuild, same-window interleaved A/B over two scenarios.
+``fault_loop`` is the headline: an ElasticCoordinator straggler-flap
+stream (hard degrades that migrate, mild flaps the relayout confirms
+at zero moves) where the graph never changes, so adopted assemblies
+column-patch and warm residuals repair across every event.  ``glad_a``
+is the adaptive evolution loop (the examples/adaptive_relayout.py
+workload) — recorded honestly: at scale it does NOT win (GLAD-E's
+active masks make the members the changed region itself, so there is
+nothing to carry; measured ~0.9x at n=20k), which is exactly the
+cache='auto' policy's reasoning.  Only the per-event relayouts /
+per-slot ``step()`` calls are timed; the arms must agree exactly on
+per-event costs, migration counts and the final assignment (the
+session may only change wall time, never bits).
+
 Full-run cost parity (sequential vs batched-pairwise vs batched-block,
 exhaustive R) is recorded for n <= 20k; the 50k full runs are skipped by
 default and logged as skipped — per-round numbers there come from the
@@ -885,7 +900,12 @@ def run_admission_cell(n: int, m: int, seed: int = 0, reps: int = 2):
     budget = max(e.nbytes for e in probe._cache.values()) * 3
 
     eng = PairCutEngine(cm, init.copy(), cache=True, cache_bytes=budget)
-    for _ in range(2):                                   # warmup scans
+    # Three warmup scans: assemblies go resident on the first, warm
+    # residuals prime on the second, and the peel-composed warm start
+    # primes PEEL-KEYED residuals on converged-but-gated entries one
+    # probe later still — the byte footprint (and therefore the frozen
+    # resident set) only reaches steady state on the third.
+    for _ in range(3):                                   # warmup scans
         for p in pairs:
             eng.solve_pair(*p)
     warm = dict(eng.cache_stats())
@@ -913,6 +933,161 @@ def run_admission_cell(n: int, m: int, seed: int = 0, reps: int = 2):
         "admission_cost": res.cost,
         "admission_rel_cost_err": abs(res.cost - ref.cost)
         / max(abs(ref.cost), 1e-12),
+    }
+
+
+def run_session_cell(n: int, m: int = 8, slots: int = 8, seed: int = 0,
+                     reps: int = 2, theta_per_n: float = 0.18):
+    """Cross-slot persistent LayoutSession vs per-slot rebuild over the
+    GLAD-A adaptive loop (the examples/adaptive_relayout.py workload):
+    the graph evolves every slot and the scheduler picks GLAD-E or
+    GLAD-S.  Both arms replay the IDENTICAL precomputed slot stream,
+    interleaved in the same noise window; only the per-slot ``step()``
+    calls are timed — the untimed ``__init__`` full solve is what warms
+    the session arm's engine, exactly the deployment shape (the engine
+    already exists when slot 1 arrives).  Exact-parity gates: per-slot
+    costs, algorithm choices and the final assignment must be identical
+    across arms — the session may only change wall time."""
+    from repro.core.evolution import apply_delta, evolution_trace
+    from repro.core.glad_a import GladA
+    from repro.graphs.datagraph import synthetic_yelp
+
+    g0 = synthetic_yelp(n=n, target_links=int(n * 1.25), seed=seed)
+    net = build_edge_network(g0, m, seed=seed)
+    gnn = workload_for("gat", 100)
+    # Drift SLA scaled per-vertex so the stream exercises BOTH branches:
+    # GLAD-E carries most slots, GLAD-S fires on the occasional breach.
+    th = theta_per_n * n
+    graphs, cur = [], g0
+    for delta in evolution_trace(g0, slots, pct_links=0.02,
+                                 pct_vertices=0.01, seed=1):
+        cur = apply_delta(cur, delta)
+        graphs.append(cur)
+
+    def run_arm(session: bool):
+        sched = GladA(net, gnn, g0, theta=th, R=3, seed=seed,
+                      session=session)
+        t_steps = 0.0
+        for gph in graphs:
+            t0 = time.perf_counter()
+            sched.step(gph)
+            t_steps += time.perf_counter() - t0
+        return sched, t_steps
+
+    fns = {"session": lambda: run_arm(True),
+           "rebuild": lambda: run_arm(False)}
+    best = {k: float("inf") for k in fns}
+    out = {}
+    for _ in range(max(1, reps)):
+        for key, fn in fns.items():
+            out[key], t = fn()
+            best[key] = min(best[key], t)
+    ses, reb = out["session"], out["rebuild"]
+
+    ses_costs = [r.cost for r in ses.records]
+    reb_costs = [r.cost for r in reb.records]
+    trajectory_match = (
+        ses_costs == reb_costs
+        and [r.algorithm for r in ses.records]
+        == [r.algorithm for r in reb.records]
+        and bool((ses.assign == reb.assign).all()))
+    rel_err = abs(ses.last_cost - reb.last_cost) / max(
+        abs(reb.last_cost), 1e-12)
+    return {
+        "scenario": "glad_a",
+        "n": n, "m": m, "slots": slots, "theta": round(th, 2),
+        "glad_s_slots": sum(1 for r in ses.records[1:]
+                            if r.algorithm == "glad-s"),
+        "session_relayout_s": round(best["session"], 4),
+        "rebuild_relayout_s": round(best["rebuild"], 4),
+        "session_per_relayout_ms": round(best["session"] / slots * 1e3, 2),
+        "rebuild_per_relayout_ms": round(best["rebuild"] / slots * 1e3, 2),
+        "session_speedup": round(best["rebuild"] / best["session"], 2),
+        "session_final_cost": ses.last_cost,
+        "rebuild_final_cost": reb.last_cost,
+        "session_rel_cost_err": rel_err,
+        "trajectory_match": trajectory_match,
+        "session_adoptions": ses.session.adoptions,
+        "session_rebinds": ses.session.rebinds,
+    }
+
+
+def run_session_fault_cell(n: int, m: int = 8, seed: int = 0,
+                           reps: int = 2, cycles: int = 3):
+    """Cross-slot persistent LayoutSession vs per-event rebuild over the
+    ElasticCoordinator fault loop — the session's headline regime.  A
+    flapping-straggler event stream (one hard degrade that really
+    migrates work, three mild flaps the relayout CONFIRMS at zero
+    moves, every server revived after) relayouts on a graph that never
+    changes, so the adopted engine's assemblies survive as column
+    patches (degrade/revive reprices whole unary columns but leaves tau
+    — and therefore every internal arc — intact) and retained residuals
+    warm-repair instead of re-pushing flow.  Both arms replay the
+    IDENTICAL event stream, interleaved in the same noise window; only
+    the on_straggler/on_revive calls are timed.  Exact-parity gates:
+    per-event relayout costs, per-event migration counts and the final
+    assignment must be identical across arms."""
+    from repro.core.partition import data_partition
+    from repro.graphs.datagraph import synthetic_yelp
+    from repro.runtime.fault import ElasticCoordinator
+
+    g = synthetic_yelp(n=n, target_links=int(n * 1.25), seed=seed)
+    net = build_edge_network(g, m, seed=seed)
+    gnn = workload_for("gat", 100)
+    part = data_partition(g, gnn, num_parts=m, net=net, seed=seed)
+    events = []
+    for _ in range(cycles):
+        for s, f in ((1, 2.0), (5, 1.5), (2, 1.5), (6, 1.5)):
+            events += [("deg", s, f), ("rev", s)]
+
+    def run_arm(session: bool):
+        coord = ElasticCoordinator(net, g, gnn, part, session=session)
+        t_events = 0.0
+        for ev in events:
+            t0 = time.perf_counter()
+            if ev[0] == "deg":
+                coord.on_straggler([ev[1]], ev[2])
+            else:
+                coord.on_revive([ev[1]])
+            t_events += time.perf_counter() - t0
+        return coord, t_events
+
+    fns = {"session": lambda: run_arm(True),
+           "rebuild": lambda: run_arm(False)}
+    best = {k: float("inf") for k in fns}
+    out = {}
+    for _ in range(max(1, reps)):
+        for key, fn in fns.items():
+            out[key], t = fn()
+            best[key] = min(best[key], t)
+    ses, reb = out["session"], out["rebuild"]
+
+    ses_costs = [e.new_cost for e in ses.events]
+    reb_costs = [e.new_cost for e in reb.events]
+    ses_moved = [len(e.moved) for e in ses.events]
+    reb_moved = [len(e.moved) for e in reb.events]
+    trajectory_match = (
+        ses_costs == reb_costs and ses_moved == reb_moved
+        and bool((ses.part.assign == reb.part.assign).all()))
+    rel_err = abs(ses_costs[-1] - reb_costs[-1]) / max(
+        abs(reb_costs[-1]), 1e-12)
+    ne = len(events)
+    return {
+        "scenario": "fault_loop",
+        "n": n, "m": m, "events": ne, "cycles": cycles,
+        "migrated_total": int(sum(ses_moved)),
+        "confirm_events": int(sum(1 for c in ses_moved if c == 0)),
+        "session_relayout_s": round(best["session"], 4),
+        "rebuild_relayout_s": round(best["rebuild"], 4),
+        "session_per_relayout_ms": round(best["session"] / ne * 1e3, 2),
+        "rebuild_per_relayout_ms": round(best["rebuild"] / ne * 1e3, 2),
+        "session_speedup": round(best["rebuild"] / best["session"], 2),
+        "session_final_cost": ses_costs[-1],
+        "rebuild_final_cost": reb_costs[-1],
+        "session_rel_cost_err": rel_err,
+        "trajectory_match": trajectory_match,
+        "session_adoptions": ses._session.adoptions,
+        "session_rebinds": ses._session.rebinds,
     }
 
 
@@ -965,6 +1140,18 @@ def _verify_cost_parity(out: dict, tol: float = 1e-9):
                        "(no budget pressure — cell mis-sized)")
         if cell.get("steady_hits", 1) <= 0:
             bad.append(f"{where}: resident set served no hits")
+    for cell in out.get("session_cells", []):
+        where = (f"session[{cell.get('scenario', '?')}] "
+                 f"n={cell['n']} m={cell['m']}")
+        if cell.get("session_rel_cost_err", 0.0) > tol:
+            bad.append(f"{where}: session_rel_cost_err="
+                       f"{cell['session_rel_cost_err']:.3e} > {tol:g}")
+        if not cell.get("trajectory_match", True):
+            bad.append(f"{where}: session arm's per-slot trajectory "
+                       "diverged from the per-slot-rebuild arm")
+        if cell.get("session_rebinds", 1) <= 0:
+            bad.append(f"{where}: session never rebound an engine "
+                       "(adopt silently rebuilt every slot)")
     return bad
 
 
@@ -1087,6 +1274,36 @@ def main(argv=None):
               f"{cell['steady_evictions']}, hits {cell['steady_hits']}, "
               f"rejected {cell['steady_rejected']}")
 
+    # Cross-slot persistent session vs per-slot rebuild (PR-9), two
+    # scenarios: the coordinator fault loop (headline — column patches +
+    # warm repairs on an unchanged graph) and the GLAD-A adaptive loop
+    # (recorded honestly: masked evolution slots carry ~nothing at
+    # scale).  The quick cells feed --fail-on-mismatch (exact final-cost
+    # parity + trajectory match + rebind engagement) and --check-parity;
+    # the full grid adds the n=20k cells.
+    ses_grid = [(1000, 8)] if args.quick else [(1000, 8), (20000, 8)]
+    ses_cells = []
+    for n, m in ses_grid:
+        cell = run_session_fault_cell(n, m, reps=min(args.reps, 2))
+        ses_cells.append(cell)
+        print(f"n={n:>6} m={m:>2}: session fault-loop per-relayout "
+              f"{cell['session_per_relayout_ms']}ms rebuild "
+              f"{cell['rebuild_per_relayout_ms']}ms "
+              f"({cell['session_speedup']}x over {cell['events']} events, "
+              f"{cell['confirm_events']} confirms, "
+              f"rebinds {cell['session_rebinds']}, "
+              f"match={cell['trajectory_match']})")
+    for n, m in ses_grid:
+        cell = run_session_cell(n, m, reps=min(args.reps, 2))
+        ses_cells.append(cell)
+        print(f"n={n:>6} m={m:>2}: session glad-a per-relayout "
+              f"{cell['session_per_relayout_ms']}ms rebuild "
+              f"{cell['rebuild_per_relayout_ms']}ms "
+              f"({cell['session_speedup']}x, glad-s on "
+              f"{cell['glad_s_slots']}/{cell['slots']} slots, "
+              f"rebinds {cell['session_rebinds']}, "
+              f"match={cell['trajectory_match']})")
+
     conv_cells = []
     if not args.quick:
         for n, m in round_grid:
@@ -1129,6 +1346,7 @@ def main(argv=None):
         "resolve_cells": resolve_cells,
         "multilevel_cells": ml_cells,
         "admission_cells": adm_cells,
+        "session_cells": ses_cells,
         "convergence_cells": conv_cells,
     }
     with open(args.out, "w") as f:
@@ -1168,7 +1386,9 @@ def check_parity(ref_path: str = "BENCH_layout.json",
     os.unlink(tmp_path)
 
     def index(doc, section, keys):
-        return {(c["n"], c["m"]): {k: c[k] for k in keys if k in c}
+        # scenario disambiguates same-size cells (session fault/glad-a)
+        return {(c.get("scenario"), c["n"], c["m"]):
+                {k: c[k] for k in keys if k in c}
                 for c in doc.get(section, [])}
 
     checks = [
@@ -1179,6 +1399,7 @@ def check_parity(ref_path: str = "BENCH_layout.json",
         ("resolve_cells", ("resolve_final_cost",)),
         ("multilevel_cells", ("flat_cost", "multilevel_cost")),
         ("admission_cells", ("admission_cost",)),
+        ("session_cells", ("session_final_cost", "rebuild_final_cost")),
     ]
     bad = []
     for section, keys in checks:
@@ -1192,7 +1413,7 @@ def check_parity(ref_path: str = "BENCH_layout.json",
                     continue
                 err = abs(v - r) / max(abs(r), 1e-12)
                 if err > rtol:
-                    bad.append(f"{section} n={cell_key[0]} m={cell_key[1]} "
+                    bad.append(f"{section} n={cell_key[1]} m={cell_key[2]} "
                                f"{k}: {v!r} vs committed {r!r} "
                                f"(rel {err:.3e} > {rtol:g})")
     if bad:

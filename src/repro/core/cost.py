@@ -110,6 +110,35 @@ def workload_for(model: str, in_dim: int, hidden: int = 16, out_dim: int = 2,
     raise ValueError(f"unknown GNN model {model!r}")
 
 
+@dataclasses.dataclass
+class ModelDiff:
+    """What changed between two CostModels over the same fleet (m equal,
+    graph grown or equal).  Consumed by ``PairCutEngine.rebind`` to bump
+    per-vertex / per-server epochs so only genuinely-affected cache entries
+    and warm-start residuals are invalidated across slots.
+
+    ``unary_rows``      vertices whose unary row changed in a sparse set of
+                        server columns (each needs a theta re-gather);
+    ``servers``         servers whose whole unary column or tau row changed
+                        (degrade / kill: every pair touching them rebuilds);
+    ``tau_pairs``       (m, m) bool of CHANGED tau entries, or None — a tau
+                        change alters internal arc capacities, which theta
+                        patches never repair, so affected pairs must
+                        reassemble from scratch;
+    ``tau_cols``        servers j with sparse tau-column changes: vertices
+                        assigned to j impose new arc prices on their
+                        neighbors' pair problems;
+    ``struct_vertices`` endpoints of inserted/deleted/reweighted links plus
+                        brand-new vertices (membership arrays stale).
+    """
+
+    unary_rows: np.ndarray
+    servers: np.ndarray
+    tau_pairs: "np.ndarray | None"
+    tau_cols: np.ndarray
+    struct_vertices: np.ndarray
+
+
 class CostModel:
     """Vectorized evaluator of the four cost factors for a (net, graph, gnn).
 
@@ -275,6 +304,82 @@ class CostModel:
     def layout_state(self, assign: np.ndarray) -> "LayoutState":
         """Cached per-assignment state for O(moved + incident) delta costs."""
         return LayoutState(self, assign)
+
+    def rebind(self, old: "CostModel") -> ModelDiff:
+        """Diff this model against the previous slot's: the minimal epoch
+        bumps a persistent engine needs to adopt it (see ModelDiff).  Both
+        models must price the same fleet; the graph may only grow (GLAD-E's
+        evolution contract — deletions re-enter as weight-0 links)."""
+        if self.net.m != old.net.m:
+            raise ValueError(
+                f"rebind across fleet sizes ({old.net.m} -> {self.net.m})")
+        n_old, n_new = old.graph.n, self.graph.n
+        if n_new < n_old:
+            raise ValueError(f"rebind shrank the graph ({n_old} -> {n_new})")
+        m = self.net.m
+
+        # Unary: dense columns (degrade/kill/traffic-rescale hit every row
+        # of a server) become server epochs; remaining sparse changes become
+        # per-vertex rows.
+        D = self.unary[:n_old] != old.unary
+        colcnt = D.sum(axis=0)
+        dense = colcnt * 2 > max(n_old, 1)
+        servers = set(np.flatnonzero(dense).tolist())
+        if dense.all():
+            unary_rows = np.zeros(0, dtype=np.int64)
+        else:
+            unary_rows = np.flatnonzero(D[:, ~dense].any(axis=1))
+
+        # Tau: any change poisons internal arc capacities of pairs reading
+        # the changed entries.  Dense rows (a server's whole link pricing
+        # moved) fold into server epochs; sparse leftover columns are
+        # reported so the engine can bump the neighbors of vertices homed
+        # on those servers.
+        T = self.net.tau != old.net.tau
+        if T.any():
+            tau_pairs = T
+            dense_r = T.sum(axis=1) * 2 > m
+            servers.update(np.flatnonzero(dense_r).tolist())
+            rest = T[~dense_r] if not dense_r.all() else np.zeros((0, m), bool)
+            tau_cols = np.flatnonzero(rest.any(axis=0))
+        else:
+            tau_pairs = None
+            tau_cols = np.zeros(0, dtype=np.int64)
+
+        # Graph delta: symmetric difference of edge keys + weight changes on
+        # common edges + brand-new vertices.
+        if self.graph is old.graph:
+            struct = np.zeros(0, dtype=np.int64)
+        else:
+            N = np.int64(max(n_new, 1))
+            eo, en = old.graph.edges, self.graph.edges
+            ko = (eo[:, 0].astype(np.int64) * N + eo[:, 1]
+                  if len(eo) else np.zeros(0, np.int64))
+            kn = (en[:, 0].astype(np.int64) * N + en[:, 1]
+                  if len(en) else np.zeros(0, np.int64))
+            only_o = ~np.isin(ko, kn)
+            only_n = ~np.isin(kn, ko)
+            touched = [eo[only_o].ravel(), en[only_n].ravel(),
+                       np.arange(n_old, n_new, dtype=np.int64)]
+            if (old.graph.edge_weights is not None
+                    or self.graph.edge_weights is not None):
+                wo = old.graph.weights_or_ones().astype(np.float64)
+                wn = self.graph.weights_or_ones().astype(np.float64)
+                so, sn = np.argsort(ko, kind="stable"), np.argsort(
+                    kn, kind="stable")
+                cko, ckn = ko[so], kn[sn]
+                if len(cko) and len(ckn):
+                    pos = np.minimum(np.searchsorted(cko, ckn), len(cko) - 1)
+                    changed = (cko[pos] == ckn) & (wo[so][pos] != wn[sn])
+                    touched.append(en[sn[changed]].ravel())
+            struct = np.unique(np.concatenate(touched)).astype(np.int64)
+
+        return ModelDiff(
+            unary_rows=np.asarray(unary_rows, dtype=np.int64),
+            servers=np.array(sorted(servers), dtype=np.int64),
+            tau_pairs=tau_pairs,
+            tau_cols=np.asarray(tau_cols, dtype=np.int64),
+            struct_vertices=struct)
 
     def marginal_fp(self, subset: np.ndarray, v: int) -> float:
         """Paper's F_P(X, v) under auxiliary-graph accounting (Thm 3, Eq. 14):

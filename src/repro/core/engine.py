@@ -84,7 +84,8 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.maxflow import (_HAVE_SCIPY, PEEL_GATE_FRAC, CutArena,
                                 ResidualCut, _chunk_block_spans, min_st_cut,
-                                min_st_cut_csr_blocks, peel_gate_fraction)
+                                min_st_cut_csr_blocks, peel_gate_fraction,
+                                peel_warm_solve)
 from repro.graphs.datagraph import csr_multirange
 
 #: Default node budget for one glued block-diagonal flow union
@@ -107,12 +108,16 @@ class _PairAssembly:
     (:class:`repro.core.maxflow.ResidualCut`) — valid across theta patches
     (the flow structure is membership-determined), dropped on membership
     patches and rebuilds, and counted against the LRU byte budget.
+    ``residual_key`` says WHICH problem the residual was primed on: None
+    for the full core, else the persistency peel's alive mask (the state
+    lives over the reduced survivor problem and is only reusable while the
+    forced set repeats — the peel-composed warm start).
     ``stamp`` is the engine dirty-version the arrays are valid for.
     """
 
     __slots__ = ("members", "theta_i", "theta_j", "int_a", "int_b", "int_w",
                  "stamp", "has_int", "core", "core_int_a", "core_int_b",
-                 "residual", "nbytes")
+                 "residual", "residual_key", "nbytes")
 
     def __init__(self, members, theta_i, theta_j, int_a, int_b, int_w,
                  stamp):
@@ -128,6 +133,7 @@ class _PairAssembly:
         self.core_int_a = None
         self.core_int_b = None
         self.residual = None
+        self.residual_key = None
         self.nbytes = (members.nbytes + theta_i.nbytes + theta_j.nbytes
                        + int_a.nbytes + int_b.nbytes + int_w.nbytes)
 
@@ -214,6 +220,19 @@ class PairCutEngine:
         self._version = 0
         self._server_dirty = np.zeros(cm.net.m, dtype=np.int64)
         self._pair_stamp: dict = {}
+        # Cross-slot rebind epochs (see :meth:`rebind`): per-server (whole
+        # unary column / tau row changed), per-tau-entry (internal arc
+        # capacities — theta patches never repair int_w, so any touched
+        # (i, j) forces a full rebuild of that pair), and per-vertex
+        # STRUCTURAL (edge insert/delete/reweight — arcs can't be patched
+        # either).  The scalar maxes gate the _refresh_entry checks so
+        # engines that never rebind pay nothing on the hot path.
+        self._server_epoch = np.zeros(cm.net.m, dtype=np.int64)
+        self._struct_epoch = np.zeros(g.n, dtype=np.int64)
+        self._tau_pair_epoch: Optional[np.ndarray] = None
+        self._server_max = 0
+        self._tau_max = 0
+        self._struct_max = 0
         # Cross-round assembly cache: per-vertex epochs say when a vertex's
         # assembly-relevant context (its own slot, or a neighbor's) last
         # changed; per-pair entries stamped against them decide verbatim
@@ -442,11 +461,51 @@ class PairCutEngine:
         k = len(members)
         if k == 0:
             return False
+        # Cross-slot rebind invalidations (scalar-gated: all the maxes
+        # stay 0 on engines that never rebind).  A changed tau[i,j] /
+        # tau[j,i] rescales every internal arc — beyond what any patch
+        # can repair, so rebuild from scratch.
+        if (self._tau_max > e.stamp
+                and (self._tau_pair_epoch[i, j] > e.stamp
+                     or self._tau_pair_epoch[j, i] > e.stamp)):
+            return False
+        # A server epoch on i or j (dense unary column repricing, or a
+        # dense tau row whose (i,j)/(j,i) entries happen to be intact —
+        # the gate above already caught the rest) moves whole theta
+        # columns without bumping per-vertex epochs.
+        col_stale = (self._server_max > e.stamp
+                     and (self._server_epoch[i] > e.stamp
+                          or self._server_epoch[j] > e.stamp))
+        # Structural edge deltas bump BOTH endpoints' vertex epochs (see
+        # rebind), so the membership patch re-derives every arc touching
+        # them — only the theta-only fast path (which never rewrites arc
+        # lists) must be disqualified for entries that saw struct churn.
+        arc_stale = (self._struct_max > e.stamp
+                     and bool((self._struct_epoch[members] > e.stamp).any()))
         tmask = self._vertex_epoch[members] > e.stamp
         same = (k == len(e.members)
                 and bool(np.array_equal(members, e.members)))
-        if same and not tmask.any():
-            self.cache_hits += 1
+        if same and not tmask.any() and not col_stale:
+            self.cache_hits += 1            # struct-touched members always
+            e.stamp = self._version         # carry a vertex-epoch bump, so
+            return True                     # a pure hit implies !arc_stale
+        if col_stale:
+            # Theta COLUMNS changed (fault-loop degrade/revive repricing):
+            # the internal arcs only read tau[i,j]*w, which the tau gate
+            # above proved intact, so re-gathering EVERY member's theta
+            # rows restores the entry exactly — and, unlike a rebuild,
+            # keeps the arc lists, core classification and warm residual
+            # (the warm solve re-quantizes against current capacities, so
+            # a retained flow is repaired, not trusted).
+            if not same or arc_stale:
+                return False
+            mask = self._mask
+            mask[members] = True
+            th_i, th_j, _, _, _, _ = self._gather_theta_rows(members, i, j)
+            e.theta_i[:] = th_i
+            e.theta_j[:] = th_j
+            mask[members] = False
+            self.cache_patched += 1
             e.stamp = self._version
             return True
         tm = members[tmask]
@@ -454,7 +513,7 @@ class PairCutEngine:
             return False                    # patch would not beat re-gather
         mask, loc = self._mask, self._loc
         mask[members] = True
-        if same:
+        if same and not arc_stale:
             # Membership intact => internal arcs and the singleton/core
             # split are unchanged (an internal arc only flips to boundary
             # when an endpoint leaves the member set); only the touched
@@ -525,6 +584,7 @@ class PairCutEngine:
         e.has_int = None                   # core classification changed
         e.core = e.core_int_a = e.core_int_b = None
         e.residual = None                  # warm flow keyed to old structure
+        e.residual_key = None
         e.nbytes = (members.nbytes + theta_i.nbytes + theta_j.nbytes
                     + e.int_a.nbytes + e.int_b.nbytes + e.int_w.nbytes)
         self._cache_used += e.nbytes
@@ -640,6 +700,7 @@ class PairCutEngine:
         if e.residual is not None:
             nb = e.residual.nbytes
             e.residual = None
+            e.residual_key = None
             e.nbytes -= nb
             if self._cache.get(key) is e:
                 self._cache_used -= nb
@@ -651,21 +712,46 @@ class PairCutEngine:
 
         Composition with the persistency peel: the shared adaptive gate
         (:func:`peel_gate_fraction`) decides peel-vs-direct exactly as the
-        cold block solver would.  When the gate says PEEL (early, churny
-        problems), the cold peeled path runs and any retained warm state is
-        dropped — a peeled solve never materializes full flow arrays, and
-        the regime's membership churn would invalidate them next commit
-        anyway.  When the gate says direct (the converged regime, ~90%
-        survivors), the entry's ResidualCut is primed / repaired.  Either
-        way the mask is bit-identical to the cold path's."""
+        cold block solver would.  When the gate says PEEL, the solve runs
+        through :func:`repro.core.maxflow.peel_warm_solve`: the peel
+        reduces the problem exactly as the cold path would, and the
+        SURVIVOR flow is primed/repaired from a residual keyed by the
+        forced set — the converged-but-peel-gated regime (stable forced
+        sets, tiny theta perturbations) warms instead of re-pushing.  When
+        the gate says direct (~90% survivors), the entry's full-core
+        ResidualCut is primed / repaired as before.  A regime flip drops
+        the other regime's state (the structures are incompatible).
+        Either way the mask is bit-identical to the cold path's."""
         th_i = e.theta_i[e.core]
         th_j = e.theta_j[e.core]
         frac = peel_gate_fraction(kc, e.core_int_a, e.int_w, th_i, th_j)
         if frac >= PEEL_GATE_FRAC:
-            self._drop_residual(e, key)
-            self.warm_cold += 1
-            return self._solve_flow(kc, e.core_int_a, e.core_int_b,
-                                    e.int_w, th_i, th_j, peel_frac=frac)
+            if e.residual is not None and e.residual_key is None:
+                self._drop_residual(e, key)    # full-core state: wrong shape
+            old_rc = e.residual
+            side, rc, rkey, mode = peel_warm_solve(
+                kc, e.core_int_a, e.core_int_b, e.int_w, th_i, th_j,
+                residual=e.residual, residual_key=e.residual_key,
+                allow_prime=allow_prime or e.residual is not None)
+            if mode == "hit":
+                self.warm_hits += 1
+            elif mode == "warm":
+                self.warm_repairs += 1
+            else:
+                self.warm_cold += 1
+            if rc is not old_rc:
+                if old_rc is not None:
+                    self._drop_residual(e, key)
+                if rc is not None:
+                    e.residual = rc
+                    e.residual_key = rkey
+                    e.nbytes += rc.nbytes
+                    if self._cache.get(key) is e:
+                        self._cache_used += rc.nbytes
+                        self._evict_over_budget()
+            return side
+        if e.residual is not None and e.residual_key is not None:
+            self._drop_residual(e, key)        # peel-keyed state: wrong shape
         rc = e.residual
         if rc is not None and rc.k == kc:
             side, mode = rc.resolve(e.core_int_a, e.core_int_b, e.int_w,
@@ -1135,3 +1221,161 @@ class PairCutEngine:
         if not changed.any():
             return 0.0
         return self.state.commit(members[changed], new_servers[changed])
+
+    # ------------------------------------------------------ cross-slot rebind
+    def rebind(self, cm: CostModel, assign: np.ndarray,
+               active: Optional[np.ndarray] = None) -> None:
+        """Adopt the next slot's (CostModel, assignment, active mask)
+        WITHOUT discarding cross-slot state: the AssemblyCache, warm-start
+        residuals, pair-touch frequencies and arena scratch all survive.
+
+        The model diff (:meth:`CostModel.rebind`) is translated into the
+        same epoch machinery commits use: changed unary rows, neighbors of
+        vertices on changed tau columns, vertices whose assignment or
+        active status differs from the previous slot (plus their
+        neighbors) bump ``_vertex_epoch`` — the theta patch repairs them;
+        structural edge deltas bump both the vertex AND struct epochs —
+        the membership patch re-derives the touched rows' arcs (the
+        struct epoch only disqualifies the arc-blind theta fast path);
+        densely repriced servers (degrade/revive) bump ``_server_epoch``
+        — affected pairs re-gather whole theta columns but KEEP their
+        arcs, core split and warm residual (tau, and therefore every
+        internal arc, is untouched by compute repricing); only changed
+        tau entries force rebuilds.  Untouched entries refresh verbatim.  Every pair starts
+        dirty (``_server_dirty`` = new version), so the first sweep after
+        adoption probes exactly the schedule a fresh engine would — the
+        savings are pure assembly/flow reuse, and trajectories are
+        bit-identical to a per-slot rebuild.
+
+        Raises ValueError when the fleet size changed or the graph shrank
+        (no incremental mapping exists — build a fresh engine)."""
+        old_cm = self.cm
+        old_assign = self.state.assign            # pre-adopt layout (owned)
+        old_active = self._active
+        diff = cm.rebind(old_cm)                  # validates m / graph growth
+        g = cm.graph
+        n_old = old_cm.graph.n
+        assign = np.asarray(assign, dtype=np.int64)
+        self.cm = cm
+        self._tau = cm.net.tau
+        self._indptr = g.indptr
+        self._indices = g.indices
+        self._eids = g.edge_ids
+        self.state = cm.layout_state(assign)
+        self.state.on_commit = self._mark_dirty
+        self._w = self.state._w
+        self._unit_w = g.edge_weights is None
+        self._active = None if active is None else np.asarray(active, bool)
+        if g.n > n_old:
+            grow = g.n - n_old
+            self._mask = np.zeros(g.n, dtype=bool)
+            self._loc = np.full(g.n, -1, dtype=np.int64)
+            self._moved_mask = np.concatenate(
+                [self._moved_mask, np.zeros(grow, dtype=bool)])
+            self._vertex_epoch = np.concatenate(
+                [self._vertex_epoch, np.zeros(grow, dtype=np.int64)])
+            self._struct_epoch = np.concatenate(
+                [self._struct_epoch, np.zeros(grow, dtype=np.int64)])
+        # The touched-vertex ledger restarts per adoption: callers read the
+        # CURRENT run's movers, exactly like a fresh engine's.
+        self._moved_mask[:] = False
+        self._universe = (int(self._active.sum())
+                          if self._active is not None else g.n)
+        self._version += 1
+        v = self._version
+        self._server_dirty[:] = v
+        # --- per-vertex epochs: theta-patchable changes -------------------
+        if len(diff.unary_rows):
+            self._vertex_epoch[diff.unary_rows] = v
+        if len(diff.tau_cols):
+            # tau[i, c] changed sparsely: any member with a boundary
+            # neighbor homed on c folds the stale price into its theta.
+            on_cols = np.flatnonzero(np.isin(assign, diff.tau_cols))
+            flat, _ = csr_multirange(self._indptr, on_cols)
+            if len(flat):
+                self._vertex_epoch[self._indices[flat]] = v
+        # Vertices re-assigned between the slots (orphan scatter, replica
+        # re-homing, external churn) and active-mask flips change pair
+        # memberships without a commit — mirror _mark_dirty: the vertex
+        # AND its neighbors are stale.
+        movers = np.flatnonzero(assign[:n_old] != old_assign)
+        oa = (old_active if old_active is not None
+              else np.ones(n_old, dtype=bool))
+        na = (self._active[:n_old] if self._active is not None
+              else np.ones(n_old, dtype=bool))
+        xor = np.flatnonzero(oa != na)
+        touch = np.unique(np.concatenate([movers, xor]))
+        if len(touch):
+            self._vertex_epoch[touch] = v
+            flat, _ = csr_multirange(self._indptr, touch)
+            if len(flat):
+                self._vertex_epoch[self._indices[flat]] = v
+        # --- rebuild-forcing epochs ---------------------------------------
+        if len(diff.servers):
+            self._server_epoch[diff.servers] = v
+            self._server_max = v
+        if diff.tau_pairs is not None:
+            if self._tau_pair_epoch is None:
+                self._tau_pair_epoch = np.zeros(
+                    (cm.net.m, cm.net.m), dtype=np.int64)
+            self._tau_pair_epoch[diff.tau_pairs] = v
+            self._tau_max = v
+        if len(diff.struct_vertices):
+            # Both endpoints of every changed/new edge are in the struct
+            # set, so re-gathering the struct vertices' rows (the
+            # membership patch's touched path) reproduces a fresh
+            # assembly's arcs exactly; the struct epoch only disqualifies
+            # the theta-only fast path, which cannot rewrite arc lists.
+            self._vertex_epoch[diff.struct_vertices] = v
+            self._struct_epoch[diff.struct_vertices] = v
+            self._struct_max = v
+
+
+class LayoutSession:
+    """Persistent cross-slot layout engine (the adaptive loop's warm path).
+
+    Owns one :class:`PairCutEngine` across GLAD-S/E/A calls and fault
+    relayouts: ``adopt`` rebinds the live engine to the next slot's
+    (CostModel, assignment, active mask) via :meth:`PairCutEngine.rebind`,
+    keeping every untouched assembly and warm-start residual alive —
+    per-slot relayouts stop paying the from-scratch engine build the
+    ISSUE/ROADMAP call out at ``glad_s``'s rebuild site.  Trajectories are
+    bit-identical to per-slot rebuilds (pinned by golden + fuzz tests);
+    only the schedule of cache/warm reuse changes.
+
+    Engine knobs are fixed at session construction (a session IS one
+    engine configuration); ``cache='auto'`` resolves ON — persistence is
+    the point, and the first adoption often carries no active mask.  A
+    fleet resize or graph shrink has no incremental mapping: ``adopt``
+    transparently falls back to a fresh engine (state reset, same
+    semantics as the first adoption).
+    """
+
+    def __init__(self, backend: str = "auto", workers: int = 0,
+                 worker_mode: str = "thread", cache: "bool | str" = "auto",
+                 cache_bytes: int = 256 << 20,
+                 chunk_nodes: "int | str" = "auto",
+                 warm: "bool | str" = "auto"):
+        self._opts = dict(
+            backend=backend, workers=workers, worker_mode=worker_mode,
+            cache=(True if cache == "auto" else cache),
+            cache_bytes=cache_bytes, chunk_nodes=chunk_nodes, warm=warm)
+        self.engine: Optional[PairCutEngine] = None
+        self.adoptions = 0           # total adopt() calls
+        self.rebinds = 0             # adoptions served by an engine rebind
+
+    def adopt(self, cm: CostModel, assign: np.ndarray,
+              active: Optional[np.ndarray] = None) -> PairCutEngine:
+        """Bind the session's engine to the next slot; returns the engine
+        (rebound in place when possible, freshly built otherwise)."""
+        self.adoptions += 1
+        if self.engine is not None:
+            try:
+                self.engine.rebind(cm, assign, active=active)
+            except ValueError:
+                self.engine = None   # fleet resized / graph shrank
+            else:
+                self.rebinds += 1
+                return self.engine
+        self.engine = PairCutEngine(cm, assign, active=active, **self._opts)
+        return self.engine

@@ -18,6 +18,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.cost import CostModel, GNNWorkload
+from repro.core.engine import LayoutSession
 from repro.core.glad_e import glad_e, seed_new_vertices
 from repro.core.glad_s import glad_s
 from repro.graphs.datagraph import DataGraph
@@ -79,11 +80,21 @@ class GladA:
         R: Optional[int] = None,
         seed: int = 0,
         backend: str = "auto",
+        session: "bool | LayoutSession" = True,
     ):
         self.net, self.gnn, self.theta = net, gnn, theta
         self.R, self.seed, self.backend = R, seed, backend
+        # Cross-slot persistent engine: assembly cache + warm residuals
+        # earned in slot t survive into slot t+1 (trajectories stay
+        # bit-identical with session=False; only wall time changes).
+        if session is True:
+            session = LayoutSession(backend=backend)
+        elif session is False:
+            session = None
+        self.session = session
         cm0 = CostModel(net, graph0, gnn)
-        res = glad_s(cm0, R=R, seed=seed, backend=backend)
+        res = glad_s(cm0, R=R, seed=seed, backend=backend,
+                     session=self.session)
         self.graph = graph0
         self.assign = res.assign
         self.last_cost = res.cost
@@ -105,6 +116,7 @@ class GladA:
             res = glad_e(
                 cm_new, self.graph, self.assign,
                 R=self.R, seed=self.seed + self.t, backend=self.backend,
+                session=self.session,
             )
         else:
             algo = "glad-s"
@@ -119,6 +131,7 @@ class GladA:
             res = glad_s(
                 cm_new, R=self.R, init=assign,
                 seed=self.seed + self.t, backend=self.backend,
+                session=self.session,
             )
             self.acc_drift = 0.0
 

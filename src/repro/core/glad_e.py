@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.cost import CostModel
 from repro.core.evolution import changed_vertices
+from repro.core.engine import LayoutSession
 from repro.core.glad_s import GladResult, glad_s
 from repro.graphs.datagraph import DataGraph
 
@@ -51,6 +52,7 @@ def glad_e(
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
     replicate: "bool | dict" = False,
+    session: Optional[LayoutSession] = None,
 ) -> GladResult:
     """Args:
       cm_new: cost model bound to the *evolved* graph G(t).
@@ -74,6 +76,12 @@ def glad_e(
         re-greedied after each accepted round of the refinement and
         attached to the result (``result.replication``).  A post-pass:
         the evolved layout itself is bit-identical with the knob off.
+      session: optional :class:`~repro.core.engine.LayoutSession` carrying
+        engine state (assembly cache + warm residuals) across slots.  Only
+        the masked incremental refinement adopts it; the no-change early
+        exit and the multilevel escalation (which builds its own engines
+        per level) leave the session untouched.  Trajectories are
+        bit-identical with or without a session.
 
     The result's ``moved`` is the relayout's move delta RELATIVE TO the
     carried-over old layout — net movers plus every newly-inserted vertex —
@@ -126,7 +134,7 @@ def glad_e(
     res = glad_s(
         cm_new, R=R, init=assign, active=active, seed=seed, backend=backend,
         sweep=sweep, workers=workers, cache=cache, chunk_nodes=chunk_nodes,
-        warm=warm, replicate=replicate,
+        warm=warm, replicate=replicate, session=session,
     )
     # glad_s diffs against the seeded init; fold the insertions back in.
     res.moved = np.union1d(res.moved, new_ids) if len(new_ids) else res.moved

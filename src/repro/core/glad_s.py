@@ -46,7 +46,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core.cost import CostModel
-from repro.core.engine import PairCutEngine, round_robin_rounds
+from repro.core.engine import LayoutSession, PairCutEngine, round_robin_rounds
 from repro.core.maxflow import min_st_cut
 
 
@@ -202,6 +202,7 @@ def glad_s(
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
     replicate: "bool | dict" = False,
+    session: Optional[LayoutSession] = None,
 ) -> GladResult:
     """Paper Algorithm 1.
 
@@ -264,7 +265,23 @@ def glad_s(
         current cut: it never alters which moves are proposed or accepted,
         so layouts are bit-identical with the knob on or off (default
         False skips the extra per-accept work entirely).
+      session: optional :class:`repro.core.engine.LayoutSession` — a
+        persistent cross-slot engine.  The call ADOPTS the session's
+        engine (rebinding its model/assignment/mask in place, keeping
+        cached assemblies + warm residuals from previous slots alive)
+        instead of building a fresh one; per-call engine knobs
+        (cache/warm/chunk_nodes/workers) are fixed at session construction
+        and ignored here.  Trajectories are bit-identical to the
+        sessionless call.  Incompatible with ``multilevel`` and
+        ``engine='reference'``.
     """
+    if session is not None:
+        if multilevel:                    # incl. 'auto': routing must not
+            raise ValueError(             # silently drop session state
+                "session= is incompatible with multilevel (the V-cycle "
+                "builds per-level engines); pass multilevel=False")
+        if engine == "reference":
+            raise ValueError("session= requires engine='incremental'")
     if multilevel == "auto":
         from repro.core.multilevel import MULTILEVEL_AUTO_MIN_N
         multilevel = active is None and cm.graph.n >= MULTILEVEL_AUTO_MIN_N
@@ -303,10 +320,13 @@ def glad_s(
         raise ValueError(f"unknown engine {engine!r}")
 
     init_snapshot = assign.copy()
-    eng = PairCutEngine(cm, assign, active=active, backend=backend,
-                        workers=workers, worker_mode=worker_mode,
-                        cache=cache, cache_bytes=cache_bytes,
-                        chunk_nodes=chunk_nodes, warm=warm)
+    if session is not None:
+        eng = session.adopt(cm, assign, active=active)
+    else:
+        eng = PairCutEngine(cm, assign, active=active, backend=backend,
+                            workers=workers, worker_mode=worker_mode,
+                            cache=cache, cache_bytes=cache_bytes,
+                            chunk_nodes=chunk_nodes, warm=warm)
     history = [eng.state.total]
     repl_history: Optional[List[float]] = None
     if replicate:

@@ -553,25 +553,32 @@ class ResidualCut:
         return caps.astype(np.int32).astype(np.int64)
 
     @classmethod
-    def prime(cls, k, int_a, int_b, int_w, theta_i, theta_j):
+    def prime(cls, k, int_a, int_b, int_w, theta_i, theta_j,
+              prescaled: bool = False):
         """Cold solve that RETAINS its flow: assemble the symmetric CSR,
         quantize, push the max flow once, and return ``(side, state)``.
         ``side`` is bit-identical to the cold :func:`min_st_cut_csr` mask.
         Returns ``(side, None)`` if scipy's flow matrix stops sharing the
-        input sparsity (internals drift) — the caller then stays cold."""
+        input sparsity (internals drift) — the caller then stays cold.
+        ``prescaled=True``: the inputs are already exact integers (the
+        persistency-peel path quantizes before reducing) — use verbatim,
+        exactly like :func:`min_st_cut_csr`'s prescaled path."""
         n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
             k, int_a, int_b, int_w, theta_i, theta_j, presorted=True)
-        rc = cls(k, n, s, t, indptr.copy(), cols.copy(),
-                 cls._quantize(caps))
+        cap = (caps.astype(np.int32).astype(np.int64) if prescaled
+               else cls._quantize(caps))
+        rc = cls(k, n, s, t, indptr.copy(), cols.copy(), cap)
         side = rc._augment_and_mask()
         if side is None:                       # pragma: no cover - drift
             n2, s2, t2, ip, co, ca = assemble_symmetric_flow_csr(
                 k, int_a, int_b, int_w, theta_i, theta_j, presorted=True)
-            _, full = min_st_cut_csr(n2, s2, t2, ip, co, ca)
+            _, full = min_st_cut_csr(n2, s2, t2, ip, co, ca,
+                                     prescaled=prescaled)
             return full[:k], None
         return side, rc
 
-    def resolve(self, int_a, int_b, int_w, theta_i, theta_j):
+    def resolve(self, int_a, int_b, int_w, theta_i, theta_j,
+                prescaled: bool = False):
         """Warm re-solve with perturbed capacities on the SAME structure.
 
         Returns ``(side, mode)`` where mode is ``'hit'`` (integer caps
@@ -591,7 +598,8 @@ class ResidualCut:
                 or not np.array_equal(indptr, self.indptr)):
             raise ValueError("ResidualCut.resolve: structure changed — "
                              "re-prime instead")
-        new_cap = self._quantize(caps)
+        new_cap = (caps.astype(np.int32).astype(np.int64) if prescaled
+                   else self._quantize(caps))
         touched = int(np.count_nonzero(new_cap != self.cap))
         self.cap = new_cap
         if touched == 0:
@@ -731,6 +739,99 @@ class ResidualCut:
             path.append(carrier)
             x = nxt
         return path, nodes
+
+
+def peel_warm_solve(
+    k: int,
+    int_a: np.ndarray,
+    int_b: np.ndarray,
+    int_w: np.ndarray,
+    theta_i: np.ndarray,
+    theta_j: np.ndarray,
+    residual: "ResidualCut | None" = None,
+    residual_key: "np.ndarray | None" = None,
+    allow_prime: bool = True,
+):
+    """Peel-composed warm start: quantize + persistency-peel one auxiliary
+    problem exactly like the cold single-block path of
+    :func:`min_st_cut_csr_blocks`, then warm-start the SURVIVOR flow solve
+    from a :class:`ResidualCut` keyed by the forced set.
+
+    The peel's forced set is a pure function of the quantized capacities,
+    so when two successive solves of the same pair force the same nodes
+    (the converged-but-peel-gated regime: theta perturbations small enough
+    not to flip any persistency decision), the reduced problems share one
+    structure and the retained residual repairs instead of re-pushing.
+    ``residual_key`` is the alive mask the retained state was primed under;
+    a mismatch re-primes (or solves cold when ``allow_prime`` is False).
+
+    Returns ``(side, residual, residual_key, mode)`` with mode in
+    ``'hit' | 'warm' | 'cold'``; ``side`` is bit-identical to the cold peel
+    path for every input (minimal source side is unique per integer
+    problem, and the peel composition is exact).
+    """
+    int_w = np.asarray(int_w, dtype=np.float64)
+    cmax = max(float(theta_i.max()), float(theta_j.max()))
+    if len(int_w):
+        cmax = max(cmax, float(int_w.max()))
+    scale = _SCALE / max(cmax, 1e-30)
+    ti = np.maximum(np.rint(theta_i * scale), 0).astype(np.int64)
+    tj = np.maximum(np.rint(theta_j * scale), 0).astype(np.int64)
+    iw = np.maximum(np.rint(int_w * scale), 0).astype(np.int64)
+    alive, src = peel_forced(k, int_a, int_b, iw, ti, tj)
+    na = int(alive.sum())
+    if na == 0:                                # peel settled every node
+        return src, residual, residual_key, "cold"
+
+    peak = max(int(ti[alive].max()), int(tj[alive].max()))
+    if peak >= np.iinfo(np.int32).max:         # pragma: no cover
+        # Absorbed t-links outgrew int32: solve the full quantized problem
+        # (caps all <= _SCALE by construction); retained state unusable
+        # this round but may match again once the spike passes.
+        fti = np.maximum(np.rint(theta_i * scale), 0)
+        ftj = np.maximum(np.rint(theta_j * scale), 0)
+        fiw = np.maximum(np.rint(int_w * scale), 0)
+        n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+            k, int_a, int_b, fiw, fti, ftj, presorted=True)
+        _, side = min_st_cut_csr(n, s, t, indptr, cols, caps,
+                                 prescaled=True)
+        return side[:k], residual, residual_key, "cold"
+
+    # Compact the survivors (order-preserving — canonical arc order holds).
+    new_id = np.cumsum(alive, dtype=np.int64) - 1
+    keep = alive[int_a] & alive[int_b]
+    ria = new_id[int_a[keep]]
+    rib = new_id[int_b[keep]]
+    riw = iw[keep].astype(np.float64)
+    rti = ti[alive].astype(np.float64)
+    rtj = tj[alive].astype(np.float64)
+    if (residual is not None and residual_key is not None
+            and np.array_equal(residual_key, alive)):
+        try:
+            rside, mode = residual.resolve(ria, rib, riw, rti, rtj,
+                                           prescaled=True)
+        except ValueError:
+            # Same forced set but the survivor structure drifted (internal
+            # arcs changed under an unchanged peel) — fall through to
+            # re-prime / cold below.
+            residual, residual_key = None, None
+        else:
+            side = src.copy()
+            side[alive] = rside
+            return side, residual, residual_key, mode
+    if not allow_prime:
+        n, s, t, indptr, cols, caps = assemble_symmetric_flow_csr(
+            na, ria, rib, riw, rti, rtj, presorted=True)
+        _, full_side = min_st_cut_csr(n, s, t, indptr, cols, caps,
+                                      prescaled=True)
+        side = src.copy()
+        side[alive] = full_side[:na]
+        return side, None, None, "cold"
+    rside, rc = ResidualCut.prime(na, ria, rib, riw, rti, rtj,
+                                  prescaled=True)
+    side = src.copy()
+    side[alive] = rside
+    return side, rc, (alive.copy() if rc is not None else None), "cold"
 
 
 def _chunk_block_spans(block_ptr: np.ndarray, chunk_nodes: int):

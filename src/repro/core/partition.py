@@ -291,18 +291,21 @@ def rebalance(
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
     replicate: "bool | dict" = False,
+    session=None,
 ) -> DevicePartition:
     """Straggler mitigation: degrade the slow server's compute coefficients
     and run an incremental re-layout warm-started from the current one.
     ``multilevel`` escalates to the V-cycle (warm init restricted up the
     hierarchy by majority vote) — for fleets serving very large graphs.
     ``replicate`` re-greedies the move-vs-replicate overlay against the
-    degraded fleet and attaches it to the new partition."""
+    degraded fleet and attaches it to the new partition.  ``session``
+    (a :class:`repro.core.engine.LayoutSession`) reuses engine state from
+    previous relayouts; incompatible with ``multilevel``."""
     net2 = net.degrade(straggler, slow_factor)
     cm = CostModel(net2, graph, gnn)
     res = glad_s(cm, init=part.assign, R=net2.m, seed=seed, sweep="batched",
                  workers=workers, cache=cache, chunk_nodes=chunk_nodes,
                  warm=warm, multilevel=multilevel, coarsen_to=coarsen_to,
-                 levels=levels, replicate=replicate)
+                 levels=levels, replicate=replicate, session=session)
     return partition_from_assign(graph, res.assign, part.num_parts,
                                  res.factors, replication=res.replication)

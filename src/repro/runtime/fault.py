@@ -22,6 +22,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.cost import CostModel, GNNWorkload
+from repro.core.engine import LayoutSession
 from repro.core.glad_s import glad_s
 from repro.core.partition import DevicePartition, partition_from_assign
 from repro.graphs.datagraph import DataGraph
@@ -33,6 +34,10 @@ class DeviceHealth:
     last_heartbeat: float = 0.0
     step_time_ewma: float = 0.0
     alive: bool = True
+    # False until the device is first observed (heartbeat/revive/sweep).
+    # Guards the timeout compare: the 0.0 default is not a real heartbeat
+    # time, and wall-clock sweeps must not treat it as one.
+    seen: bool = False
 
 
 class FailureDetector:
@@ -56,6 +61,7 @@ class FailureDetector:
         if not d.alive:
             return
         d.last_heartbeat = now
+        d.seen = True
         if step_time_s is not None:
             d.step_time_ewma = (step_time_s if d.step_time_ewma == 0.0 else
                                 (1 - self.ewma) * d.step_time_ewma
@@ -67,30 +73,53 @@ class FailureDetector:
         d.alive = True
         d.last_heartbeat = now
         d.step_time_ewma = 0.0
+        d.seen = True
 
     def sweep(self, now: float) -> List[int]:
-        """Mark timed-out devices dead; return newly-dead ids."""
+        """Mark timed-out devices dead; return newly-dead ids.
+
+        A device that has never been observed is STAMPED with the sweep
+        time instead of judged by it: the fresh-detector default
+        ``last_heartbeat=0.0`` is not a real heartbeat, and comparing a
+        wall-clock ``now`` against it would declare the entire fleet dead
+        on the first sweep.  The stamp starts that device's timeout clock
+        at first observation (registration time, effectively), so a device
+        that stays silent still dies exactly one timeout period later."""
         dead = []
         for i, d in enumerate(self.devices):
-            if d.alive and now - d.last_heartbeat > self.timeout_s:
+            if not d.alive:
+                continue
+            if not d.seen:
+                d.last_heartbeat = now
+                d.seen = True
+                continue
+            if now - d.last_heartbeat > self.timeout_s:
                 d.alive = False
                 dead.append(i)
         return dead
 
     def stragglers(self, factor: float = 2.0) -> List[int]:
-        """Devices whose EWMA step time exceeds factor x fleet median."""
-        ts = [d.step_time_ewma for d in self.devices
-              if d.alive and d.step_time_ewma > 0]
-        if not ts:
+        """Devices whose EWMA step time exceeds factor x the median step
+        time of the OTHER live devices (leave-one-out).  Including a
+        device's own sample would let an extreme straggler drag the fleet
+        median up past its own threshold: with two devices at 1s and 10s,
+        the self-inclusive median is 5.5s and the 10s device passes a
+        factor-2 check — mathematically undetectable."""
+        live = [(i, d.step_time_ewma) for i, d in enumerate(self.devices)
+                if d.alive and d.step_time_ewma > 0]
+        if len(live) < 2:
             return []
-        med = float(np.median(ts))
-        return [i for i, d in enumerate(self.devices)
-                if d.alive and d.step_time_ewma > factor * med]
+        out = []
+        for k, (i, t) in enumerate(live):
+            others = [t2 for j, (_, t2) in enumerate(live) if j != k]
+            if t > factor * float(np.median(others)):
+                out.append(i)
+        return out
 
 
 @dataclasses.dataclass
 class RelayoutEvent:
-    kind: str                   # 'failure' | 'straggler'
+    kind: str                   # 'failure' | 'straggler' | 'revive'
     devices: List[int]
     old_cost: float
     new_cost: float
@@ -118,11 +147,19 @@ class ElasticCoordinator:
                  multilevel: "bool | str" = False,
                  coarsen_to: int = 1024,
                  levels: Optional[int] = None,
-                 replicate: "bool | dict" = False):
+                 replicate: "bool | dict" = False,
+                 session: bool = True):
         self.net = net
         self.graph = graph
         self.gnn = gnn
         self.part = part
+        # EdgeNetwork mutations have no inverse (without_server floods the
+        # dead server's rows with OFFLINE_COST; the originals are gone), so
+        # on_revive rebuilds the current net by replaying the surviving ops
+        # — ("dead", d) / ("degrade", s, factor), in commit order — over
+        # the pristine topology.
+        self._pristine_net = net
+        self._net_ops: List[tuple] = []
         self.events: List[RelayoutEvent] = []
         # Move delta of the most recent relayout (also on each event) — the
         # input to the serving layer's ShardPlan patch.
@@ -142,10 +179,21 @@ class ElasticCoordinator:
         # coordinator produces; its replicas double as the degraded-mode
         # fallback on failure — an orphan with a live replica re-homes to
         # the replica's host instead of a random survivor.
+        # One persistent LayoutSession for the coordinator's lifetime:
+        # consecutive relayouts of the same fleet rebind the engine
+        # (diff-driven epoch bumps for the degraded/dead/revived servers)
+        # instead of rebuilding it from scratch, keeping the assembly
+        # cache and warm residuals alive across events.  The multilevel
+        # V-cycle builds per-level engines, so it opts out; session=False
+        # forces the per-event rebuild (the benchmark's A/B control arm).
+        self._session = (None if multilevel or not session else
+                         LayoutSession(workers=workers, cache=cache,
+                                       chunk_nodes=chunk_nodes, warm=warm))
         self._glad_opts = dict(workers=workers, cache=cache,
                                chunk_nodes=chunk_nodes, warm=warm,
                                multilevel=multilevel, coarsen_to=coarsen_to,
-                               levels=levels, replicate=replicate)
+                               levels=levels, replicate=replicate,
+                               session=self._session)
 
     def on_failure(self, dead: List[int], seed: int = 0) -> DevicePartition:
         """Node loss: disconnect dead servers, re-layout incrementally
@@ -190,6 +238,7 @@ class ElasticCoordinator:
         self.events.append(RelayoutEvent(
             "failure", dead, old_cost, res.cost, len(moved),
             time.perf_counter() - t0, moved=moved))
+        self._net_ops += [("dead", d) for d in dead]
         self.net = net
         self.part = new_part
         self.last_moved = moved
@@ -212,6 +261,42 @@ class ElasticCoordinator:
         moved = np.flatnonzero(res.assign != self.part.assign)
         self.events.append(RelayoutEvent(
             "straggler", slow, old_cost, res.cost, len(moved),
+            time.perf_counter() - t0, moved=moved))
+        self._net_ops += [("degrade", s, slow_factor) for s in slow]
+        self.net = net
+        self.part = new_part
+        self.last_moved = moved
+        return new_part
+
+    def on_revive(self, devices: List[int], seed: int = 0) -> DevicePartition:
+        """Re-admit repaired servers and re-layout onto the restored fleet.
+
+        The detector's :meth:`FailureDetector.revive` flips the device
+        live again, but without this hook the coordinator's net keeps
+        pricing it at OFFLINE_COST forever — ``without_server`` has no
+        inverse.  The current net is therefore rebuilt from the pristine
+        topology by replaying, in commit order, every failure/degrade op
+        whose device is NOT being revived: the revived server returns at
+        its pristine coefficients (mirroring the detector's fresh EWMA),
+        and the warm-started relayout pulls work back onto it wherever
+        that pays."""
+        t0 = time.perf_counter()
+        back = set(devices)
+        self._net_ops = [op for op in self._net_ops if op[1] not in back]
+        net = self._pristine_net
+        for op in self._net_ops:
+            net = (net.without_server(op[1]) if op[0] == "dead"
+                   else net.degrade(op[1], op[2]))
+        cm = CostModel(net, self.graph, self.gnn)
+        old_cost = cm.total(self.part.assign)
+        res = glad_s(cm, init=self.part.assign, R=net.m, seed=seed,
+                     sweep="batched", **self._glad_opts)
+        new_part = partition_from_assign(self.graph, res.assign,
+                                         self.part.num_parts, res.factors,
+                                         replication=res.replication)
+        moved = np.flatnonzero(res.assign != self.part.assign)
+        self.events.append(RelayoutEvent(
+            "revive", list(devices), old_cost, res.cost, len(moved),
             time.perf_counter() - t0, moved=moved))
         self.net = net
         self.part = new_part

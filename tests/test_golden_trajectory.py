@@ -19,6 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core.cost import CostModel, workload_for
+from repro.core.engine import LayoutSession
 from repro.core.evolution import apply_delta, changed_vertices, sample_delta
 from repro.core.glad_s import glad_s
 from repro.graphs.datagraph import synthetic_siot
@@ -105,6 +106,33 @@ def test_glad_e_masked_relayout_reproduces_golden_bit_for_bit(
     res = glad_s(cm1, R=p["m"], init=assign.copy(), active=active,
                  seed=p["glad_seed"], sweep="batched", cache=cache,
                  warm=warm)
+    assert res.iterations == fix["iterations"]
+    assert res.accepted == fix["accepted"]
+    got_hex = [np.float64(h).hex() for h in res.history]
+    assert got_hex == fix["history_hex"]
+    assert np.float64(res.cost).hex() == fix["final_cost_hex"]
+    np.testing.assert_array_equal(res.assign, np.array(fix["assign"]))
+
+
+@pytest.mark.parametrize("cache,warm", [(True, False), (True, True)])
+def test_session_rebound_engine_reproduces_golden_e(golden_e, cache, warm):
+    """A LayoutSession that already served a DIFFERENT slot (the full
+    pre-evolution solve) and is then rebound onto the golden scenario must
+    reproduce the committed masked relayout bit-for-bit — carried cache
+    entries and warm residuals may only change wall time, never the
+    trajectory."""
+    fix, cm1, assign, active, p = golden_e
+    g0 = synthetic_siot(n=p["n"], target_links=p["target_links"],
+                        seed=p["graph_seed"])
+    net = build_edge_network(g0, p["m"], seed=p["net_seed"])
+    cm0 = CostModel(net, g0, workload_for(p["gnn_model"], p["in_dim"]))
+    ses = LayoutSession(cache=cache, warm=warm)
+    glad_s(cm0, seed=p["base_seed"], sweep="batched", cache=cache,
+           warm=warm, session=ses)                 # warm the session
+    res = glad_s(cm1, R=p["m"], init=assign.copy(), active=active,
+                 seed=p["glad_seed"], sweep="batched", cache=cache,
+                 warm=warm, session=ses)
+    assert ses.rebinds == 1                        # adopted, not rebuilt
     assert res.iterations == fix["iterations"]
     assert res.accepted == fix["accepted"]
     got_hex = [np.float64(h).hex() for h in res.history]

@@ -1,4 +1,6 @@
 """Fault-tolerance runtime: detection, elastic GLAD re-layout, stragglers."""
+import time
+
 import numpy as np
 import pytest
 
@@ -54,6 +56,38 @@ def test_straggler_detection_ewma():
         for d in range(4):
             fd.heartbeat(d, now=float(s), step_time_s=5.0 if d == 2 else 1.0)
     assert fd.stragglers(factor=2.0) == [2]
+
+
+def test_failure_detector_cold_start_no_false_positives():
+    """Regression: a fresh detector held last_heartbeat=0.0 for every
+    device, so the FIRST sweep with a wall-clock `now` (epoch seconds,
+    vastly larger than any timeout) declared the entire fleet dead before
+    any device ever heartbeated.  Registration must start the timeout
+    clock at first observation, not at epoch zero."""
+    fd = FailureDetector(4, timeout_s=30.0)
+    now = time.time()                       # wall-clock scale >> timeout_s
+    assert fd.sweep(now) == []              # pre-fix: the whole fleet
+    # Heartbeating devices stay alive; a device that stays silent still
+    # dies exactly one timeout period after its registration stamp.
+    fd.heartbeat(0, now=now + 20.0)
+    fd.heartbeat(1, now=now + 20.0)
+    assert fd.sweep(now + 31.0) == [2, 3]
+    assert fd.devices[0].alive and fd.devices[1].alive
+
+
+def test_straggler_detected_at_two_devices():
+    """Regression: the fleet median included the candidate's own EWMA, so
+    at m=2 a 10x-slow device was mathematically undetectable at factor=2
+    (10 > 2 * median([1, 10]) = 11 is false).  Leave-one-out: each device
+    is compared against the median of the OTHER live devices."""
+    fd = FailureDetector(2)
+    fd.heartbeat(0, now=1.0, step_time_s=1.0)
+    fd.heartbeat(1, now=1.0, step_time_s=10.0)
+    assert fd.stragglers(factor=2.0) == [1]
+    # A single live sample has no peers to compare against: no flag.
+    fd2 = FailureDetector(2)
+    fd2.heartbeat(0, now=1.0, step_time_s=10.0)
+    assert fd2.stragglers(factor=2.0) == []
 
 
 def test_elastic_failure_relayout_no_orphans(cluster):
@@ -119,6 +153,63 @@ def test_repeated_failures_keep_costs_finite_and_stable(cluster):
     np.testing.assert_array_equal(coord.part.assign, coord2.part.assign)
     for a, b in zip(coord.events, coord2.events):
         assert a.new_cost == b.new_cost
+
+
+def test_kill_revive_relayout_round_trip(cluster):
+    """Regression: FailureDetector.revive re-admitted a repaired device but
+    the coordinator's net kept pricing it at OFFLINE_COST forever —
+    without_server has no inverse.  on_revive rebuilds the net from the
+    pristine topology (replaying surviving ops), so after kill -> revive
+    the net is bitwise healthy again and the relayout's cost returns to
+    the healthy regime."""
+    g, gnn, net, part = cluster
+    from repro.core.partition import partition_from_assign
+    assign = part.assign.copy()
+    assign[:40] = 5                      # load the doomed server
+    cm = CostModel(net, g, gnn)
+    part = partition_from_assign(g, assign, 6, cm.factors(assign))
+    coord = ElasticCoordinator(net, g, gnn, part)
+    coord.on_failure([5], seed=0)
+    killed_cost = coord.events[-1].new_cost
+    assert not (coord.part.assign == 5).any()
+    newp = coord.on_revive([5], seed=0)
+    ev = coord.events[-1]
+    assert ev.kind == "revive"
+    # The net is bitwise the pristine topology again — no OFFLINE pricing.
+    np.testing.assert_array_equal(coord.net.tau, net.tau)
+    np.testing.assert_array_equal(coord.net.mu, net.mu)
+    np.testing.assert_array_equal(coord.net.w, net.w)
+    # And the relayout under the restored fleet is no worse than the
+    # degraded regime it replaces (server 5 is usable again).
+    assert np.isfinite(ev.new_cost)
+    assert ev.new_cost <= killed_cost + 1e-9
+    np.testing.assert_array_equal(newp.assign, coord.part.assign)
+
+
+def test_on_revive_replays_surviving_ops(cluster):
+    """Reviving one device must preserve every OTHER outstanding
+    degradation: kill 5, degrade 4, revive 5 -> the net still prices 4 as
+    degraded but 5 as healthy; reviving 4 too restores the pristine net."""
+    g, gnn, net, part = cluster
+    coord = ElasticCoordinator(net, g, gnn, part)
+    coord.on_failure([5], seed=0)
+    coord.on_straggler([4], slow_factor=3.0, seed=0)
+    coord.on_revive([5], seed=0)
+    expect = net.degrade(4, 3.0)
+    np.testing.assert_array_equal(coord.net.tau, expect.tau)
+    np.testing.assert_array_equal(coord.net.alpha, expect.alpha)
+    np.testing.assert_array_equal(coord.net.mu, expect.mu)
+    coord.on_revive([4], seed=0)
+    np.testing.assert_array_equal(coord.net.alpha, net.alpha)
+    np.testing.assert_array_equal(coord.net.beta, net.beta)
+    np.testing.assert_array_equal(coord.net.gamma, net.gamma)
+    np.testing.assert_array_equal(coord.net.tau, net.tau)
+    # A degraded-then-dead device revives at pristine coefficients.
+    coord.on_straggler([2], slow_factor=4.0, seed=0)
+    coord.on_failure([2], seed=0)
+    coord.on_revive([2], seed=0)
+    np.testing.assert_array_equal(coord.net.alpha, net.alpha)
+    np.testing.assert_array_equal(coord.net.tau, net.tau)
 
 
 def test_on_failure_old_cost_uses_degraded_net(cluster):

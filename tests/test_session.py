@@ -1,0 +1,241 @@
+"""Cross-slot persistent LayoutSession: bit-identity vs per-slot rebuild.
+
+The session's ONLY contract is that it changes wall time, never bits: a
+sequence of relayouts driven through one adopted engine (CostModel.rebind
+diffing net / unary / graph deltas into per-vertex epoch bumps) must produce
+EXACTLY the trajectories, costs, assignments and moved sets of the same
+sequence run with a fresh engine per slot.  A deterministic slot script
+pins the interesting transitions (evolve, degrade, fail, revive); the fuzz
+harness interleaves them randomly.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.engine import LayoutSession
+from repro.core.evolution import apply_delta, evolution_trace
+from repro.core.glad_e import glad_e
+from repro.core.glad_s import glad_s
+from repro.graphs.datagraph import synthetic_yelp
+from repro.graphs.edgenet import build_edge_network
+
+REGIMES = [(False, False), (True, False), (True, True)]
+
+
+def _result_tuple(res):
+    return (res.cost, tuple(res.history), res.assign.copy(),
+            np.sort(res.moved).copy() if res.moved is not None else None)
+
+
+def _assert_same(a, b, slot):
+    assert a[0] == b[0], f"slot {slot}: cost diverged"
+    assert a[1] == b[1], f"slot {slot}: history diverged"
+    np.testing.assert_array_equal(a[2], b[2], err_msg=f"slot {slot}: assign")
+    if a[3] is not None or b[3] is not None:
+        np.testing.assert_array_equal(a[3], b[3],
+                                      err_msg=f"slot {slot}: moved")
+
+
+def _run_script(session, cache, warm):
+    """Fixed slot script over every transition kind the session must
+    survive: full solve, graph evolution (insertions included), server
+    degrade, server failure (orphan re-homing), evolution on the degraded
+    fleet, revive, and a final evolution on the restored fleet."""
+    g0 = synthetic_yelp(n=220, target_links=330, seed=3)
+    net0 = build_edge_network(g0, 5, seed=3)
+    gnn = workload_for("gcn", 48)
+    deltas = evolution_trace(g0, 3, pct_links=0.04, pct_vertices=0.02,
+                             seed=4)
+    opts = dict(sweep="batched", cache=cache, warm=warm, session=session)
+    out = []
+
+    graph, net = g0, net0
+    cm = CostModel(net, graph, gnn)
+    res = glad_s(cm, R=5, seed=0, **opts)                    # slot 0: full
+    out.append(_result_tuple(res))
+    assign = res.assign
+
+    g1 = apply_delta(graph, deltas[0])                       # slot 1: evolve
+    res = glad_e(CostModel(net, g1, gnn), graph, assign, seed=1, **opts)
+    out.append(_result_tuple(res))
+    graph, assign = g1, res.assign
+
+    net = net0.degrade(1, 3.0)                               # slot 2: degrade
+    res = glad_s(CostModel(net, graph, gnn), init=assign, R=5, seed=2,
+                 **opts)
+    out.append(_result_tuple(res))
+    assign = res.assign
+
+    net = net.without_server(3)                              # slot 3: fail
+    init = assign.copy()
+    init[init == 3] = 0                  # deterministic orphan re-homing
+    res = glad_s(CostModel(net, graph, gnn), init=init, R=5, seed=3,
+                 **opts)
+    out.append(_result_tuple(res))
+    assign = res.assign
+
+    g2 = apply_delta(graph, deltas[1])                       # slot 4: evolve
+    res = glad_e(CostModel(net, g2, gnn), graph, assign, seed=4, **opts)
+    out.append(_result_tuple(res))
+    graph, assign = g2, res.assign
+
+    net = net0.degrade(1, 3.0)                               # slot 5: revive 3
+    res = glad_s(CostModel(net, graph, gnn), init=assign, R=5, seed=5,
+                 **opts)
+    out.append(_result_tuple(res))
+    assign = res.assign
+
+    g3 = apply_delta(graph, deltas[2])                       # slot 6: evolve
+    res = glad_e(CostModel(net, g3, gnn), graph, assign, seed=6, **opts)
+    out.append(_result_tuple(res))
+    return out
+
+
+@pytest.mark.parametrize("cache,warm", REGIMES)
+def test_session_slot_script_bit_identical(cache, warm):
+    ses = LayoutSession(cache=cache, warm=warm)
+    got = _run_script(ses, cache, warm)
+    ref = _run_script(None, cache, warm)
+    for slot, (a, b) in enumerate(zip(got, ref)):
+        _assert_same(a, b, slot)
+    # The session must actually have REBOUND (diffed) engines, not
+    # silently rebuilt one per slot.
+    assert ses.adoptions >= 6
+    assert ses.rebinds >= ses.adoptions - 1
+
+
+def test_degrade_rebind_column_patches_instead_of_rebuilding():
+    """A dense per-server repricing (degrade/revive — the fault loop's
+    bread and butter) must not cost the session its assemblies: tau, and
+    therefore every internal arc, is untouched by compute repricing, so
+    the affected pairs re-gather whole theta columns IN PLACE (counted
+    as 'patched', never 'misses') and the retained warm residuals are
+    repaired rather than re-pushed.  A mild degrade keeps the layout
+    (mostly) put, so the relayout is the confirm-shaped probe sweep
+    where every engine byte carried across the rebind pays off."""
+    g = synthetic_yelp(n=1200, target_links=1800, seed=7)
+    net0 = build_edge_network(g, 4, seed=7)
+    gnn = workload_for("gcn", 32)
+    ses = LayoutSession(cache=True, warm=True)
+    res0 = glad_s(CostModel(net0, g, gnn), R=4, seed=0, sweep="batched",
+                  cache=True, warm=True, session=ses)
+    eng = ses.engine
+    before = dict(eng.cache_stats())
+    net1 = net0.degrade(1, 1.1)
+    res1 = glad_s(CostModel(net1, g, gnn), init=res0.assign.copy(), R=4,
+                  seed=1, sweep="batched", cache=True, warm=True,
+                  session=ses)
+    assert ses.rebinds == 1 and ses.engine is eng
+    after = eng.cache_stats()
+    assert after["patched"] > before["patched"]    # column patches engaged
+    # Resident entries must never be rebuilt over a degrade rebind: new
+    # assemblies are allowed only for pairs the first slot never cached.
+    uncached = 4 * 3 // 2 - before["entries"]      # m=4: 6 possible pairs
+    assert after["misses"] - before["misses"] <= uncached
+    assert (after["warm_hits"] + after["warm_repairs"]
+            > before["warm_hits"] + before["warm_repairs"])
+    ref = glad_s(CostModel(net1, g, gnn), init=res0.assign.copy(), R=4,
+                 seed=1, sweep="batched", cache=True, warm=True)
+    assert res1.history == ref.history
+    np.testing.assert_array_equal(res1.assign, ref.assign)
+
+
+def test_session_guards():
+    cm = CostModel(build_edge_network(synthetic_yelp(n=60, target_links=90,
+                                                     seed=0), 4, seed=0),
+                   synthetic_yelp(n=60, target_links=90, seed=0),
+                   workload_for("gcn", 16))
+    ses = LayoutSession()
+    with pytest.raises(ValueError, match="multilevel"):
+        glad_s(cm, session=ses, multilevel=True)
+    with pytest.raises(ValueError, match="incremental"):
+        glad_s(cm, session=ses, engine="reference")
+
+
+def test_session_adopt_falls_back_on_incompatible_model():
+    """A model the diff cannot express (different fleet size) silently
+    falls back to a fresh engine — adopt never fails, it just loses the
+    carried state."""
+    g = synthetic_yelp(n=80, target_links=120, seed=1)
+    gnn = workload_for("gcn", 16)
+    ses = LayoutSession()
+    cm4 = CostModel(build_edge_network(g, 4, seed=1), g, gnn)
+    r4 = glad_s(cm4, R=4, seed=0, sweep="batched", session=ses)
+    cm5 = CostModel(build_edge_network(g, 5, seed=1), g, gnn)
+    r5 = glad_s(cm5, init=r4.assign, R=5, seed=0, sweep="batched",
+                session=ses)
+    ref = glad_s(cm5, init=r4.assign, R=5, seed=0, sweep="batched")
+    assert r5.history == ref.history
+    np.testing.assert_array_equal(r5.assign, ref.assign)
+    assert ses.adoptions == 2 and ses.rebinds == 0
+
+
+# ------------------------------------------------------------------- fuzz
+def _fuzz_sequence(seed, cache, warm, session):
+    """Random interleaving of evolve / degrade / fail / revive slots,
+    mirroring ElasticCoordinator's net bookkeeping (pristine + op replay)."""
+    rng = np.random.default_rng(seed)
+    g = synthetic_yelp(n=150, target_links=220, seed=seed % 7)
+    net0 = build_edge_network(g, 4, seed=seed % 5)
+    gnn = workload_for("gcn", 24)
+    opts = dict(sweep="batched", cache=cache, warm=warm, session=session)
+
+    ops = []                     # surviving ("dead", d) / ("deg", d, f)
+
+    def current_net():
+        net = net0
+        for op in ops:
+            net = (net.without_server(op[1]) if op[0] == "dead"
+                   else net.degrade(op[1], op[2]))
+        return net
+
+    net = net0
+    res = glad_s(CostModel(net, g, gnn), R=4, seed=seed, **opts)
+    out = [_result_tuple(res)]
+    assign, graph = res.assign, g
+    for slot in range(5):
+        dead = {op[1] for op in ops if op[0] == "dead"}
+        live = [i for i in range(4) if i not in dead]
+        kinds = ["evolve", "degrade"]
+        if len(live) > 2:
+            kinds.append("fail")
+        if ops:
+            kinds.append("revive")
+        kind = kinds[int(rng.integers(0, len(kinds)))]
+        if kind == "evolve":
+            delta = evolution_trace(graph, 1, pct_links=0.05,
+                                    pct_vertices=0.02,
+                                    seed=seed * 31 + slot)[0]
+            g2 = apply_delta(graph, delta)
+            res = glad_e(CostModel(net, g2, gnn), graph, assign,
+                         seed=seed + slot, **opts)
+            graph = g2
+        else:
+            if kind == "degrade":
+                ops.append(("deg", int(rng.choice(live)), 2.5))
+            elif kind == "fail":
+                d = int(rng.choice(live))
+                ops.append(("dead", d))
+                assign = assign.copy()
+                assign[assign == d] = [i for i in live if i != d][0]
+            else:                                            # revive
+                victim = ops[int(rng.integers(0, len(ops)))][1]
+                ops = [op for op in ops if op[1] != victim]
+            net = current_net()
+            res = glad_s(CostModel(net, graph, gnn), init=assign, R=4,
+                         seed=seed + slot, **opts)
+        out.append(_result_tuple(res))
+        assign = res.assign
+    return out
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_session_fuzz_slot_sequences_bit_identical(seed):
+    for cache, warm in REGIMES:
+        ses = LayoutSession(cache=cache, warm=warm)
+        got = _fuzz_sequence(seed, cache, warm, ses)
+        ref = _fuzz_sequence(seed, cache, warm, None)
+        for slot, (a, b) in enumerate(zip(got, ref)):
+            _assert_same(a, b, slot)

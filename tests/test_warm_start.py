@@ -23,8 +23,8 @@ from repro.core.engine import PairCutEngine, round_robin_rounds
 from repro.core.glad_s import glad_s
 from repro.core.maxflow import (PEEL_GATE_FRAC, Dinic, ResidualCut,
                                 assemble_symmetric_flow_csr, min_st_cut_csr,
-                                peel_gate_fraction)
-from repro.graphs.datagraph import synthetic_siot
+                                peel_gate_fraction, peel_warm_solve)
+from repro.graphs.datagraph import DataGraph, synthetic_siot
 from repro.graphs.edgenet import build_edge_network
 
 
@@ -252,10 +252,53 @@ def test_peel_gate_shared_between_block_solver_and_warm_router():
     assert 0.0 < PEEL_GATE_FRAC < 1.0
 
 
+def test_peel_warm_solve_differential_vs_cold_and_dinic():
+    """:func:`peel_warm_solve` (quantize + persistency peel + keyed warm
+    survivor solve) returns the SAME mask as the cold solver and the Dinic
+    oracle on every step of random perturbation sequences — and a re-solve
+    of an unchanged problem must come back as a pure warm HIT through the
+    retained keyed residual."""
+    hit_seen = False
+    for seed in range(30):
+        rng = np.random.default_rng(1000 + seed)
+        k, links, w, ti, tj = _random_universe(rng)
+        member = np.ones(k, dtype=bool)
+        rc = key = None
+        for _ in range(5):
+            prob = _restrict(k, links, w, ti, tj, member)
+            old_rc = rc
+            side, rc, key, _mode = peel_warm_solve(
+                *prob, residual=rc, residual_key=key)
+            np.testing.assert_array_equal(side, _cold_mask(*prob))
+            np.testing.assert_array_equal(side, _dinic_mask(*prob))
+            # The returned state describes THIS problem only if it was
+            # primed/matched here (a fully-peeled or overflown solve passes
+            # stale state through untouched for a later key match).
+            fresh = (rc is not None and key is not None
+                     and (rc is not old_rc or _mode in ("hit", "warm")))
+            if fresh:
+                # Same problem, same forced set: the keyed residual must
+                # resolve as a hit and return identical bits.
+                side2, rc, key, mode2 = peel_warm_solve(
+                    *prob, residual=rc, residual_key=key)
+                np.testing.assert_array_equal(side2, side)
+                assert mode2 == "hit"
+                hit_seen = True
+            if rng.uniform() < 0.25:
+                member = rng.uniform(size=k) < rng.uniform(0.4, 1.0)
+                if member.sum() < 2:
+                    member[:2] = True
+                rc = key = None        # membership changed: engine re-keys
+            links, w, ti, tj = _perturb(rng, k, links, w, ti, tj)
+    assert hit_seen
+
+
 def test_warm_state_dropped_when_peel_frontier_engages():
-    """Re-solve after the forced set grows past the gate: the engine must
-    route to the cold peeled path and DROP the entry's warm state; when the
-    forced set shrinks again the pair re-primes — masks exact throughout.
+    """Re-solve after the forced set grows past the gate: the engine routes
+    to the peeled path, and any FULL-CORE residual is dropped (its caps no
+    longer describe the problem being solved).  The peeled solve then primes
+    a residual KEYED by the forced set, so the peel regime itself warms on
+    re-probe; masks stay exact throughout.
 
     Built on a tiny engine so the full epoch/cache plumbing is exercised,
     not just the maxflow layer."""
@@ -284,10 +327,81 @@ def test_warm_state_dropped_when_peel_frontier_engages():
     # Early churny rounds must have hit the cold/peel fallback at least
     # once — that is the 'frontier engages -> state dropped' path.
     assert st_["warm_cold"] > 0
-    # And every cached entry that still holds warm state is consistent.
+    # And every cached entry that still holds warm state is consistent:
+    # a full-core residual spans the core; a peel-keyed one spans exactly
+    # the survivors of the forced set it is keyed by.
     for e in eng._cache.values():
         if e.residual is not None:
-            assert e.residual.k == len(e.core)
+            if e.residual_key is None:
+                assert e.residual.k == len(e.core)
+            else:
+                assert len(e.residual_key) == len(e.core)
+                assert e.residual.k == int(e.residual_key.sum())
+
+
+def test_peel_keyed_residuals_warm_hit_on_converged_reprobe():
+    """The converged-but-peel-gated regime must WARM-HIT, not re-solve
+    cold: residuals primed on the peeled survivor problem are keyed by the
+    forced set, so a re-probe with an unchanged forced set resolves the
+    retained residual.  (Pre-PR the peel branch dropped warm state every
+    time it engaged — exactly where the peel wins.)
+
+    The workload is built to make the gate fire WITH survivors: a heavy
+    ring core whose internal arcs outweigh any t-link gap (the cascade
+    cannot force it) plus a light periphery whose unary pull dwarfs its
+    incident caps (forced immediately — frac above the gate)."""
+    rng = np.random.default_rng(7)
+    n_core, n = 24, 160
+    edges = []
+    for i in range(n_core):
+        edges.append((i, (i + 1) % n_core))
+        edges.append((i, (i + 5) % n_core))
+    for v in range(n_core, n):
+        a, b = rng.integers(0, n_core, 2)
+        edges.append((v, int(a)))
+        edges.append((v, int(b)))
+    edges = np.array(sorted({(min(a, b), max(a, b))
+                             for a, b in edges if a != b}), dtype=np.int64)
+    wts = np.where((edges[:, 0] < n_core) & (edges[:, 1] < n_core),
+                   50.0, 0.02)
+    g = DataGraph(n, edges, coords=rng.random((n, 2)), edge_weights=wts)
+    net = build_edge_network(g, 4, seed=0)
+    cm = CostModel(net, g, workload_for("gcn", 24))
+    init = rng.integers(0, 4, size=n).astype(np.int64)
+    eng = PairCutEngine(cm, init, cache=True, warm=True)
+    cold_eng = PairCutEngine(cm, init.copy(), cache=False, warm=False)
+    connected = {(int(i), int(j)) for i, j in net.pairs}
+    rounds = [[p for p in rnd if p in connected]
+              for rnd in round_robin_rounds(4)]
+    rounds = [r for r in rounds if r]
+    while True:
+        acc = 0
+        for rnd in rounds:
+            got = eng.sweep_round(rnd, solver="pairwise")
+            assert got == cold_eng.sweep_round(rnd, solver="pairwise")
+            acc += sum(1 for _, ok in got if ok)
+        if acc == 0:
+            break
+    # Prime pass: one re-probe so peel-gated pairs prime keyed residuals.
+    eng._version += 1
+    eng._server_dirty[:] = eng._version
+    for rnd in rounds:
+        eng.sweep_round(rnd, solver="pairwise")
+    keyed = [e for e in eng._cache.values()
+             if e.residual is not None and e.residual_key is not None]
+    assert keyed, "workload never engaged the peel gate at convergence"
+    before = dict(eng.cache_stats())
+    total_before = eng.state.total
+    eng._version += 1
+    eng._server_dirty[:] = eng._version       # dirty, epochs untouched
+    for rnd in rounds:
+        for _, ok in eng.sweep_round(rnd, solver="pairwise"):
+            assert not ok                     # converged: all rejects
+    after = eng.cache_stats()
+    assert eng.state.total == total_before
+    # Every keyed residual resolves as a pure warm hit on the re-probe.
+    assert after["warm_hits"] >= before["warm_hits"] + len(keyed)
+    np.testing.assert_array_equal(eng.state.assign, cold_eng.state.assign)
 
 
 # ----------------------------------------------------- engine-level identity
