@@ -67,6 +67,18 @@ per-slot ``step()`` calls are timed; the arms must agree exactly on
 per-event costs, migration counts and the final assignment (the
 session may only change wall time, never bits).
 
+Section 7 (``streamed_memory_cells``) — streamed vs in-core coarsening
+peak RSS, one subprocess per arm (ru_maxrss is process-lifetime),
+interleaved launches: same hierarchy bit-for-bit, bounded-window
+transient footprint.  The n=500k cell gates the streamed arm at <= 60%
+of the in-core peak.
+
+Section 8 (``stack_reuse_cells``) — the persistent LevelStack over
+repeated >50%-churn relayouts (the GLAD-E escalation regime): refresh
+``acquire`` vs fresh ``build_levels`` per escalation (>= 1.3x gate),
+with the session arm's relayout trajectories required to match the
+fresh-build arm hex-for-hex.
+
 Full-run cost parity (sequential vs batched-pairwise vs batched-block,
 exhaustive R) is recorded for n <= 20k; the 50k full runs are skipped by
 default and logged as skipped — per-round numbers there come from the
@@ -769,9 +781,19 @@ def run_cell(n: int, m: int, seed: int = 0, R=None, reps: int = 3):
     }
 
 
+def _level_checksums(stack):
+    """Splitmix-mixed XOR checksum per coarsening rung (cluster maps)."""
+    return [int(np.bitwise_xor.reduce(
+        (lvl.cluster_of.astype(np.uint64)
+         * np.uint64(0x9E3779B97F4A7C15))
+        ^ np.arange(len(lvl.cluster_of), dtype=np.uint64)))
+        for lvl in stack[1:]]
+
+
 def run_multilevel_cell(n: int, m: int, seed: int = 0, reps: int = 2,
                         mu_factor: float = 2.0, coarsen_to=None,
-                        run_flat: bool = True):
+                        run_flat: bool = True, chunk_vertices=None,
+                        record_levels: bool = True, check_streamed=None):
     """Multilevel V-cycle vs the flat batched engine, interleaved in the
     same noise window.
 
@@ -786,13 +808,26 @@ def run_multilevel_cell(n: int, m: int, seed: int = 0, reps: int = 2,
     refinement on the flat engine from the recorded projected init +
     boundary mask.  ``run_flat=False`` marks the flat run skipped (the
     n >= 500k memory/runtime cell: the V-cycle must complete, the flat
-    engine need not)."""
+    engine need not).
+
+    ``chunk_vertices`` streams the timed V-cycle's coarsening (the scale
+    cells run streamed: bit-identical by contract, bounded-window RSS);
+    ``record_levels=False`` slims the per-level replay telemetry to
+    checksums (the finest-replay gate is skipped — nothing to replay
+    from).  ``check_streamed`` (default: on for n <= 50k) additionally
+    gates streamed-vs-in-core bit-identity INSIDE the cell: the streamed
+    hierarchy must equal the in-core one rung-for-rung, and a streamed
+    V-cycle must reproduce the in-core V-cycle's cost hex and assignment
+    exactly — this is the --smoke/--fail-on-mismatch streamed parity
+    gate."""
     import resource
 
     from repro.core.multilevel import COARSEN_TO, build_levels
 
     if coarsen_to is None:
         coarsen_to = COARSEN_TO
+    if check_streamed is None:
+        check_streamed = n <= 50_000
     target_links = int(n * 4.2)
     g = synthetic_siot(n=n, target_links=target_links, seed=seed)
     net = build_edge_network(g, m, seed=seed, mu_factor=mu_factor)
@@ -800,7 +835,9 @@ def run_multilevel_cell(n: int, m: int, seed: int = 0, reps: int = 2,
 
     fns = {"multilevel": lambda: glad_s(cm, seed=seed, sweep="batched",
                                         multilevel=True,
-                                        coarsen_to=coarsen_to)}
+                                        coarsen_to=coarsen_to,
+                                        chunk_vertices=chunk_vertices,
+                                        record_levels=record_levels)}
     if run_flat:
         fns["flat"] = lambda: glad_s(cm, seed=seed, sweep="batched")
     best = {k: float("inf") for k in fns}
@@ -813,36 +850,43 @@ def run_multilevel_cell(n: int, m: int, seed: int = 0, reps: int = 2,
     ml = out["multilevel"]
 
     # Coarsening determinism: rebuilding the hierarchy must reproduce every
-    # cluster map bit-for-bit (splitmix-mixed XOR checksum per rung).
+    # cluster map bit-for-bit.  Scale cells rebuild through the same
+    # streamed path they were timed on (the in-core rebuild is exactly the
+    # O(n+m)-per-level materialization the cell exists to avoid).
     def checksums():
-        stack = build_levels(cm, coarsen_to=coarsen_to)
-        return [int(np.bitwise_xor.reduce(
-            (lvl.cluster_of.astype(np.uint64)
-             * np.uint64(0x9E3779B97F4A7C15))
-            ^ np.arange(len(lvl.cluster_of), dtype=np.uint64)))
-            for lvl in stack[1:]]
+        return _level_checksums(build_levels(cm, coarsen_to=coarsen_to,
+                                             chunk_vertices=chunk_vertices))
 
     cks = checksums()
     deterministic = cks == checksums()
 
     # Finest refinement == flat engine: replay from the recorded projected
-    # init + boundary mask and compare the history hex-for-hex.
+    # init + boundary mask and compare the history hex-for-hex.  Slimmed
+    # telemetry (record_levels=False) keeps only checksums of those
+    # arrays — nothing to replay from, so the gate is marked skipped
+    # rather than vacuously passed.
     finest = ml.levels[-1]
-    if finest["role"] == "refine" and finest["active"] is not None \
-            and finest["active"].any():
-        replay = glad_s(cm, R=finest["R"], init=finest["init"],
-                        active=finest["active"], seed=seed, sweep="batched")
-        replay_ok = (
-            [np.float64(h).hex() for h in replay.history]
-            == [np.float64(h).hex() for h in finest["history"]]
-            and bool((replay.assign == ml.assign).all()))
-        finest_iters = finest["iterations"]
-    else:               # projection had no cut links: nothing to replay
-        replay_ok = True
-        finest_iters = 0
+    replay_ok = None
+    finest_iters = finest.get("iterations", 0)
+    if record_levels:
+        if finest["role"] == "refine" and finest["active"] is not None \
+                and finest["active"].any():
+            replay = glad_s(cm, R=finest["R"], init=finest["init"],
+                            active=finest["active"], seed=seed,
+                            sweep="batched")
+            replay_ok = (
+                [np.float64(h).hex() for h in replay.history]
+                == [np.float64(h).hex() for h in finest["history"]]
+                and bool((replay.assign == ml.assign).all()))
+            finest_iters = finest["iterations"]
+        else:           # projection had no cut links: nothing to replay
+            replay_ok = True
+            finest_iters = 0
 
     cell = {
         "n": n, "m": m, "mu_factor": mu_factor, "coarsen_to": coarsen_to,
+        "chunk_vertices": chunk_vertices,
+        "record_levels": record_levels,
         "levels": len(ml.levels),
         "level_sizes": [ls["n"] for ls in ml.levels[::-1]],
         "coarsest_n": ml.levels[0]["n"],
@@ -853,10 +897,41 @@ def run_multilevel_cell(n: int, m: int, seed: int = 0, reps: int = 2,
         "finest_refine_iterations": finest_iters,
         "coarsening_deterministic": deterministic,
         "cluster_checksum": cks[0] if cks else None,
-        "finest_replay_bit_identical": replay_ok,
         "max_rss_gb": round(resource.getrusage(
             resource.RUSAGE_SELF).ru_maxrss / 1e6, 3),
     }
+    if replay_ok is None:
+        cell["finest_replay"] = ("skipped (record_levels=False scale "
+                                 "cell: replay arrays slimmed to "
+                                 "checksums)")
+    else:
+        cell["finest_replay_bit_identical"] = replay_ok
+
+    if check_streamed:
+        from repro.core.multilevel_stream import AUTO_CHUNK_VERTICES
+        incore = build_levels(cm, coarsen_to=coarsen_to)
+        incore_cks = _level_checksums(incore)
+        # A deliberately awkward odd chunk (splits matched pairs across
+        # window boundaries) plus the shipping auto default.
+        chunks = [191, AUTO_CHUNK_VERTICES]
+        incore_sizes = [lvl.cm.graph.n for lvl in incore]
+        levels_ok = True
+        for c in chunks:
+            got = build_levels(cm, coarsen_to=coarsen_to, chunk_vertices=c)
+            levels_ok &= (_level_checksums(got) == incore_cks
+                          and [lvl.cm.graph.n for lvl in got]
+                          == incore_sizes)
+        sml = glad_s(cm, seed=seed, sweep="batched", multilevel=True,
+                     coarsen_to=coarsen_to, chunk_vertices=chunks[0])
+        vcycle_ok = (np.float64(sml.cost).hex()
+                     == np.float64(ml.cost).hex()
+                     and bool((sml.assign == ml.assign).all()))
+        cell.update({
+            "streamed_chunks_checked": chunks,
+            "streamed_levels_bit_identical": levels_ok,
+            "streamed_vcycle_bit_identical": vcycle_ok,
+        })
+
     if run_flat:
         flat = out["flat"]
         cell.update({
@@ -1091,6 +1166,222 @@ def run_session_fault_cell(n: int, m: int = 8, seed: int = 0,
     }
 
 
+def _rss_probe(spec_json: str) -> int:
+    """Hidden ``--rss-probe`` arm: ONE coarsening build in a fresh process.
+
+    ``ru_maxrss`` is a process-lifetime high-water mark, so a streamed vs
+    in-core peak-RSS A/B inside one process would only ever measure the
+    larger arm — each arm runs in its own subprocess and the parent
+    interleaves the launches in the same noise window.  ``peak_rss_kb``
+    is read IMMEDIATELY after the coarsening build, so the probe solve
+    cannot mask the arms' difference; the feature matrix (coarsening
+    never reads it) and the network's pre-copy mu (``CostModel`` owns a
+    defensive copy) are dropped up front for the same reason — inert
+    ballast common to both arms only dilutes the measured ratio.  Prints
+    a single JSON line: peak RSS, coarsening wall time, and the parity
+    evidence (level sizes, per-rung cluster checksums, and the final
+    cost of a deterministic coarsest-level probe solve) the parent
+    compares bitwise across arms."""
+    import dataclasses
+    import resource
+
+    from repro.core.multilevel import COARSEN_TO, build_levels
+
+    spec = json.loads(spec_json)
+    n, m, seed = spec["n"], spec["m"], spec.get("seed", 0)
+    coarsen_to = spec.get("coarsen_to") or COARSEN_TO
+    g = synthetic_siot(n=n, target_links=int(n * 4.2), seed=seed)
+    g = dataclasses.replace(g, features=None, labels=None)
+    net = build_edge_network(g, m, seed=seed,
+                             mu_factor=spec.get("mu_factor", 2.0))
+    cm = CostModel(net, g, workload_for("gcn", 52))
+    del net
+    base_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    t0 = time.perf_counter()
+    stack = build_levels(cm, coarsen_to=coarsen_to,
+                         chunk_vertices=spec.get("chunk_vertices"))
+    wall = time.perf_counter() - t0
+    peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    coarsest = stack[-1].cm
+    probe = glad_s(coarsest, R=coarsest.net.m, seed=0, sweep="batched")
+    print(json.dumps({
+        "peak_rss_kb": peak_rss,
+        "base_rss_kb": base_rss,
+        "coarsen_wall_s": round(wall, 4),
+        "level_sizes": [lvl.cm.graph.n for lvl in stack],
+        "cluster_checksums": _level_checksums(stack),
+        "coarsest_probe_cost": probe.cost,
+        "coarsest_probe_cost_hex": np.float64(probe.cost).hex(),
+    }))
+    return 0
+
+
+def run_streamed_memory_cell(n: int, m: int = 32, seed: int = 0,
+                             reps: int = 2, coarsen_to=None,
+                             chunk_vertices="auto"):
+    """Streamed vs in-core coarsening: peak RSS, one subprocess per arm.
+
+    The tentpole's memory claim measured honestly: ``build_levels`` walks
+    every level in core (full-CSR gate/matching/contraction arrays), the
+    streamed path walks bounded vertex windows — same hierarchy
+    bit-for-bit, different transient footprint.  Each probe builds the
+    instance, coarsens once, then runs a deterministic coarsest-level
+    probe solve; the arms must agree EXACTLY on level sizes, every
+    cluster checksum and the probe cost hex (``streamed_bit_identical``
+    feeds --fail-on-mismatch, ``coarsest_probe_cost`` feeds
+    --check-parity).  Peak RSS per arm is the min over interleaved
+    repetitions; the n=500k cell's ratio gate (streamed <= 60% of
+    in-core) is checked by ``_verify_cost_parity``."""
+    import os
+    import pathlib
+    import subprocess
+
+    here = pathlib.Path(__file__).resolve()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(here.parent.parent / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+
+    def probe(chunk):
+        spec = json.dumps({"n": n, "m": m, "seed": seed, "mu_factor": 2.0,
+                           "coarsen_to": coarsen_to,
+                           "chunk_vertices": chunk})
+        cp = subprocess.run([sys.executable, str(here), "--rss-probe",
+                             spec], capture_output=True, text=True,
+                            env=env, check=True)
+        return json.loads(cp.stdout.strip().splitlines()[-1])
+
+    arms = {"incore": None, "streamed": chunk_vertices}
+    best = {k: None for k in arms}
+    for _ in range(max(1, reps)):
+        for key, chunk in arms.items():
+            got = probe(chunk)
+            if (best[key] is None
+                    or got["peak_rss_kb"] < best[key]["peak_rss_kb"]):
+                best[key] = got
+    inc, st = best["incore"], best["streamed"]
+    parity = (inc["level_sizes"] == st["level_sizes"]
+              and inc["cluster_checksums"] == st["cluster_checksums"]
+              and inc["coarsest_probe_cost_hex"]
+              == st["coarsest_probe_cost_hex"])
+    return {
+        "scenario": "coarsen_memory",
+        "n": n, "m": m, "chunk_vertices": chunk_vertices,
+        "levels": len(inc["level_sizes"]),
+        "incore_peak_rss_gb": round(inc["peak_rss_kb"] / 1e6, 3),
+        "streamed_peak_rss_gb": round(st["peak_rss_kb"] / 1e6, 3),
+        "streamed_rss_ratio": round(st["peak_rss_kb"]
+                                    / inc["peak_rss_kb"], 3),
+        "incore_coarsen_wall_s": inc["coarsen_wall_s"],
+        "streamed_coarsen_wall_s": st["coarsen_wall_s"],
+        "streamed_bit_identical": parity,
+        "coarsest_probe_cost": inc["coarsest_probe_cost"],
+    }
+
+
+def run_stack_reuse_cell(n: int, m: int = 16, seed: int = 0,
+                         rounds: int = 3, reps: int = 2,
+                         mu_factor: float = 2.0, coarsen_to=None,
+                         churn: float = 0.7):
+    """Persistent LevelStack vs fresh coarsening over repeated large-churn
+    relayouts — the GLAD-E escalation regime the stack exists for.
+
+    Each round scrambles >50% of the assignment (random server flips:
+    effective churn ~= churn * (m-1)/m) and re-escalates to the V-cycle;
+    the session arm serves coarsening off the LayoutSession's LevelStack
+    (the graph never changes, so every level refreshes with zero
+    rebuilds), the fresh arm pays ``build_levels`` from scratch every
+    time.  Both arms must agree EXACTLY per round — cost hex, history
+    hex, assignment, moved set (the stack may only change wall time,
+    never bits).  The headline number is the per-escalation coarsening
+    A/B: a refresh ``acquire`` off the populated stack vs a fresh
+    ``build_levels``, interleaved best-of-reps; the >= 1.3x gate is
+    checked by ``_verify_cost_parity``."""
+    from repro.core.engine import LayoutSession
+    from repro.core.multilevel import COARSEN_TO, build_levels
+
+    if coarsen_to is None:
+        coarsen_to = COARSEN_TO
+    g = synthetic_siot(n=n, target_links=int(n * 4.2), seed=seed)
+    net = build_edge_network(g, m, seed=seed, mu_factor=mu_factor)
+    cm = CostModel(net, g, workload_for("gcn", 52))
+
+    def run_arm(use_session):
+        ses = LayoutSession() if use_session else None
+        rng = np.random.default_rng(seed + 1)
+        res = glad_s(cm, seed=seed, sweep="batched", multilevel=True,
+                     coarsen_to=coarsen_to, session=ses)
+        outs, churns, t_esc = [res], [], 0.0
+        for r in range(rounds):
+            init = res.assign.copy()
+            flip = rng.random(n) < churn
+            init[flip] = rng.integers(0, m, size=int(flip.sum()))
+            churns.append(float(np.mean(init != res.assign)))
+            t0 = time.perf_counter()
+            res = glad_s(cm, init=init, seed=seed + 1 + r, sweep="batched",
+                         multilevel=True, coarsen_to=coarsen_to,
+                         session=ses)
+            t_esc += time.perf_counter() - t0
+            outs.append(res)
+        return ses, outs, churns, t_esc
+
+    best = {"session": float("inf"), "fresh": float("inf")}
+    out = {}
+    for _ in range(max(1, reps)):
+        for key, use in (("session", True), ("fresh", False)):
+            ses, outs, churns, t = run_arm(use)
+            out[key] = (ses, outs, churns)
+            best[key] = min(best[key], t)
+    ses, s_outs, churns = out["session"]
+    _, f_outs, _ = out["fresh"]
+
+    def sig(res):
+        return (np.float64(res.cost).hex(),
+                tuple(np.float64(h).hex() for h in res.history),
+                res.assign.tobytes(),
+                None if res.moved is None
+                else np.sort(res.moved).tobytes())
+
+    trajectory_match = all(sig(a) == sig(b)
+                           for a, b in zip(s_outs, f_outs))
+    lstack = ses.level_stack(coarsen_to=coarsen_to)
+    builds, refreshes = lstack.builds, lstack.refreshes
+    last = s_outs[-1].coarsen or {}
+
+    # Per-escalation coarsening A/B (counters above captured first: the
+    # timing acquires below are extra refreshes on the same stack).
+    t_refresh = t_fresh = float("inf")
+    for _ in range(max(2, reps)):
+        t0 = time.perf_counter()
+        lstack.acquire(cm)
+        t_refresh = min(t_refresh, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        build_levels(cm, coarsen_to=coarsen_to)
+        t_fresh = min(t_fresh, time.perf_counter() - t0)
+
+    s_cost, f_cost = s_outs[-1].cost, f_outs[-1].cost
+    return {
+        "n": n, "m": m, "coarsen_to": coarsen_to, "rounds": rounds,
+        "churn_frac": churn,
+        "measured_churn": round(float(np.mean(churns)), 3),
+        "stack_builds": builds,
+        "stack_refreshes": refreshes,
+        "stack_levels_reused": last.get("reused"),
+        "stack_levels_rebuilt": last.get("rebuilt"),
+        "refresh_acquire_ms": round(t_refresh * 1e3, 2),
+        "fresh_build_ms": round(t_fresh * 1e3, 2),
+        "stack_coarsen_speedup": round(t_fresh / t_refresh, 2),
+        "session_escalation_s": round(best["session"], 4),
+        "fresh_escalation_s": round(best["fresh"], 4),
+        "session_relayout_speedup": round(best["fresh"]
+                                          / best["session"], 2),
+        "trajectory_match": trajectory_match,
+        "stack_final_cost": s_cost,
+        "fresh_final_cost": f_cost,
+        "stack_rel_cost_err": abs(s_cost - f_cost)
+        / max(abs(f_cost), 1e-12),
+    }
+
+
 def _verify_cost_parity(out: dict, tol: float = 1e-9):
     """Every cell's engine paths must agree on the final cost.  Returns a
     list of human-readable violations (empty = pass)."""
@@ -1127,6 +1418,35 @@ def _verify_cost_parity(out: dict, tol: float = 1e-9):
             bad.append(f"{where}: coarsening checksums diverged on rebuild")
         if not cell.get("finest_replay_bit_identical", True):
             bad.append(f"{where}: finest refinement != flat-engine replay")
+        if not cell.get("streamed_levels_bit_identical", True):
+            bad.append(f"{where}: streamed coarsening hierarchy diverged "
+                       "from in-core build_levels")
+        if not cell.get("streamed_vcycle_bit_identical", True):
+            bad.append(f"{where}: streamed V-cycle cost/assignment "
+                       "diverged from the in-core V-cycle")
+    for cell in out.get("streamed_memory_cells", []):
+        where = f"streamed-memory n={cell['n']} m={cell['m']}"
+        if not cell.get("streamed_bit_identical", True):
+            bad.append(f"{where}: streamed arm's hierarchy/probe-cost "
+                       "diverged from the in-core arm")
+        if (cell["n"] >= 500_000
+                and cell.get("streamed_rss_ratio", 0.0) > 0.60):
+            bad.append(f"{where}: streamed_rss_ratio="
+                       f"{cell['streamed_rss_ratio']:.3f} > 0.60")
+    for cell in out.get("stack_reuse_cells", []):
+        where = f"stack-reuse n={cell['n']} m={cell['m']}"
+        if not cell.get("trajectory_match", True):
+            bad.append(f"{where}: session arm's relayout trajectory "
+                       "diverged from the fresh-build arm")
+        if cell.get("stack_rel_cost_err", 0.0) > tol:
+            bad.append(f"{where}: stack_rel_cost_err="
+                       f"{cell['stack_rel_cost_err']:.3e} > {tol:g}")
+        if cell.get("stack_refreshes", 1) <= 0:
+            bad.append(f"{where}: the LevelStack never refreshed "
+                       "(every escalation rebuilt from scratch)")
+        if cell.get("stack_coarsen_speedup", 99.0) < 1.3:
+            bad.append(f"{where}: stack_coarsen_speedup="
+                       f"{cell['stack_coarsen_speedup']} < 1.3")
     for cell in out.get("admission_cells", []):
         where = f"admission n={cell['n']} m={cell['m']}"
         if cell.get("admission_rel_cost_err", 0.0) > tol:
@@ -1176,8 +1496,16 @@ def main(argv=None):
                          "re-measures the PR-3 reference for the "
                          "converged-regime resolve cells in the same noise "
                          "window")
+    ap.add_argument("--scale-cells", action="store_true",
+                    help="add the n=2M streamed first-pass V-cycle cell "
+                         "(the weekly slow-tier scale gate; ~half an "
+                         "hour on the reference box)")
+    ap.add_argument("--rss-probe", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--out", default="BENCH_layout.json")
     args = ap.parse_args(argv)
+
+    if args.rss_probe is not None:
+        return _rss_probe(args.rss_probe)
 
     cells = []
     if not args.skip_seed_cells:
@@ -1234,21 +1562,31 @@ def main(argv=None):
               f"{cell['perturb_cached_ms']}ms warm "
               f"{cell['perturb_warm_ms']}ms")
 
-    # Multilevel V-cycle vs flat, interleaved (PR-6).  The quick cell
-    # feeds --fail-on-mismatch (quality/determinism/bit-identity gates)
-    # and --check-parity (pinned costs); the full grid adds the 50k
-    # headline cell and the 500k V-cycle-only scale cell.
-    ml_grid = ([(5000, 16, 256, True)] if args.quick else
-               [(5000, 16, 256, True), (50000, 32, None, True),
-                (500000, 32, None, False)])
+    # Multilevel V-cycle vs flat, interleaved (PR-6; streamed knobs
+    # PR-10).  The quick cell feeds --fail-on-mismatch (quality/
+    # determinism/bit-identity gates, now including streamed-vs-in-core
+    # parity) and --check-parity (pinned costs); the full grid adds the
+    # 50k headline cell and the 500k V-cycle-only scale cell, which now
+    # runs STREAMED with slimmed telemetry (bit-identical cost by the
+    # streaming contract, bounded-window coarsening RSS).  --scale-cells
+    # adds the n=2M streamed first-pass cell (weekly slow tier).
+    ml_grid = ([dict(n=5000, m=16, coarsen_to=256)] if args.quick else
+               [dict(n=5000, m=16, coarsen_to=256),
+                dict(n=50000, m=32),
+                dict(n=500000, m=32, run_flat=False,
+                     chunk_vertices="auto", record_levels=False)])
+    if args.scale_cells:
+        ml_grid.append(dict(n=2_000_000, m=32, run_flat=False,
+                            chunk_vertices="auto", record_levels=False))
     ml_cells = []
-    for n, m, ct, run_flat in ml_grid:
-        # The flat-skipped scale cell is a completion/memory gate, not a
-        # timing comparison: one rep.
+    for spec in ml_grid:
+        run_flat = spec.get("run_flat", True)
+        # The flat-skipped scale cells are completion/memory gates, not
+        # timing comparisons: one rep.
         cell = run_multilevel_cell(
-            n, m, reps=min(args.reps, 2) if run_flat else 1,
-            coarsen_to=ct, run_flat=run_flat)
+            reps=min(args.reps, 2) if run_flat else 1, **spec)
         ml_cells.append(cell)
+        n, m = cell["n"], cell["m"]
         if run_flat:
             print(f"n={n:>6} m={m:>2}: multilevel "
                   f"{cell['multilevel_wall_s']:.2f}s flat "
@@ -1256,12 +1594,52 @@ def main(argv=None):
                   f"({cell['speedup_vs_flat']}x, cost ratio "
                   f"{cell['cost_ratio_vs_flat']:.4f}, "
                   f"{cell['levels']} levels, replay_ok="
-                  f"{cell['finest_replay_bit_identical']})")
+                  f"{cell['finest_replay_bit_identical']}, streamed_ok="
+                  f"{cell.get('streamed_vcycle_bit_identical', 'n/a')})")
         else:
-            print(f"n={n:>6} m={m:>2}: multilevel "
+            print(f"n={n:>7} m={m:>2}: multilevel "
                   f"{cell['multilevel_wall_s']:.2f}s "
                   f"({cell['levels']} levels, flat skipped, "
+                  f"chunk={cell['chunk_vertices']}, "
                   f"maxrss {cell['max_rss_gb']}GB)")
+
+    # Streamed-vs-in-core coarsening memory A/B (PR-10): one subprocess
+    # per arm (ru_maxrss is process-lifetime), launches interleaved in
+    # the same noise window.  The quick cell gates exact parity in
+    # --smoke/--check-parity; the full grid adds the n=500k cell whose
+    # RSS ratio must be <= 0.60.
+    mem_grid = [(20000, 32)] if args.quick else [(20000, 32),
+                                                 (500000, 32)]
+    mem_cells = []
+    for n, m in mem_grid:
+        cell = run_streamed_memory_cell(n, m, reps=min(args.reps, 2))
+        mem_cells.append(cell)
+        print(f"n={n:>7} m={m:>2}: coarsen peak RSS in-core "
+              f"{cell['incore_peak_rss_gb']}GB streamed "
+              f"{cell['streamed_peak_rss_gb']}GB (ratio "
+              f"{cell['streamed_rss_ratio']}), wall "
+              f"{cell['incore_coarsen_wall_s']}s vs "
+              f"{cell['streamed_coarsen_wall_s']}s, parity="
+              f"{cell['streamed_bit_identical']}")
+
+    # Persistent LevelStack vs fresh coarsening over repeated
+    # large-churn relayouts (PR-10): exact trajectory parity + the
+    # >= 1.3x per-escalation coarsening speedup gate.
+    sr_grid = ([(5000, 16, 256)] if args.quick else
+               [(5000, 16, 256), (20000, 16, None)])
+    sr_cells = []
+    for n, m, ct in sr_grid:
+        cell = run_stack_reuse_cell(n, m, coarsen_to=ct,
+                                    reps=min(args.reps, 2))
+        sr_cells.append(cell)
+        print(f"n={n:>6} m={m:>2}: stack refresh "
+              f"{cell['refresh_acquire_ms']}ms vs fresh build "
+              f"{cell['fresh_build_ms']}ms "
+              f"({cell['stack_coarsen_speedup']}x per escalation, "
+              f"churn {cell['measured_churn']}, "
+              f"{cell['stack_refreshes']} refreshes / "
+              f"{cell['stack_builds']} build, match="
+              f"{cell['trajectory_match']})")
 
     # AssemblyCache admission regression (PR-6 satellite): scan-resistance
     # + exact-parity gates feed --fail-on-mismatch.
@@ -1345,6 +1723,8 @@ def main(argv=None):
         "round_solver_cells": round_cells,
         "resolve_cells": resolve_cells,
         "multilevel_cells": ml_cells,
+        "streamed_memory_cells": mem_cells,
+        "stack_reuse_cells": sr_cells,
         "admission_cells": adm_cells,
         "session_cells": ses_cells,
         "convergence_cells": conv_cells,
@@ -1398,6 +1778,8 @@ def check_parity(ref_path: str = "BENCH_layout.json",
           "first_pass_cost")),
         ("resolve_cells", ("resolve_final_cost",)),
         ("multilevel_cells", ("flat_cost", "multilevel_cost")),
+        ("streamed_memory_cells", ("coarsest_probe_cost",)),
+        ("stack_reuse_cells", ("stack_final_cost", "fresh_final_cost")),
         ("admission_cells", ("admission_cost",)),
         ("session_cells", ("session_final_cost", "rebuild_final_cost")),
     ]

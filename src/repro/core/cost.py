@@ -233,6 +233,17 @@ class CostModel:
             self._unary.setflags(write=False)
         return self._unary
 
+    def release_unary(self) -> None:
+        """Drop the cached :attr:`unary` matrix.  It is a deterministic
+        elementwise function of (mu, degrees, gnn coefficients, traffic),
+        so the next access rebuilds it bitwise identical — callers that
+        copied values out (engine picks, assembly deltas) are untouched.
+        The streamed coarsening build releases each level's unary once the
+        level is contracted: a coarse model's unary duplicates its mu
+        (compute/maintenance coefficients are zeroed), so the cache is
+        pure resident redundancy across a retained hierarchy."""
+        self._unary = None
+
     @property
     def constant(self) -> float:
         """C0 (Thm 2): data-independent maintenance sum_i eps_i."""

@@ -1363,6 +1363,37 @@ class LayoutSession:
         self.engine: Optional[PairCutEngine] = None
         self.adoptions = 0           # total adopt() calls
         self.rebinds = 0             # adoptions served by an engine rebind
+        # Persistent multilevel coarsening hierarchies, one per V-cycle
+        # configuration — the LevelStack cache that survives GLAD-E
+        # escalations and fault relayouts (see
+        # repro.core.multilevel.LevelStack).
+        self._stacks: dict = {}
+
+    def level_stack(self, coarsen_to: int = 1024,
+                    max_levels: Optional[int] = None,
+                    mu_gate: bool = True):
+        """Get-or-create the session's persistent
+        :class:`repro.core.multilevel.LevelStack` for one V-cycle
+        configuration (local import — engine <-> multilevel cycle)."""
+        key = (int(coarsen_to), max_levels, bool(mu_gate))
+        st = self._stacks.get(key)
+        if st is None:
+            from repro.core.multilevel import LevelStack
+            st = LevelStack(coarsen_to=coarsen_to, max_levels=max_levels,
+                            mu_gate=mu_gate)
+            self._stacks[key] = st
+        return st
+
+    def stack_valid_for(self, cm: CostModel, coarsen_to: int = 1024,
+                        max_levels: Optional[int] = None,
+                        mu_gate: bool = True) -> bool:
+        """True when a cached LevelStack for this configuration was built
+        over ``cm``'s graph — i.e. a V-cycle escalation would refresh the
+        hierarchy instead of coarsening from scratch (the signal GLAD-E's
+        churn-measured auto policy reads)."""
+        key = (int(coarsen_to), max_levels, bool(mu_gate))
+        st = self._stacks.get(key)
+        return st is not None and st.valid_for(cm)
 
     def adopt(self, cm: CostModel, assign: np.ndarray,
               active: Optional[np.ndarray] = None) -> PairCutEngine:

@@ -19,6 +19,23 @@ from repro.core.engine import LayoutSession
 from repro.core.glad_s import GladResult, glad_s
 from repro.graphs.datagraph import DataGraph
 
+#: Churn-measured escalation policy (``multilevel='auto'``): escalate to
+#: the V-cycle iff its estimated cost undercuts the masked incremental
+#: sweep's.  Both scale ~linearly in the vertices they touch — the sweep
+#: in churned vertices (plus their boundary rings), the V-cycle in ALL
+#: vertices — so the decision reduces to a break-even churn fraction:
+#: escalate iff measured churn > (V-cycle per-vertex cost) / (incremental
+#: per-vertex cost).  A fresh coarsen+solve+refine pass costs about twice
+#: an incremental sweep per touched vertex, putting the fresh break-even
+#: at 0.5 — exactly the pre-existing ``active.mean() > 0.5`` heuristic,
+#: now derived instead of guessed.
+MULTILEVEL_ESCALATE_FRESH = 0.5
+#: With a valid persistent LevelStack (session carries a hierarchy built
+#: over this same graph) the escalation skips matching + contraction and
+#: only rebuilds coarse cost models, roughly halving the V-cycle's
+#: per-vertex cost — the break-even churn drops with it.
+MULTILEVEL_ESCALATE_STACKED = 0.25
+
 
 def seed_new_vertices(
     cm: CostModel, assign: np.ndarray, new_mask: np.ndarray
@@ -51,6 +68,7 @@ def glad_e(
     multilevel: "bool | str" = False,
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
+    chunk_vertices: "int | str | None" = None,
     replicate: "bool | dict" = False,
     session: Optional[LayoutSession] = None,
 ) -> GladResult:
@@ -64,24 +82,32 @@ def glad_e(
         :func:`glad_s` (assembly caching, chunked/parallel block solves,
         warm-started incremental re-solves).  GLAD-E's active-mask workload
         is exactly the regime both 'auto' policies enable themselves for.
-      multilevel / coarsen_to / levels: escalation to the multilevel
-        V-cycle when the churn is too large for the incremental path to
-        pay: with ``multilevel=True`` (or 'auto' and more than half the
-        vertices changed) the masked refinement is replaced by a full
-        coarsen/solve/refine V-cycle warm-started from the carried-over
-        layout — a massively-evolved graph is a fresh layout problem, and
-        the V-cycle is the fast full solver.  Default False keeps the
-        masked incremental path (bit-identical to previous behavior).
+      multilevel / coarsen_to / levels / chunk_vertices: escalation to
+        the multilevel V-cycle when the churn is too large for the
+        incremental path to pay: with ``multilevel=True`` — or 'auto' and
+        measured churn above the break-even fraction
+        (:data:`MULTILEVEL_ESCALATE_FRESH`, dropping to
+        :data:`MULTILEVEL_ESCALATE_STACKED` when the session holds a
+        still-valid LevelStack for this graph) — the masked refinement is
+        replaced by a full coarsen/solve/refine V-cycle warm-started from
+        the carried-over layout — a massively-evolved graph is a fresh
+        layout problem, and the V-cycle is the fast full solver.
+        ``chunk_vertices`` streams the escalation's coarsening in bounded
+        vertex windows.  Default False keeps the masked incremental path
+        (bit-identical to previous behavior).
       replicate: move-vs-replicate overlay, forwarded to :func:`glad_s` —
         re-greedied after each accepted round of the refinement and
         attached to the result (``result.replication``).  A post-pass:
         the evolved layout itself is bit-identical with the knob off.
       session: optional :class:`~repro.core.engine.LayoutSession` carrying
-        engine state (assembly cache + warm residuals) across slots.  Only
-        the masked incremental refinement adopts it; the no-change early
-        exit and the multilevel escalation (which builds its own engines
-        per level) leave the session untouched.  Trajectories are
-        bit-identical with or without a session.
+        engine state (assembly cache + warm residuals) and the persistent
+        LevelStack hierarchy across slots.  The masked incremental
+        refinement adopts its engine; a multilevel escalation threads it
+        through so the V-cycle refreshes the session's LevelStack (and
+        its finest refinement adopts the engine) instead of coarsening
+        from scratch.  Only the no-change early exit leaves the session
+        untouched.  Trajectories are bit-identical with or without a
+        session.
 
     The result's ``moved`` is the relayout's move delta RELATIVE TO the
     carried-over old layout — net movers plus every newly-inserted vertex —
@@ -114,15 +140,25 @@ def glad_e(
     # masked incremental refinement degenerates into a flat full sweep —
     # hand the problem to the V-cycle instead, warm-started from the
     # carried layout (the mask is dropped; the V-cycle refines boundaries
-    # at every level, a superset of the changed set's effect).
+    # at every level, a superset of the changed set's effect).  The
+    # break-even churn is cost-measured: cheaper V-cycles (a session
+    # whose LevelStack is still valid for this graph skips the coarsening
+    # work) escalate earlier.  Evolution normally changes the graph and so
+    # invalidates the stack — the stacked threshold engages on relayouts
+    # of an UNCHANGED graph (fault-runtime degrades/stragglers).
     if multilevel == "auto":
-        multilevel = active.mean() > 0.5
+        churn = float(active.mean())
+        stacked = session is not None and session.stack_valid_for(
+            cm_new, coarsen_to=coarsen_to, max_levels=levels)
+        multilevel = churn > (MULTILEVEL_ESCALATE_STACKED if stacked
+                              else MULTILEVEL_ESCALATE_FRESH)
     if multilevel:
         res = glad_s(
             cm_new, R=R, init=assign, seed=seed, backend=backend,
             workers=workers, cache=cache, chunk_nodes=chunk_nodes,
             warm=warm, multilevel=True, coarsen_to=coarsen_to,
-            levels=levels, replicate=replicate,
+            levels=levels, chunk_vertices=chunk_vertices,
+            replicate=replicate, session=session,
         )
         res.moved = (np.union1d(res.moved, new_ids) if len(new_ids)
                      else res.moved)

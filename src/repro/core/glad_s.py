@@ -67,8 +67,14 @@ class GladResult:
     # Multilevel runs only: one stats dict per level solve (coarsest solve
     # first, then each refinement down to the finest), carrying the
     # projected init / boundary-active mask each level ran under — enough
-    # to replay any level on the flat engine bit-for-bit.
+    # to replay any level on the flat engine bit-for-bit.  With
+    # ``record_levels=False`` the replay arrays collapse to checksums +
+    # sizes (scale-cell telemetry).
     levels: Optional[List[dict]] = None
+    # Multilevel runs with a session only: the LevelStack's coarsening
+    # reuse stats for this solve (mode build/refresh, levels
+    # reused/rebuilt, cumulative builds/refreshes).
+    coarsen: Optional[dict] = None
     # replicate=True runs only: the accepted move-vs-replicate overlay on
     # the final cut (core.cost.Replication), the objective with it applied
     # (cost - replication.gain), and the replicated total recorded after
@@ -201,6 +207,8 @@ def glad_s(
     multilevel: "bool | str" = False,
     coarsen_to: int = 1024,
     levels: Optional[int] = None,
+    chunk_vertices: "int | str | None" = None,
+    record_levels: bool = True,
     replicate: "bool | dict" = False,
     session: Optional[LayoutSession] = None,
 ) -> GladResult:
@@ -255,6 +263,14 @@ def glad_s(
       coarsen_to: V-cycle coarsest-level size (multilevel only).
       levels: cap on the number of hierarchy levels (None = until
         ``coarsen_to`` or stagnation; multilevel only).
+      chunk_vertices: stream the V-cycle's coarsening in bounded vertex
+        windows of this size ('auto' = default window) — peak coarsening
+        RSS becomes a knob instead of O(n + m) per level, with levels
+        bit-identical to the in-core build (multilevel only).
+      record_levels: keep the full per-level replay arrays on
+        ``result.levels`` (default).  False slims them to checksums +
+        sizes so scale cells don't retain O(levels x n) telemetry
+        (multilevel only; the trajectory is unchanged).
       replicate: move-vs-replicate overlay (Fograph-style inference
         replication).  True — or a dict of
         :meth:`CostModel.replicate_greedy` kwargs (``sync_weight``,
@@ -272,16 +288,15 @@ def glad_s(
         instead of building a fresh one; per-call engine knobs
         (cache/warm/chunk_nodes/workers) are fixed at session construction
         and ignored here.  Trajectories are bit-identical to the
-        sessionless call.  Incompatible with ``multilevel`` and
+        sessionless call.  With ``multilevel`` the session additionally
+        carries the persistent coarsening hierarchy
+        (:class:`repro.core.multilevel.LevelStack` — reused matchings
+        across relayouts of an unchanged graph) and its engine is adopted
+        by the V-cycle's finest refinement.  Incompatible with
         ``engine='reference'``.
     """
-    if session is not None:
-        if multilevel:                    # incl. 'auto': routing must not
-            raise ValueError(             # silently drop session state
-                "session= is incompatible with multilevel (the V-cycle "
-                "builds per-level engines); pass multilevel=False")
-        if engine == "reference":
-            raise ValueError("session= requires engine='incremental'")
+    if session is not None and engine == "reference":
+        raise ValueError("session= requires engine='incremental'")
     if multilevel == "auto":
         from repro.core.multilevel import MULTILEVEL_AUTO_MIN_N
         multilevel = active is None and cm.graph.n >= MULTILEVEL_AUTO_MIN_N
@@ -299,7 +314,9 @@ def glad_s(
             round_solver=round_solver, workers=workers,
             worker_mode=worker_mode, cache=cache, cache_bytes=cache_bytes,
             chunk_nodes=chunk_nodes, warm=warm,
-            max_iterations=max_iterations, on_iteration=on_iteration),
+            max_iterations=max_iterations, on_iteration=on_iteration,
+            chunk_vertices=chunk_vertices, record_levels=record_levels,
+            session=session),
             replicate)
     rng = np.random.default_rng(seed)
     net, graph = cm.net, cm.graph

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import List, Optional
 
 import numpy as np
@@ -93,13 +94,41 @@ class Level:
     vertex_w: np.ndarray
 
 
+#: Largest float64 magnitude a quantized weight may round to and still fit
+#: int64.  Anything past this would WRAP silently under ``.astype(int64)``
+#: (numpy does not raise) and corrupt every downstream matching decision.
+_INT64_LIMIT_F = float(2 ** 63 - 1024)
+
+
+def _quantize_scaled(vals: np.ndarray, scale: float) -> np.ndarray:
+    """Elementwise quantization at a fixed scale, with a loud int64-domain
+    guard: weights whose scaled magnitude leaves the int64 range (huge
+    negatives, inf/nan from upstream weight sums) raise instead of
+    wrapping.  Shared by the in-core and streamed coarsening paths so
+    both make bit-identical decisions chunk by chunk."""
+    scaled = np.rint(vals * scale)
+    bad = ~(np.abs(scaled) <= _INT64_LIMIT_F)     # catches nan/inf too
+    if bad.any():
+        k = int(np.flatnonzero(bad)[0])
+        raise ValueError(
+            f"quantized edge weight overflows the int64 matching domain "
+            f"(weight {vals[k]!r} at scale {scale!r}); summed parallel "
+            f"edge weights saturated — refuse to wrap silently")
+    return scaled.astype(np.int64)
+
+
 def quantize_weights(w: np.ndarray) -> np.ndarray:
     """Edge weights -> the integer domain matching decisions are made in
-    (scale-invariant, deterministic ties)."""
+    (scale-invariant, deterministic ties).  Raises on weights that do not
+    fit the int64 domain after scaling (silent wraparound would corrupt
+    matchings at n>=2M where contracted parallel-edge sums grow large)."""
+    if len(w) and not np.isfinite(w).all():
+        raise ValueError("non-finite edge weight entering quantization "
+                         "(overflowed parallel-edge weight sum?)")
     mx = float(w.max()) if len(w) else 0.0
     if mx <= 0.0:
         return np.zeros(len(w), dtype=np.int64)
-    return np.rint(w * (_WQ_SCALE / mx)).astype(np.int64)
+    return _quantize_scaled(w, _WQ_SCALE / mx)
 
 
 def _mix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -119,6 +148,46 @@ def _mix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return x
 
 
+def matching_gate(
+    graph: DataGraph,
+    unary: np.ndarray,
+    tau_ref: float,
+    lo: int = 0,
+    hi: Optional[int] = None,
+    pref: Optional[np.ndarray] = None,
+    base: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """mu-gate bits for every CSR entry of vertices in ``[lo, hi)``.
+
+    Entry k (vertex v -> neighbor nbr) is True when the merge is allowed:
+    the unary-disagreement lower bound stays under ``MU_GATE_SLACK x
+    tau_ref x link weight``.  A pure elementwise function of
+    (unary, tau_ref, weights), so computing it for the full CSR, for a
+    vertex window (the streamed matcher), or for a round's candidate
+    subset (the original in-line form) yields bit-identical bits — and
+    comparing bits across cost models is an EXACT test for whether a
+    level's matching is unchanged (the LevelStack reuse criterion)."""
+    if hi is None:
+        hi = graph.n
+    indptr = graph.indptr
+    s, e = int(indptr[lo]), int(indptr[hi])
+    if s == e:
+        return np.zeros(0, dtype=bool)
+    counts = np.diff(indptr[lo:hi + 1])
+    v = np.repeat(np.arange(lo, hi, dtype=np.int64), counts)
+    nbr = graph.indices[s:e]
+    if pref is None:
+        pref = np.argmin(unary, axis=1).astype(np.int64)
+        base = unary[np.arange(graph.n), pref]
+    if graph.edge_weights is None:
+        w_e = np.ones(e - s, dtype=np.float64)
+    else:
+        w_e = graph.edge_weights[graph.edge_ids[s:e]].astype(np.float64)
+    d_lb = np.minimum(unary[v, pref[nbr]] - base[v],
+                      unary[nbr, pref[v]] - base[nbr])
+    return MU_GATE_SLACK * tau_ref * w_e >= d_lb
+
+
 def heavy_edge_matching(
     graph: DataGraph,
     vertex_w: np.ndarray,
@@ -126,6 +195,7 @@ def heavy_edge_matching(
     unary: Optional[np.ndarray] = None,
     tau_ref: float = 0.0,
     rounds: int = MATCH_ROUNDS,
+    gate: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Iterative HEM over the CSR: ``match[v]`` = partner (or v itself).
 
@@ -150,9 +220,12 @@ def heavy_edge_matching(
     w = graph.weights_or_ones().astype(np.float64)
     wq = quantize_weights(w)
     matched = np.zeros(n, dtype=bool)
-    if unary is not None:
-        pref = np.argmin(unary, axis=1).astype(np.int64)
-        base = unary[np.arange(n), pref]
+    if gate is None and unary is not None and tau_ref > 0.0:
+        # One elementwise pass over the full CSR replaces the original
+        # per-round candidate-subset computation — same bits (the gate is
+        # a pure function of each entry), one gather instead of four per
+        # round, and the LevelStack caches exactly this array.
+        gate = matching_gate(graph, unary, tau_ref)
     for _ in range(rounds):
         un = np.flatnonzero(~matched)
         flat, rep = csr_multirange(indptr, un)
@@ -163,12 +236,11 @@ def heavy_edge_matching(
         ew = eids[flat]
         ok = ~matched[nbr]
         ok &= vertex_w[v] + vertex_w[nbr] <= max_w
-        if unary is not None and tau_ref > 0.0:
+        if gate is not None:
             # Lower bound on the unary penalty of co-locating v and nbr:
-            # one of them must leave its preferred server.
-            d_lb = np.minimum(unary[v, pref[nbr]] - base[v],
-                              unary[nbr, pref[v]] - base[nbr])
-            ok &= MU_GATE_SLACK * tau_ref * w[ew] >= d_lb
+            # one of them must leave its preferred server (see
+            # :func:`matching_gate`).
+            ok &= gate[flat]
         if not ok.any():
             break
         v, nbr, cw = v[ok], nbr[ok], wq[ew[ok]]
@@ -237,9 +309,22 @@ def build_levels(
     coarsen_to: int = COARSEN_TO,
     max_levels: Optional[int] = None,
     mu_gate: bool = True,
+    chunk_vertices: "int | str | None" = None,
 ) -> List[Level]:
     """Coarsening hierarchy, finest first.  Stops at ``coarsen_to``
-    vertices, at ``max_levels`` rungs, or when matching stagnates."""
+    vertices, at ``max_levels`` rungs, or when matching stagnates.
+
+    ``chunk_vertices`` routes the build through the streamed coarsening
+    path (:mod:`repro.core.multilevel_stream`): matching and contraction
+    walk the CSR in bounded vertex windows of that size ('auto' picks the
+    default window), so peak transient memory is a knob instead of
+    O(n + m) per level.  The streamed levels are BIT-IDENTICAL to the
+    in-core ones for any window size (property-pinned)."""
+    if chunk_vertices is not None:
+        from repro.core.multilevel_stream import build_levels_streamed
+        return build_levels_streamed(
+            cm, coarsen_to=coarsen_to, max_levels=max_levels,
+            mu_gate=mu_gate, chunk_vertices=chunk_vertices)
     levels = [Level(cm=cm, cluster_of=None,
                     vertex_w=np.ones(cm.graph.n, dtype=np.int64))]
     tau_ref = cm.tau_ref() if mu_gate else 0.0
@@ -264,6 +349,290 @@ def build_levels(
                            minlength=nc).astype(np.int64)
         levels.append(Level(cm=cm_c, cluster_of=cluster_of, vertex_w=vw_c))
     return levels
+
+
+def _gate_equal(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> bool:
+    """Exact equality of two mu-gate bit vectors (None = ungated level)."""
+    if a is None or b is None:
+        return a is None and b is None
+    return a.shape == b.shape and bool(np.array_equal(a, b))
+
+
+class LevelStack:
+    """Persistent coarsening hierarchy reused across relayouts.
+
+    ``build_levels`` is a pure function of (graph structure, edge weights,
+    mu-gate bits, capacity cap) — it never reads the current assignment.
+    A fault-loop relayout (degrade / straggler / revive) churns the
+    ASSIGNMENT of most vertices but leaves the data graph untouched and
+    usually leaves the gate bits untouched too, so the expensive parts of
+    the V-cycle (matching + contraction per level) can be reused verbatim
+    and only the cheap coarse cost models (unary row-sums under the new
+    network) rebuilt.  :meth:`acquire` returns a level stack BIT-IDENTICAL
+    to a fresh ``build_levels(cm)`` call:
+
+      * per level, the cached gate bits are compared against freshly
+        computed bits under the new cost model.  Gate bits are an EXACT
+        certificate — matching is a pure function of (structure, quantized
+        weights, vertex_w, cap, gate bits), all of which are equal when the
+        bits are — so equality proves the cached matching is what a fresh
+        build would recompute.
+      * bits differ -> the level is re-matched for real; if the new
+        matching still equals the cached one, structure reuse continues
+        below.  A genuinely diverged matching forces a fresh rebuild from
+        that level down (coarse ids are renumbered by
+        ``clusters_from_matching`` and the ``_mix`` tie-break hashes key on
+        them, so nothing beneath a divergence is salvageable).
+      * a stagnation-terminated stack caches the terminal gate + attempted
+        matching so termination itself is re-verified exactly; when the
+        new model no longer stagnates, the stack simply EXTENDS with fresh
+        levels.
+
+    A graph change (GLAD-E evolution) invalidates the whole stack —
+    :meth:`valid_for` checks the finest graph by identity, falling back to
+    a structural compare.  Owned by
+    :class:`repro.core.engine.LayoutSession` (one stack per V-cycle
+    configuration), which is how the stack survives across GLAD-E
+    escalations and fault relayouts.
+    """
+
+    def __init__(self, coarsen_to: int = COARSEN_TO,
+                 max_levels: Optional[int] = None, mu_gate: bool = True):
+        self.coarsen_to = int(coarsen_to)
+        self.max_levels = max_levels
+        self.mu_gate = bool(mu_gate)
+        self._levels: Optional[List[Level]] = None
+        self._gates: List[Optional[np.ndarray]] = []
+        self._matches: List[np.ndarray] = []
+        # (reason, gate, match): how the cached build stopped.  'size' and
+        # 'depth' are pure functions of structure; 'stagnation' keeps the
+        # terminal gate bits + attempted matching for exact re-verification.
+        self._term: Optional[tuple] = None
+        self.builds = 0              # acquisitions that rebuilt from scratch
+        self.refreshes = 0           # acquisitions served off the cache
+        self.levels_reused = 0       # cumulative matchings reused verbatim
+        self.levels_rebuilt = 0      # cumulative matchings recomputed
+        self.last_stats: dict = {}
+
+    # ------------------------------------------------------------ validity
+    def valid_for(self, cm: CostModel) -> bool:
+        """Is the cached stack built over this cost model's graph?  Object
+        identity first (the fault runtime keeps one DataGraph across
+        events), structural equality as the fallback."""
+        if self._levels is None:
+            return False
+        g0 = self._levels[0].cm.graph
+        g = cm.graph
+        if g is g0:
+            return True
+        if g.n != g0.n or g.num_edges != g0.num_edges:
+            return False
+        if not np.array_equal(g.edges, g0.edges):
+            return False
+        w0, w1 = g0.edge_weights, g.edge_weights
+        if (w0 is None) != (w1 is None):
+            return False
+        return w0 is None or bool(np.array_equal(w0, w1))
+
+    def invalidate(self) -> None:
+        self._levels = None
+        self._gates = []
+        self._matches = []
+        self._term = None
+
+    # ------------------------------------------------------------- helpers
+    def _cap(self, n: int) -> int:
+        return max(2, int(np.ceil(
+            MAX_CLUSTER_FACTOR * n / max(self.coarsen_to, 1))))
+
+    def _gate_for(self, g: DataGraph, unary: np.ndarray, tau_ref: float,
+                  chunk) -> Optional[np.ndarray]:
+        if not self.mu_gate or tau_ref <= 0.0:
+            return None
+        if chunk is not None:
+            from repro.core.multilevel_stream import matching_gate_streamed
+            return matching_gate_streamed(g, unary, tau_ref,
+                                          chunk_vertices=chunk)
+        return matching_gate(g, unary, tau_ref)
+
+    def _match_with(self, g: DataGraph, vertex_w: np.ndarray, cap: int,
+                    gate: Optional[np.ndarray], chunk) -> np.ndarray:
+        if chunk is not None:
+            from repro.core.multilevel_stream import (
+                heavy_edge_matching_streamed)
+            return heavy_edge_matching_streamed(
+                g, vertex_w, cap, gate=gate, chunk_vertices=chunk)
+        return heavy_edge_matching(g, vertex_w, cap, gate=gate)
+
+    def _coarse_cm(self, cm_f: CostModel, g_c: DataGraph,
+                   cluster_of: np.ndarray, nc: int, chunk) -> CostModel:
+        if chunk is not None:
+            from repro.core.multilevel_stream import (
+                coarse_cost_model_streamed)
+            return coarse_cost_model_streamed(cm_f, g_c, cluster_of, nc,
+                                              chunk_vertices=chunk)
+        return coarse_cost_model(cm_f, g_c, cluster_of, nc)
+
+    def _grow(self, levels: List[Level], gates: list, matches: list,
+              tau_ref: float, cap: int, chunk, pending=None) -> None:
+        """Extend ``levels`` with freshly built rungs until termination;
+        ``pending`` hands over an already-computed (gate, match) for the
+        current finest-unprocessed level (the divergence hand-off — its
+        size/depth preconditions held for the cached build of the same
+        structure, so they are not re-checked)."""
+        while True:
+            cur = levels[-1]
+            g = cur.cm.graph
+            if pending is None:
+                if g.n <= self.coarsen_to or g.num_edges == 0:
+                    self._term = ("size", None, None)
+                    return
+                if (self.max_levels is not None
+                        and len(levels) >= self.max_levels):
+                    self._term = ("depth", None, None)
+                    return
+                gate = self._gate_for(g, cur.cm.unary, tau_ref, chunk)
+                match = self._match_with(g, cur.vertex_w, cap, gate, chunk)
+            else:
+                gate, match = pending
+                pending = None
+            cluster_of, nc = clusters_from_matching(match)
+            if nc >= STAGNATION_FRAC * g.n:
+                self._term = ("stagnation", gate, match)
+                return
+            gates.append(gate)
+            matches.append(match)
+            if chunk is not None:
+                from repro.core.multilevel_stream import (
+                    coarse_vertex_w_streamed, contract_graph_streamed)
+                g_c = contract_graph_streamed(g, cluster_of, nc,
+                                              chunk_vertices=chunk)
+                vw_c = coarse_vertex_w_streamed(cluster_of, cur.vertex_w,
+                                                nc, chunk_vertices=chunk)
+            else:
+                g_c = contract_graph(g, cluster_of, nc)
+                vw_c = np.bincount(cluster_of, weights=cur.vertex_w,
+                                   minlength=nc).astype(np.int64)
+            cm_c = self._coarse_cm(cur.cm, g_c, cluster_of, nc, chunk)
+            levels.append(Level(cm=cm_c, cluster_of=cluster_of,
+                                vertex_w=vw_c))
+
+    # ------------------------------------------------------------- acquire
+    def acquire(self, cm: CostModel,
+                chunk_vertices: "int | str | None" = None) -> List[Level]:
+        """Level stack for ``cm``, bit-identical to a fresh
+        ``build_levels(cm, ...)`` — built from scratch when the graph
+        changed, refreshed off the cache otherwise (reused matchings +
+        rebuilt coarse cost models)."""
+        chunk = chunk_vertices
+        tau_ref = cm.tau_ref() if self.mu_gate else 0.0
+        cap = self._cap(cm.graph.n)
+        if not self.valid_for(cm):
+            levels = [Level(cm=cm, cluster_of=None,
+                            vertex_w=np.ones(cm.graph.n, dtype=np.int64))]
+            gates: list = []
+            matches: list = []
+            self._grow(levels, gates, matches, tau_ref, cap, chunk)
+            self._levels, self._gates, self._matches = (
+                levels, gates, matches)
+            self.builds += 1
+            self.levels_rebuilt += len(matches)
+            self.last_stats = dict(mode="build", levels=len(levels),
+                                   reused=0, rebuilt=len(matches),
+                                   rematch=0)
+            return levels
+
+        self.refreshes += 1
+        old_levels, old_matches = self._levels, self._matches
+        old_gates, old_term = self._gates, self._term
+        levels = [Level(cm=cm, cluster_of=None,
+                        vertex_w=old_levels[0].vertex_w)]
+        gates, matches = [], []
+        reused = rematch = 0
+        pending = None               # diverged (gate, match) hand-off
+        for k in range(len(old_matches)):
+            cur = levels[-1]
+            gate = self._gate_for(cur.cm.graph, cur.cm.unary, tau_ref,
+                                  chunk)
+            if _gate_equal(gate, old_gates[k]):
+                match = old_matches[k]
+            else:
+                match = self._match_with(cur.cm.graph, cur.vertex_w, cap,
+                                         gate, chunk)
+                if not np.array_equal(match, old_matches[k]):
+                    pending = (gate, match)
+                    break
+                rematch += 1
+            reused += 1
+            gates.append(gate)
+            matches.append(match)
+            old = old_levels[k + 1]
+            nc = old.cm.graph.n
+            cm_c = self._coarse_cm(cur.cm, old.cm.graph, old.cluster_of,
+                                   nc, chunk)
+            levels.append(Level(cm=cm_c, cluster_of=old.cluster_of,
+                                vertex_w=old.vertex_w))
+        if pending is not None:
+            self._grow(levels, gates, matches, tau_ref, cap, chunk,
+                       pending=pending)
+        else:
+            cur = levels[-1]
+            g = cur.cm.graph
+            if g.n <= self.coarsen_to or g.num_edges == 0:
+                self._term = ("size", None, None)
+            elif (self.max_levels is not None
+                    and len(levels) >= self.max_levels):
+                self._term = ("depth", None, None)
+            else:
+                # The cached build stagnated here; re-verify exactly.
+                _, tgate, tmatch = old_term
+                gate = self._gate_for(g, cur.cm.unary, tau_ref, chunk)
+                if _gate_equal(gate, tgate):
+                    self._term = ("stagnation", gate, tmatch)
+                else:
+                    match = self._match_with(g, cur.vertex_w, cap, gate,
+                                             chunk)
+                    cluster_of, nc = clusters_from_matching(match)
+                    if nc >= STAGNATION_FRAC * g.n:
+                        self._term = ("stagnation", gate, match)
+                    else:
+                        # Termination no longer reproduces: the stack
+                        # extends with fresh rungs from here down.
+                        self._grow(levels, gates, matches, tau_ref, cap,
+                                   chunk, pending=(gate, match))
+        self._levels, self._gates, self._matches = levels, gates, matches
+        rebuilt = len(matches) - reused
+        self.levels_reused += reused
+        self.levels_rebuilt += rebuilt
+        self.last_stats = dict(mode="refresh", levels=len(levels),
+                               reused=reused, rebuilt=rebuilt,
+                               rematch=rematch)
+        return levels
+
+
+def _slim_level_stats(stats: dict) -> dict:
+    """``record_levels=False`` telemetry: the O(n) replay arrays
+    (projected init / active mask) and the per-iteration history collapse
+    to checksums + sizes, so scale cells stop retaining O(levels x n)
+    memory for bookkeeping nobody replays."""
+    out = dict(stats)
+    for key in ("init", "active"):
+        arr = out.get(key)
+        if arr is None:
+            out[key + "_crc32"] = None
+            out[key + "_size"] = 0
+        else:
+            arr = np.ascontiguousarray(arr)
+            out[key + "_crc32"] = int(zlib.crc32(arr.tobytes()))
+            out[key + "_size"] = int(arr.size)
+        out[key] = None
+    hist = out.get("history") or []
+    out["history_crc32"] = (
+        int(zlib.crc32(np.asarray(hist, dtype=np.float64).tobytes()))
+        if len(hist) else None)
+    out["history_len"] = len(hist)
+    out["history"] = []
+    return out
 
 
 def restrict_assign(cluster_of: np.ndarray, nc: int, assign: np.ndarray,
@@ -328,6 +697,9 @@ def glad_multilevel(
     mu_gate: bool = True,
     max_iterations: int = 100_000,
     on_iteration=None,
+    chunk_vertices: "int | str | None" = None,
+    record_levels: bool = True,
+    session=None,
 ):
     """The V-cycle driver: coarsen, solve the coarsest level with ``R``
     patience, then project + refine each level with ``refine_R`` patience
@@ -335,17 +707,39 @@ def glad_multilevel(
     boundary-active mask.  Every solve is a plain :func:`glad_s` call
     (batched sweep), so all engine knobs compose per level.
 
+    ``chunk_vertices`` streams the coarsening (bounded vertex windows, see
+    :func:`build_levels`).  ``session`` — a
+    :class:`repro.core.engine.LayoutSession` — supplies a persistent
+    :class:`LevelStack` for this V-cycle configuration (reused matchings
+    across relayouts of the same graph) and is adopted by the FINEST
+    refinement solve (same graph as the session's flat engine; coarse
+    levels always run fresh per-level engines).  ``record_levels=False``
+    slims the per-level telemetry to checksums + sizes
+    (:func:`_slim_level_stats`) so scale runs don't retain O(levels x n)
+    replay arrays.  None of the three knobs changes the trajectory — the
+    assign/cost/history stream is bit-identical with any combination.
+
     Returns a ``GladResult`` whose ``history``/``iterations``/``accepted``
     concatenate the per-level solves and whose ``levels`` field holds one
     stats dict per solve — including each refinement's projected ``init``
-    and ``active`` mask, so callers can replay any level on the flat
-    engine bit-for-bit (the golden-fixture contract).
+    and ``active`` mask (under ``record_levels=True``), so callers can
+    replay any level on the flat engine bit-for-bit (the golden-fixture
+    contract).  ``result.coarsen`` reports the LevelStack's reuse stats
+    when a session was supplied.
     """
     from repro.core.glad_s import GladResult, glad_s   # lazy: import cycle
 
     t0 = time.perf_counter()
-    stack = build_levels(cm, coarsen_to=coarsen_to, max_levels=levels,
-                         mu_gate=mu_gate)
+    coarsen_stats = None
+    if session is not None:
+        lstack = session.level_stack(coarsen_to=coarsen_to,
+                                     max_levels=levels, mu_gate=mu_gate)
+        stack = lstack.acquire(cm, chunk_vertices=chunk_vertices)
+        coarsen_stats = dict(lstack.last_stats, builds=lstack.builds,
+                             refreshes=lstack.refreshes)
+    else:
+        stack = build_levels(cm, coarsen_to=coarsen_to, max_levels=levels,
+                             mu_gate=mu_gate, chunk_vertices=chunk_vertices)
     flat_kw = dict(backend=backend, sweep="batched",
                    round_solver=round_solver, workers=workers,
                    worker_mode=worker_mode, cache=cache, warm=warm,
@@ -355,12 +749,14 @@ def glad_multilevel(
     if len(stack) == 1:
         # Nothing to coarsen (tiny graph / no links): flat solve, annotated.
         res = glad_s(cm, R=R, init=init, seed=seed, cache_bytes=cache_bytes,
-                     chunk_nodes=chunk_nodes, **flat_kw)
-        res.levels = [dict(level=0, role="coarsest", n=n0,
-                           edges=cm.graph.num_edges, init=init, active=None,
-                           R=R, cost=res.cost, iterations=res.iterations,
-                           accepted=res.accepted, history=list(res.history),
-                           wall_time_s=res.wall_time_s)]
+                     chunk_nodes=chunk_nodes, session=session, **flat_kw)
+        stats = dict(level=0, role="coarsest", n=n0,
+                     edges=cm.graph.num_edges, init=init, active=None,
+                     R=R, cost=res.cost, iterations=res.iterations,
+                     accepted=res.accepted, history=list(res.history),
+                     wall_time_s=res.wall_time_s)
+        res.levels = [stats if record_levels else _slim_level_stats(stats)]
+        res.coarsen = coarsen_stats
         return res
 
     # Restrict a provided warm init down the stack (majority vote per rung).
@@ -379,14 +775,23 @@ def glad_multilevel(
     assign = res.assign
     history = list(res.history)
     iters, accepted = res.iterations, res.accepted
-    level_stats.append(dict(
+    stats = dict(
         level=len(stack) - 1, role="coarsest", n=top.cm.graph.n,
         edges=top.cm.graph.num_edges, init=coarse_init, active=None, R=R,
         cost=res.cost, iterations=res.iterations, accepted=res.accepted,
-        history=list(res.history), wall_time_s=res.wall_time_s))
+        history=list(res.history), wall_time_s=res.wall_time_s)
+    level_stats.append(stats if record_levels else _slim_level_stats(stats))
 
     if refine_R is None:
         refine_R = max(3, cm.net.m)
+    # Streamed session-free V-cycles own their coarse levels outright, so
+    # the descent can release each level's derived caches (CSR views +
+    # unary — lazily rebuilt, bitwise identical) the moment its assignment
+    # has been projected down: at most two adjacent levels stay cached,
+    # keeping refinement's peak RSS on the same bounded footing as the
+    # streamed build.  A session's LevelStack keeps its caches — that is
+    # its memory-for-refresh-speed trade.
+    release_coarse = chunk_vertices is not None and session is None
     for k in range(len(stack) - 2, -1, -1):
         lvl = stack[k]
         proj = assign[stack[k + 1].cluster_of]
@@ -399,11 +804,19 @@ def glad_multilevel(
             assign = proj
             stats.update(cost=float(lvl.cm.total(proj)), iterations=0,
                          accepted=0, history=[], wall_time_s=0.0)
-            level_stats.append(stats)
+            level_stats.append(stats if record_levels
+                               else _slim_level_stats(stats))
+            if release_coarse:
+                from repro.core.multilevel_stream import release_level_views
+                release_level_views(stack[k + 1])
             continue
         cb, cn = _level_knobs(lvl.cm.graph.n, n0, cache_bytes, chunk_nodes)
+        # Only the finest refinement shares the session's graph, so only
+        # it adopts the persistent engine; coarse levels run fresh
+        # per-level engines (a rebind across level sizes cannot exist).
         r = glad_s(lvl.cm, R=refine_R, init=proj, active=act, seed=seed,
-                   cache_bytes=cb, chunk_nodes=cn, **flat_kw)
+                   cache_bytes=cb, chunk_nodes=cn,
+                   session=session if k == 0 else None, **flat_kw)
         assign = r.assign
         history.extend(r.history)
         iters += r.iterations
@@ -411,7 +824,11 @@ def glad_multilevel(
         stats.update(cost=r.cost, iterations=r.iterations,
                      accepted=r.accepted, history=list(r.history),
                      wall_time_s=r.wall_time_s)
-        level_stats.append(stats)
+        level_stats.append(stats if record_levels
+                           else _slim_level_stats(stats))
+        if release_coarse:
+            from repro.core.multilevel_stream import release_level_views
+            release_level_views(stack[k + 1])
 
     f = cm.factors(assign)
     moved = (np.flatnonzero(assign != np.asarray(init, dtype=np.int64))
@@ -419,5 +836,5 @@ def glad_multilevel(
     return GladResult(
         assign=assign, cost=f["total"], history=history, iterations=iters,
         accepted=accepted, wall_time_s=time.perf_counter() - t0, factors=f,
-        moved=moved, levels=level_stats,
+        moved=moved, levels=level_stats, coarsen=coarsen_stats,
     )

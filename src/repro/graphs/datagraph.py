@@ -132,6 +132,24 @@ class DataGraph:
             self._degrees = deg
         return self._degrees
 
+    def release_views(self) -> None:
+        """Drop the lazily-built CSR/degree caches (``indptr``/``indices``/
+        ``edge_ids``/``degrees``).
+
+        They are pure deterministic functions of ``edges`` — the next
+        property access rebuilds them BITWISE identical — so releasing is
+        always safe; it only trades a rebuild (one ``lexsort`` over the
+        directed edge list) for the ~40B/edge the views hold resident.
+        The streamed coarsening build calls this on every level it has
+        finished with: at the SIoT edge density a level's CSR is over half
+        its retained footprint, and the hierarchy's edge count shrinks far
+        slower than its vertex count, so a fully-cached hierarchy would
+        dominate peak RSS no matter how bounded the transients are."""
+        self._indptr = None
+        self._indices = None
+        self._edge_ids = None
+        self._degrees = None
+
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v]:self.indptr[v + 1]]
 
@@ -198,6 +216,22 @@ class DataGraph:
 
 
 # --------------------------------------------------------------- coarsening
+#: Largest cluster count whose packed edge key ``lo * nc + hi`` still fits
+#: int64 (isqrt(2^63 - 1)).  Past it the key arithmetic would WRAP
+#: silently (numpy int64 overflow raises nothing) and alias distinct
+#: coarse edges onto each other.
+_MAX_CLUSTER_KEY_N = 3_037_000_499
+
+
+def _check_cluster_key_domain(num_clusters: int) -> None:
+    """Refuse, loudly, cluster counts whose packed keys overflow int64."""
+    if num_clusters > _MAX_CLUSTER_KEY_N:
+        raise ValueError(
+            f"num_clusters={num_clusters} overflows the int64 packed edge "
+            f"key domain (lo * num_clusters + hi); max supported is "
+            f"{_MAX_CLUSTER_KEY_N}")
+
+
 def contract_graph(graph: DataGraph, cluster_of: np.ndarray,
                    num_clusters: int) -> DataGraph:
     """Cluster-quotient graph (multilevel coarsening): vertices are the
@@ -211,6 +245,7 @@ def contract_graph(graph: DataGraph, cluster_of: np.ndarray,
     weight sums are sequential ``np.add.reduceat`` segments over the sorted
     key order.
     """
+    _check_cluster_key_domain(num_clusters)
     cluster_of = np.asarray(cluster_of, dtype=np.int64)
     e = graph.edges
     if len(e) == 0:
@@ -229,6 +264,10 @@ def contract_graph(graph: DataGraph, cluster_of: np.ndarray,
     ws = w[keep][order]
     uniq, start = np.unique(ks, return_index=True)
     wsum = np.add.reduceat(ws, start)
+    if not np.isfinite(wsum).all():
+        raise ValueError(
+            "contracted edge weight sum overflowed to non-finite; "
+            "parallel-edge weights saturated the float64 domain")
     edges = np.stack([uniq // num_clusters, uniq % num_clusters], axis=1)
     g = DataGraph(n=num_clusters, edges=edges)
     g.edge_weights = wsum

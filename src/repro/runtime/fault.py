@@ -147,6 +147,7 @@ class ElasticCoordinator:
                  multilevel: "bool | str" = False,
                  coarsen_to: int = 1024,
                  levels: Optional[int] = None,
+                 chunk_vertices: "int | str | None" = None,
                  replicate: "bool | dict" = False,
                  session: bool = True):
         self.net = net
@@ -183,17 +184,23 @@ class ElasticCoordinator:
         # consecutive relayouts of the same fleet rebind the engine
         # (diff-driven epoch bumps for the degraded/dead/revived servers)
         # instead of rebuilding it from scratch, keeping the assembly
-        # cache and warm residuals alive across events.  The multilevel
-        # V-cycle builds per-level engines, so it opts out; session=False
-        # forces the per-event rebuild (the benchmark's A/B control arm).
-        self._session = (None if multilevel or not session else
+        # cache and warm residuals alive across events.  With multilevel
+        # the session ALSO carries the persistent LevelStack: the data
+        # graph is constant across fault events, so every escalated
+        # relayout refreshes the cached coarsening hierarchy (reused
+        # matchings, rebuilt coarse cost models) instead of re-coarsening
+        # from scratch, and the V-cycle's finest refinement adopts the
+        # engine.  'chunk_vertices' streams any coarsening in bounded
+        # vertex windows (out-of-core scale).  session=False forces the
+        # per-event rebuild (the benchmark's A/B control arm).
+        self._session = (None if not session else
                          LayoutSession(workers=workers, cache=cache,
                                        chunk_nodes=chunk_nodes, warm=warm))
         self._glad_opts = dict(workers=workers, cache=cache,
                                chunk_nodes=chunk_nodes, warm=warm,
                                multilevel=multilevel, coarsen_to=coarsen_to,
-                               levels=levels, replicate=replicate,
-                               session=self._session)
+                               levels=levels, chunk_vertices=chunk_vertices,
+                               replicate=replicate, session=self._session)
 
     def on_failure(self, dead: List[int], seed: int = 0) -> DevicePartition:
         """Node loss: disconnect dead servers, re-layout incrementally

@@ -90,6 +90,30 @@ def test_flat_replay_of_finest_level_matches_golden_bit_for_bit(golden_ml):
     np.testing.assert_array_equal(replay.assign, np.array(fix["assign"]))
 
 
+def test_reused_level_stack_replays_golden_bit_for_bit(golden_ml):
+    """PR 10's persistent LevelStack: a V-cycle run whose coarsening was
+    served ENTIRELY off a reused cached hierarchy (zero rebuilt levels)
+    must still walk the committed finest-refinement trajectory hex-for-hex
+    and land on the committed assign."""
+    from repro.core.engine import LayoutSession
+    fix, cm, _ = golden_ml
+    p = fix["params"]
+    ses = LayoutSession()
+    kw = dict(seed=p["glad_seed"], sweep="batched", multilevel=True,
+              coarsen_to=p["coarsen_to"], session=ses)
+    first = glad_s(cm, **kw)                    # builds + caches the stack
+    assert first.coarsen["mode"] == "build"
+    res = glad_s(cm, **kw)                      # replays through the cache
+    assert res.coarsen["mode"] == "refresh"
+    assert res.coarsen["rebuilt"] == 0
+    assert res.coarsen["reused"] == len(fix["cluster_checksums"])
+    finest = res.levels[-1]
+    assert ([np.float64(h).hex() for h in finest["history"]]
+            == fix["history_hex"])
+    assert np.float64(finest["cost"]).hex() == fix["final_cost_hex"]
+    np.testing.assert_array_equal(res.assign, np.array(fix["assign"]))
+
+
 def test_golden_multilevel_fixture_is_self_consistent(golden_ml):
     fix, cm, _ = golden_ml
     assert cm.total(np.array(fix["assign"])) == pytest.approx(

@@ -1,0 +1,438 @@
+"""Out-of-core multilevel: streamed coarsening + persistent level stacks.
+
+Two load-bearing contracts:
+
+  * ``build_levels_streamed`` is BIT-IDENTICAL to the in-core
+    ``build_levels`` for EVERY chunk size — windows of one vertex, windows
+    that split matched pairs across a boundary, windows larger than the
+    graph.  Streaming changes peak memory, never a single bit of the
+    hierarchy.
+  * ``LevelStack.acquire`` is BIT-IDENTICAL to a fresh ``build_levels``
+    under whatever cost model it refreshes against: reused matchings are
+    certified by exact gate-bit equality, anything else is re-matched or
+    rebuilt for real.  Sessions change wall time, never bits — the same
+    contract the engine's LayoutSession pins.
+
+Plus the int64-domain overflow guards on quantization and contraction
+(silent wraparound at n>=2M would corrupt matchings), the fault-loop
+session-survival regression, and the ``record_levels`` telemetry slimming.
+"""
+import dataclasses
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, workload_for
+from repro.core.engine import LayoutSession
+from repro.core.glad_s import glad_s
+from repro.core.multilevel import (
+    LevelStack,
+    build_levels,
+    glad_multilevel,
+    heavy_edge_matching,
+    quantize_weights,
+)
+from repro.core.multilevel_stream import build_levels_streamed
+from repro.graphs.datagraph import DataGraph, contract_graph, synthetic_yelp
+from repro.graphs.edgenet import build_edge_network
+from tests.conftest import random_graph
+
+
+def _cm(rng, n, m, extra_edges=None, mu_factor=2.0, seed=0):
+    g = random_graph(rng, n, n if extra_edges is None else extra_edges)
+    net = build_edge_network(g, m, seed=seed, mu_factor=mu_factor)
+    return CostModel(net, g, workload_for("gcn", 8))
+
+
+def _assert_levels_equal(ref, got):
+    """Exact per-level equality of every array the hierarchy carries."""
+    assert len(got) == len(ref)
+    for k, (a, b) in enumerate(zip(ref, got)):
+        if k:
+            np.testing.assert_array_equal(a.cluster_of, b.cluster_of,
+                                          err_msg=f"level {k} cluster_of")
+        np.testing.assert_array_equal(a.vertex_w, b.vertex_w,
+                                      err_msg=f"level {k} vertex_w")
+        np.testing.assert_array_equal(a.cm.graph.edges, b.cm.graph.edges,
+                                      err_msg=f"level {k} edges")
+        wa, wb = a.cm.graph.edge_weights, b.cm.graph.edge_weights
+        assert (wa is None) == (wb is None)
+        if wa is not None:
+            np.testing.assert_array_equal(wa, wb,
+                                          err_msg=f"level {k} weights")
+        np.testing.assert_array_equal(a.cm.unary, b.cm.unary,
+                                      err_msg=f"level {k} unary")
+
+
+# ----------------------------------------------- streamed == in-core, exact
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000), st.integers(1, 400))
+def test_streamed_levels_bit_identical_any_chunk(seed, chunk):
+    """The streamed coarsening is a pure re-chunking: for ANY window size
+    every level's cluster map, vertex weights, edges, summed edge weights
+    and coarse unary are bit-identical to the in-core build."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 300))
+    cm = _cm(rng, n, int(rng.integers(2, 6)), seed=seed)
+    ref = build_levels(cm, coarsen_to=max(4, n // 8))
+    got = build_levels_streamed(cm, coarsen_to=max(4, n // 8),
+                                chunk_vertices=chunk)
+    _assert_levels_equal(ref, got)
+
+
+def test_streamed_chunk_boundaries_split_matched_pairs():
+    """Window boundaries that cut straight through matched pairs (the
+    spill-buffer path) must not change a single matching decision.  The
+    chunk sizes here are chosen so the finest matching provably contains
+    pairs whose endpoints land in different windows."""
+    rng = np.random.default_rng(7)
+    cm = _cm(rng, 240, 4, extra_edges=720, seed=7)
+    g = cm.graph
+    cap = 10 ** 9
+    match = heavy_edge_matching(g, np.ones(g.n, dtype=np.int64), cap,
+                                unary=cm.unary, tau_ref=cm.tau_ref())
+    ref = build_levels(cm, coarsen_to=16)
+    exercised = 0
+    for chunk in (1, 3, 17, 100):
+        v = np.arange(g.n)
+        split = (match != v) & (v // chunk != match // chunk)
+        exercised += int(split.any())
+        got = build_levels_streamed(cm, coarsen_to=16, chunk_vertices=chunk)
+        _assert_levels_equal(ref, got)
+    assert exercised == 4, "no chunk size actually split a matched pair"
+
+
+def test_streamed_dispatch_via_build_levels_and_auto_chunk():
+    """``build_levels(chunk_vertices=...)`` routes through the streamed
+    path; 'auto' resolves the default window; bad sizes raise."""
+    rng = np.random.default_rng(3)
+    cm = _cm(rng, 120, 3, seed=3)
+    ref = build_levels(cm, coarsen_to=16)
+    _assert_levels_equal(ref, build_levels(cm, coarsen_to=16,
+                                           chunk_vertices=13))
+    _assert_levels_equal(ref, build_levels(cm, coarsen_to=16,
+                                           chunk_vertices="auto"))
+    with pytest.raises(ValueError, match="chunk_vertices"):
+        build_levels(cm, coarsen_to=16, chunk_vertices=0)
+
+
+def test_release_views_rebuilds_bitwise_identical():
+    """Released caches (CSR views, unary) are pure functions of the level
+    data: the next access rebuilds them bit-for-bit.  The streamed build
+    leans on this — every level but the coarsest is released — so the
+    contract is pinned directly, coarse zero-coefficient models included."""
+    rng = np.random.default_rng(11)
+    cm = _cm(rng, 200, 4, extra_edges=600, seed=11)
+    levels = build_levels_streamed(cm, coarsen_to=16, chunk_vertices=29)
+    assert len(levels) > 2
+    for k, lvl in enumerate(levels):
+        g = lvl.cm.graph
+        before = (g.indptr.copy(), g.indices.copy(), g.edge_ids.copy(),
+                  g.degrees.copy(), lvl.cm.unary.copy())
+        from repro.core.multilevel_stream import release_level_views
+        release_level_views(lvl)
+        assert g._indptr is None and g._indices is None
+        assert g._edge_ids is None and lvl.cm._unary is None
+        after = (g.indptr, g.indices, g.edge_ids, g.degrees, lvl.cm.unary)
+        for name, a, b in zip(
+                ("indptr", "indices", "edge_ids", "degrees", "unary"),
+                before, after):
+            np.testing.assert_array_equal(a, b,
+                                          err_msg=f"level {k} {name}")
+
+
+def test_build_levels_streamed_releases_all_but_coarsest():
+    """The streamed build drops every finished level's derived caches
+    (the retained hierarchy's CSR + unary dominate peak RSS at scale);
+    the coarsest keeps its caches — the V-cycle solves it next.
+    ``release_views=False`` keeps everything for callers that prefer the
+    in-core residency profile."""
+    rng = np.random.default_rng(5)
+    cm = _cm(rng, 200, 4, extra_edges=600, seed=5)
+    levels = build_levels_streamed(cm, coarsen_to=16, chunk_vertices=64)
+    assert len(levels) > 2
+    for lvl in levels[:-1]:
+        assert lvl.cm.graph._indptr is None
+        assert lvl.cm._unary is None
+
+    cm2 = _cm(np.random.default_rng(5), 200, 4, extra_edges=600, seed=5)
+    kept = build_levels_streamed(cm2, coarsen_to=16, chunk_vertices=64,
+                                 release_views=False)
+    # Every level the build gated stays materialized (the coarsest is
+    # never gated — the loop stops before touching its caches).
+    assert all(lvl.cm.graph._indptr is not None for lvl in kept[:-1])
+    assert all(lvl.cm._unary is not None for lvl in kept[:-1])
+    _assert_levels_equal(kept, levels)
+
+
+# ----------------------------------------------------- int64 domain guards
+
+def test_quantize_weights_rejects_nonfinite_and_overflow():
+    """Summed parallel-edge weights that saturate float64 or blow past the
+    int64 matching domain must raise loudly — ``.astype(int64)`` would
+    WRAP silently and corrupt every downstream matching decision."""
+    with pytest.raises(ValueError, match="non-finite"):
+        quantize_weights(np.array([1.0, np.inf]))
+    with pytest.raises(ValueError, match="non-finite"):
+        quantize_weights(np.array([np.nan]))
+    # Scale is set by the max (1.0 -> 1e7); the huge NEGATIVE weight then
+    # leaves the int64 range after scaling.
+    with pytest.raises(ValueError, match="int64"):
+        quantize_weights(np.array([1.0, -1e300]))
+    # Sane weights at any magnitude ratio still quantize.
+    q = quantize_weights(np.array([1.0, 0.5, 1e-12]))
+    assert q.dtype == np.int64 and q[0] == 10 ** 7
+
+
+def test_contract_graph_rejects_cluster_key_and_weight_overflow():
+    edges = np.array([[0, 1], [2, 3]], dtype=np.int64)
+    g = DataGraph(4, edges)
+    with pytest.raises(ValueError, match="packed edge key"):
+        contract_graph(g, np.array([0, 1, 2, 3]), 3_100_000_000)
+    # Two parallel fine edges whose float64 weight sum overflows to inf.
+    g2 = DataGraph(4, np.array([[0, 1], [2, 3]], dtype=np.int64))
+    g2.edge_weights = np.array([1e308, 1e308])
+    with pytest.raises(ValueError, match="non-finite"):
+        contract_graph(g2, np.array([0, 1, 0, 1]), 2)
+
+
+def test_contract_graph_streamed_guards_match_in_core():
+    from repro.core.multilevel_stream import contract_graph_streamed
+    g = DataGraph(4, np.array([[0, 1], [2, 3]], dtype=np.int64))
+    with pytest.raises(ValueError, match="packed edge key"):
+        contract_graph_streamed(g, np.array([0, 1, 2, 3]), 3_100_000_000)
+    g2 = DataGraph(4, np.array([[0, 1], [2, 3]], dtype=np.int64))
+    g2.edge_weights = np.array([1e308, 1e308])
+    with pytest.raises(ValueError, match="non-finite"):
+        contract_graph_streamed(g2, np.array([0, 1, 0, 1]), 2,
+                                chunk_vertices=1)
+
+
+# ------------------------------------------------- LevelStack exact reuse
+
+def _perturb(cm, rng):
+    """One random relayout-style model change over the SAME graph: degrade
+    a server's compute, rescale tau, or leave the model alone (pure
+    assignment churn) — the event mix a fault loop produces."""
+    kind = int(rng.integers(0, 3))
+    net = cm.net
+    if kind == 0:
+        alpha = net.alpha.copy()
+        alpha[int(rng.integers(0, net.m))] *= float(rng.uniform(1.1, 4.0))
+        net = dataclasses.replace(net, alpha=alpha)
+    elif kind == 1:
+        net = dataclasses.replace(net, tau=net.tau * float(
+            rng.uniform(0.5, 2.0)))
+    return CostModel(net, cm.graph, cm.gnn)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 5000))
+def test_level_stack_refresh_bit_identical_over_random_sequences(seed):
+    """Over a random sequence of same-graph model changes, every
+    ``acquire`` must hand back exactly what a fresh ``build_levels`` would
+    — reused matchings included (the gate-bit certificate at work)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(80, 220))
+    cm = _cm(rng, n, int(rng.integers(2, 5)), seed=seed)
+    stack = LevelStack(coarsen_to=max(4, n // 10))
+    for step in range(4):
+        chunk = [None, 1, 37, "auto"][int(rng.integers(0, 4))]
+        got = stack.acquire(cm, chunk_vertices=chunk)
+        ref = build_levels(cm, coarsen_to=max(4, n // 10))
+        _assert_levels_equal(ref, got)
+        cm = _perturb(cm, rng)
+    assert stack.builds == 1 and stack.refreshes == 3
+
+
+def test_level_stack_pure_assignment_churn_reuses_everything():
+    """Relayouts that only churn the ASSIGNMENT (same graph, same model)
+    reuse every cached matching verbatim — coarsening is assignment-free,
+    which is exactly why the stack survives >50%-churn relayouts."""
+    rng = np.random.default_rng(11)
+    cm = _cm(rng, 300, 4, seed=11)
+    stack = LevelStack(coarsen_to=32)
+    first = stack.acquire(cm)
+    again = stack.acquire(cm)
+    _assert_levels_equal(first, again)
+    assert stack.last_stats["mode"] == "refresh"
+    assert stack.last_stats["rebuilt"] == 0
+    assert stack.last_stats["reused"] == len(first) - 1
+
+
+def test_level_stack_invalidated_by_graph_change():
+    rng = np.random.default_rng(5)
+    cm1 = _cm(rng, 150, 3, seed=5)
+    cm2 = _cm(rng, 160, 3, seed=6)
+    stack = LevelStack(coarsen_to=16)
+    stack.acquire(cm1)
+    assert stack.valid_for(cm1) and not stack.valid_for(cm2)
+    got = stack.acquire(cm2)                     # full rebuild, not garbage
+    _assert_levels_equal(build_levels(cm2, coarsen_to=16), got)
+    assert stack.builds == 2 and stack.refreshes == 0
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 5000))
+def test_session_vcycle_matches_fresh_over_random_slot_sequences(seed):
+    """End-to-end: a session-carried V-cycle relayout sequence (high-churn
+    inits, degrading/recovering models) produces bit-identical layouts,
+    costs and histories to sessionless solves at every slot."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(70, 160))
+    cm = _cm(rng, n, int(rng.integers(2, 5)), seed=seed)
+    ses = LayoutSession()
+    init = rng.integers(0, cm.net.m, size=n).astype(np.int64)
+    for step in range(3):
+        a = glad_s(cm, init=init, seed=seed + step, sweep="batched",
+                   multilevel=True, coarsen_to=max(4, n // 8), session=ses)
+        b = glad_s(cm, init=init, seed=seed + step, sweep="batched",
+                   multilevel=True, coarsen_to=max(4, n // 8))
+        assert a.history == b.history
+        np.testing.assert_array_equal(a.assign, b.assign)
+        np.testing.assert_array_equal(np.sort(a.moved), np.sort(b.moved))
+        # next slot: heavy churn — shuffle a majority of the layout.
+        init = a.assign.copy()
+        flip = rng.random(n) < 0.7
+        init[flip] = rng.integers(0, cm.net.m, size=int(flip.sum()))
+        cm = _perturb(cm, rng)
+
+
+# ------------------------------------------- fault loop keeps the session
+
+def test_escalating_fault_loop_keeps_session_and_stack_alive():
+    """Regression (PR 10): ElasticCoordinator used to FORCE session=None
+    whenever multilevel was enabled, so every escalated relayout rebuilt
+    both the engine and the hierarchy from scratch.  The session and the
+    LevelStack now coexist: across an escalating fault loop the engine
+    rebinds (observable via its stats) and the stack refreshes instead of
+    rebuilding."""
+    from repro.core import data_partition
+    from repro.runtime import ElasticCoordinator
+    g = synthetic_yelp(n=200, target_links=300)
+    gnn = workload_for("gcn", 8)
+    # mu_factor large enough that layouts span servers — otherwise the
+    # finest refinement has no cut links and never engages the engine.
+    net = build_edge_network(g, 6, seed=0, mu_factor=3.0)
+    part = data_partition(g, gnn, num_parts=6, net=net, seed=0)
+    coord = ElasticCoordinator(net, g, gnn, part, multilevel=True,
+                               coarsen_to=32)
+    ses = coord._session
+    assert ses is not None, "multilevel no longer drops the session"
+    coord.on_straggler([0], slow_factor=10.0, seed=0)
+    coord.on_failure([5], seed=0)
+    coord.on_revive([5], seed=0)
+    # Engine engagement: every escalated relayout's finest refinement
+    # adopted the ONE persistent engine, and at least one adoption was
+    # served by a rebind rather than a rebuild.
+    assert ses is coord._session
+    assert ses.adoptions >= 3
+    assert ses.rebinds >= 1
+    # Hierarchy engagement: one build, then refreshes off the cache.
+    stack = ses.level_stack(coarsen_to=32)
+    assert stack.builds == 1
+    assert stack.refreshes >= 2
+    assert ses.stack_valid_for(CostModel(coord.net, g, gnn), coarsen_to=32)
+
+
+def test_fault_relayouts_with_session_match_sessionless_arm():
+    """The coordinator's escalated relayouts must be bit-identical between
+    the session arm and the session=False control arm — migrations and
+    costs exactly equal, event for event."""
+    from repro.core import data_partition
+    from repro.runtime import ElasticCoordinator
+    g = synthetic_yelp(n=160, target_links=240)
+    gnn = workload_for("gcn", 8)
+    net = build_edge_network(g, 5, seed=1, mu_factor=3.0)
+    part = data_partition(g, gnn, num_parts=5, net=net, seed=1)
+
+    def run(session):
+        coord = ElasticCoordinator(net, g, gnn, part, multilevel=True,
+                                   coarsen_to=24, session=session)
+        coord.on_straggler([1], slow_factor=8.0, seed=3)
+        coord.on_failure([4], seed=3)
+        return coord
+
+    a, b = run(True), run(False)
+    assert b._session is None
+    for ea, eb in zip(a.events, b.events):
+        assert ea.new_cost == eb.new_cost
+        assert ea.migrated == eb.migrated
+        np.testing.assert_array_equal(ea.moved, eb.moved)
+    np.testing.assert_array_equal(a.part.assign, b.part.assign)
+
+
+# --------------------------------------------------- record_levels slimming
+
+def test_record_levels_false_slims_telemetry_not_trajectory():
+    rng = np.random.default_rng(9)
+    cm = _cm(rng, 200, 4, seed=9)
+    full = glad_multilevel(cm, seed=2, coarsen_to=24)
+    slim = glad_multilevel(cm, seed=2, coarsen_to=24, record_levels=False)
+    assert slim.history == full.history and slim.cost == full.cost
+    np.testing.assert_array_equal(slim.assign, full.assign)
+    assert len(slim.levels) == len(full.levels)
+    for fs, ss in zip(full.levels, slim.levels):
+        assert ss["init"] is None and ss["active"] is None
+        assert ss["history"] == []
+        assert ss["history_len"] == len(fs["history"])
+        for key in ("level", "role", "n", "edges", "cost", "iterations",
+                    "accepted"):
+            assert ss[key] == fs[key]
+        for key in ("init", "active"):
+            arr = fs[key]
+            if arr is None:
+                assert ss[key + "_crc32"] is None and ss[key + "_size"] == 0
+            else:
+                arr = np.ascontiguousarray(arr)
+                assert ss[key + "_size"] == arr.size
+                assert ss[key + "_crc32"] == zlib.crc32(arr.tobytes())
+        if len(fs["history"]):
+            assert ss["history_crc32"] == zlib.crc32(
+                np.asarray(fs["history"], dtype=np.float64).tobytes())
+
+
+def test_glad_e_auto_policy_escalates_earlier_with_valid_stack():
+    """The churn-measured policy: identical churn between the fresh and
+    stacked break-evens escalates ONLY when the session holds a hierarchy
+    that is still valid for the evolved graph."""
+    import importlib
+    # repro.core re-exports the glad_e FUNCTION under the module's name.
+    gemod = importlib.import_module("repro.core.glad_e")
+    churn = (gemod.MULTILEVEL_ESCALATE_STACKED
+             + gemod.MULTILEVEL_ESCALATE_FRESH) / 2.0
+    assert gemod.MULTILEVEL_ESCALATE_STACKED < churn
+    assert churn < gemod.MULTILEVEL_ESCALATE_FRESH
+    rng = np.random.default_rng(21)
+    cm = _cm(rng, 120, 3, seed=21)
+    ses = LayoutSession()
+    # A stack built over THIS graph (fault-style relayout: graph constant).
+    ses.level_stack(coarsen_to=1024).acquire(cm)
+    assert ses.stack_valid_for(cm, coarsen_to=1024)
+
+    calls = []
+    import repro.core.multilevel as mlmod
+    real = mlmod.glad_multilevel
+
+    def spy(c, **kw):
+        calls.append(True)
+        return real(c, **kw)
+
+    import unittest.mock as mock
+    n_churn = int(round(churn * cm.graph.n))
+    active = np.zeros(cm.graph.n, dtype=bool)
+    active[:n_churn] = True
+    # glad_e binds changed_vertices at import; glad_s imports
+    # glad_multilevel lazily from the multilevel module at call time.
+    with mock.patch.object(gemod, "changed_vertices",
+                           return_value=active), \
+            mock.patch.object(mlmod, "glad_multilevel", spy):
+        gemod.glad_e(cm, cm.graph, np.zeros(cm.graph.n, dtype=np.int64),
+                     seed=0, multilevel="auto")          # no session: flat
+        assert calls == []
+        gemod.glad_e(cm, cm.graph, np.zeros(cm.graph.n, dtype=np.int64),
+                     seed=0, multilevel="auto", session=ses)
+        assert calls == [True]                           # stacked: V-cycle

@@ -147,10 +147,27 @@ def test_session_guards():
                    synthetic_yelp(n=60, target_links=90, seed=0),
                    workload_for("gcn", 16))
     ses = LayoutSession()
-    with pytest.raises(ValueError, match="multilevel"):
-        glad_s(cm, session=ses, multilevel=True)
     with pytest.raises(ValueError, match="incremental"):
         glad_s(cm, session=ses, engine="reference")
+
+
+def test_session_multilevel_coexist_bit_identical():
+    """The session x multilevel exclusion is gone: the V-cycle runs with
+    a session (which then owns the persistent LevelStack, and whose
+    engine the finest refinement adopts) and its trajectory stays
+    bit-identical to the sessionless call."""
+    g = synthetic_yelp(n=60, target_links=90, seed=0)
+    cm = CostModel(build_edge_network(g, 4, seed=0), g,
+                   workload_for("gcn", 16))
+    ses = LayoutSession()
+    res = glad_s(cm, seed=0, sweep="batched", multilevel=True,
+                 coarsen_to=16, session=ses)
+    ref = glad_s(cm, seed=0, sweep="batched", multilevel=True,
+                 coarsen_to=16)
+    assert res.history == ref.history
+    np.testing.assert_array_equal(res.assign, ref.assign)
+    assert res.coarsen is not None and res.coarsen["mode"] == "build"
+    assert ses.stack_valid_for(cm, coarsen_to=16)
 
 
 def test_session_adopt_falls_back_on_incompatible_model():
